@@ -1,0 +1,124 @@
+"""Ablations: (a) the (tau, beta, H) deployment trade-off (§3.4) and
+(b) prefetcher comparison + BuddyMoE complementarity (§2.3 / Table 1).
+
+(a) sweeps each gate knob at c=0.5 and reports substitution counts, sync
+fetches and agreement — conservative settings trade transfers for accuracy,
+exactly the §3.4 'deployment-time trade-offs' table.
+
+(b) measures prefetch hit-rates for the §2.3 predictor families
+(frequency-based, temporal, cross-layer gate signals) and shows BuddyMoE
+stacking on TOP of a prefetcher: residual misses after prefetching are the
+ones substitution absorbs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import BuddyPolicy
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.prefetch import (CrossLayerPredictor, NoisyOraclePredictor,
+                                    PrevStepPredictor, TopFreqPredictor)
+from repro.serving.engine import ServeEngine
+
+
+def _engine(cfg, params, tables, policy, rate=0.5, predictor=None,
+            prefetch_k=0, seed=3):
+    from repro.configs.deepseek_v2_lite_buddy import CONFIG as FULL_DS
+    return ServeEngine(cfg, params, tables=tables, policy=policy,
+                       cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts,
+                                         rate, seed=seed),
+                       predictor=predictor, prefetch_k=prefetch_k,
+                       seed=seed, latency_cfg=FULL_DS)
+
+
+def _agreement(cfg, params, eng, eval_data, ref_top1):
+    b, s = eval_data.shape
+    caches = eng.init_caches(b, s)
+    agree, n = 0, 0
+    for pos in range(s - 1):
+        logits, caches = eng.step(jnp.asarray(eval_data[:, pos]), caches, pos)
+        agree += int((np.asarray(logits).argmax(-1) == ref_top1[:, pos]).sum())
+        n += b
+    return agree / n
+
+
+def run(out_rows):
+    cfg, params, lm = common.get_model()
+    rec, q = common.get_profile(cfg, params, lm)
+    sims = common.get_sims(cfg, params, lm)
+    tables = common.get_tables(cfg, q, rec, 0.95, 16, output_sim=sims)
+    eval_data = lm.sample(3, 16)
+    ref_logits, _ = jax.jit(lambda p, t: transformer.forward_train(p, cfg, t))(
+        params, jnp.asarray(eval_data))
+    ref_top1 = np.asarray(ref_logits.argmax(-1))
+    res = {}
+
+    # ---- (a) gate knob sweeps ----
+    t0 = time.time()
+    print("  -- gate ablation (c=0.5) --")
+    sweeps = ([("tau", tau, BuddyPolicy(tau=tau, beta=1.1, rho=4, H=16))
+               for tau in (0.0, 0.5, 0.9, 1.0)]
+              + [("beta", beta, BuddyPolicy(tau=0.05, beta=beta, rho=4, H=16))
+                 for beta in (0.2, 0.6, 1.1)]
+              + [("H", h, BuddyPolicy(tau=0.05, beta=1.1, rho=4, H=h))
+                 for h in (1, 4, 16)])
+    for knob, val, pol in sweeps:
+        eng = _engine(cfg, params, tables, pol)
+        agree = _agreement(cfg, params, eng, eval_data, ref_top1)
+        key = f"ablation.{knob}={val}"
+        res[key] = {"agree": agree, "n_sub": eng.stats.n_sub,
+                    "n_fetch": eng.stats.n_miss_fetch,
+                    "tps": eng.stats.tokens_per_s}
+        print(f"    {knob}={val:<4}: agree {agree:.3f} sub "
+              f"{eng.stats.n_sub:4d} fetch {eng.stats.n_miss_fetch:4d} "
+              f"t/s {eng.stats.tokens_per_s:7.1f}")
+    out_rows.append(("ablation.gates", (time.time() - t0) * 1e6 / len(sweeps),
+                     "see bench/ablation.json"))
+
+    # monotonicity sanity: tau=1 means no substitutions
+    assert res["ablation.tau=1.0"]["n_sub"] == 0
+    assert res["ablation.beta=0.2"]["n_sub"] <= res["ablation.beta=1.1"]["n_sub"]
+
+    # ---- (b) prefetchers + complementarity ----
+    t0 = time.time()
+    print("  -- prefetchers (c=0.5, k=16) --")
+    l_n, e_n = cfg.num_layers, cfg.moe.num_experts
+    preds = {
+        "none": None,
+        "topfreq": TopFreqPredictor(l_n, e_n),
+        "prevstep": PrevStepPredictor(l_n, e_n),
+        "crosslayer": CrossLayerPredictor(l_n, e_n),
+        "oracle90": NoisyOraclePredictor(l_n, e_n, accuracy=0.9),
+    }
+    for name, pred in preds.items():
+        for policy_name, pol in [("original", BuddyPolicy(mode="none")),
+                                 ("buddy", BuddyPolicy(tau=0.05, beta=1.1,
+                                                       rho=4, H=16))]:
+            eng = _engine(cfg, params, tables, pol,
+                          predictor=pred.__class__(l_n, e_n)
+                          if pred is not None else None,
+                          prefetch_k=16 if pred is not None else 0)
+            eng.generate(lm.sample(2, 4), max_new_tokens=10)
+            key = f"prefetch.{name}.{policy_name}"
+            res[key] = {"sync_fetches": eng.stats.n_miss_fetch,
+                        "subs": eng.stats.n_sub,
+                        "pcie_bytes": eng.ledger.total_bytes,
+                        "tps": eng.stats.tokens_per_s}
+            print(f"    {name:10s}+{policy_name:8s}: fetches "
+                  f"{eng.stats.n_miss_fetch:4d} subs {eng.stats.n_sub:4d} "
+                  f"bytes {eng.ledger.total_bytes/1e6:7.1f}MB "
+                  f"t/s {eng.stats.tokens_per_s:7.1f}")
+    out_rows.append(("ablation.prefetchers", (time.time() - t0) * 1e6 / 10,
+                     "see bench/ablation.json"))
+
+    with open(os.path.join(common.CACHE_DIR, "ablation.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    return res

@@ -1,0 +1,46 @@
+"""Figs. 7/9: expert co-activation structure — sparse, concentrated pairs.
+
+Reports, per layer: top-r coverage of q_{j|i} (r = 4, 8), matrix sparsity
+(share of mass in the densest 10% of cells), and buddy-list size stats at
+the paper's alpha settings (compactness check, §3.3).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.buddies import list_size_stats
+
+
+def run(out_rows):
+    cfg, params, lm = common.get_model()
+    t0 = time.time()
+    rec, q = common.get_profile(cfg, params, lm)
+    res = {}
+    for l in range(cfg.num_layers):
+        ql = q[l]
+        flat = np.sort(ql.reshape(-1))[::-1]
+        top10 = flat[:max(1, len(flat) // 10)].sum() / max(flat.sum(), 1e-30)
+        res[f"layer{l}"] = {
+            "top4_coverage_mean": float(rec.topr_coverage(l, 4).mean()),
+            "top8_coverage_mean": float(rec.topr_coverage(l, 8).mean()),
+            "mass_in_top10pct_cells": float(top10),
+        }
+        print(f"  layer {l}: top4 cover {res[f'layer{l}']['top4_coverage_mean']:.3f} "
+              f"top8 {res[f'layer{l}']['top8_coverage_mean']:.3f} "
+              f"top-10%-cells mass {top10:.3f} (uniform = 0.10)")
+    for alpha, kmax in [(0.75, 4), (0.95, 16)]:
+        t = common.get_tables(cfg, q, rec, alpha, kmax)
+        res[f"list_sizes_a{alpha}"] = list_size_stats(t)
+        print(f"  buddy-list sizes @alpha={alpha}: {list_size_stats(t)}")
+    cov = float(np.mean([rec.topr_coverage(l, 8).mean()
+                         for l in range(cfg.num_layers)]))
+    out_rows.append(("coact.top8_coverage", (time.time() - t0) * 1e6,
+                     f"{cov:.4f}"))
+    with open(os.path.join(common.CACHE_DIR, "coact.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    return res

@@ -1,0 +1,48 @@
+"""Kernel microbenches: Pallas (interpret on CPU — functional timing, not TPU
+perf) vs the pure-jnp oracle, across paper-relevant shapes."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def run(out_rows):
+    rng = np.random.default_rng(0)
+
+    # buddy_substitute @ DeepSeek-V2-Lite decode batch
+    t, e, k, r = 256, 64, 6, 16
+    s = np.stack([rng.choice(e, k, replace=False) for _ in range(t)]).astype(np.int32)
+    gate = rng.random(t) < 0.8
+    res = rng.random(e) < 0.5
+    table = rng.integers(0, e, (e, r)).astype(np.int32)
+    q = rng.random((e, r)).astype(np.float32)
+    a = [jnp.asarray(x) for x in (s, gate, res, table, q)]
+    us_k = common.timer(lambda: ops.buddy_substitute(*a, h=8, rho=3))
+    us_r = common.timer(lambda: ref.ref_buddy_substitute(s, gate, res, table,
+                                                         q, h=8, rho=3),
+                        repeats=2)
+    out_rows.append(("kernel.buddy_substitute", us_k, f"ref_us={us_r:.0f}"))
+    print(f"  buddy_substitute: pallas(interp) {us_k:.0f}us, "
+          f"python-ref {us_r:.0f}us")
+
+    # topk_gate @ prefill tile
+    z = jnp.asarray(rng.normal(size=(2048, 64)).astype(np.float32))
+    us_k = common.timer(lambda: ops.topk_gate(z, 0.4, k=6))
+    us_r = common.timer(lambda: ref.ref_topk_gate(z, 0.4, k=6))
+    out_rows.append(("kernel.topk_gate", us_k, f"ref_us={us_r:.0f}"))
+    print(f"  topk_gate: pallas(interp) {us_k:.0f}us, jnp-ref {us_r:.0f}us")
+
+    # expert_ffn @ small dispatch buffer
+    e_n, c, d, f = 8, 128, 256, 512
+    x = jnp.asarray((rng.normal(size=(e_n, c, d)) * 0.1).astype(np.float32))
+    w1 = jnp.asarray((rng.normal(size=(e_n, d, f)) * 0.05).astype(np.float32))
+    w3 = jnp.asarray((rng.normal(size=(e_n, d, f)) * 0.05).astype(np.float32))
+    w2 = jnp.asarray((rng.normal(size=(e_n, f, d)) * 0.05).astype(np.float32))
+    us_k = common.timer(lambda: ops.expert_ffn(x, w1, w3, w2), repeats=3)
+    us_r = common.timer(lambda: ref.ref_expert_ffn(x, w1, w3, w2))
+    out_rows.append(("kernel.expert_ffn", us_k, f"ref_us={us_r:.0f}"))
+    print(f"  expert_ffn: pallas(interp) {us_k:.0f}us, jnp-ref {us_r:.0f}us")
+    return {}

@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json) —
+the §Roofline section generator."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "dryrun")
+
+
+def load_reports(mesh: str = "16x16"):
+    reps = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        with open(fn) as f:
+            reps.append(json.load(f))
+    return reps
+
+
+def run(out_rows):
+    reps = load_reports()
+    if not reps:
+        print("  (no dry-run artifacts found — run repro.launch.dryrun)")
+        return {}
+    print(f"  {'arch':24s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+          f"{'coll':>10s}  dominant    useful")
+    for r in reps:
+        ro = r["roofline"]
+        print(f"  {ro['arch']:24s} {ro['shape']:12s} "
+              f"{ro['compute_s']*1e3:8.2f}ms {ro['memory_s']*1e3:8.2f}ms "
+              f"{ro['collective_s']*1e3:8.2f}ms  {ro['dominant']:10s} "
+              f"{ro['useful_flop_ratio']:6.1%}")
+        out_rows.append((
+            f"roofline.{ro['arch']}.{ro['shape']}",
+            ro["compute_s"] * 1e6,
+            f"mem_us={ro['memory_s']*1e6:.0f};coll_us="
+            f"{ro['collective_s']*1e6:.0f};dom={ro['dominant']}"))
+    doms = {}
+    for r in reps:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    print(f"  dominant-term histogram: {doms}")
+    return {"count": len(reps), "dominant_histogram": doms}

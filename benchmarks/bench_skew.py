@@ -1,0 +1,31 @@
+"""Fig. 6: uneven expert activation distribution (per-layer skew stats)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(out_rows):
+    cfg, params, lm = common.get_model()
+    t0 = time.time()
+    rec, _ = common.get_profile(cfg, params, lm)
+    res = {}
+    for l in range(cfg.num_layers):
+        s = rec.activation_skew(l)
+        res[f"layer{l}"] = {k: v for k, v in s.items() if k != "counts"}
+        res[f"layer{l}"]["counts_top8"] = sorted(
+            s["counts"].tolist(), reverse=True)[:8]
+        print(f"  layer {l}: gini {s['gini']:.3f} top1 {s['top1_share']:.3f} "
+              f"top8 {s['top8_share']:.3f} (uniform top8 = {8/64:.3f})")
+    mean_gini = float(np.mean([rec.activation_skew(l)["gini"]
+                               for l in range(cfg.num_layers)]))
+    out_rows.append(("skew.mean_gini", (time.time() - t0) * 1e6,
+                     f"{mean_gini:.4f}"))
+    with open(os.path.join(common.CACHE_DIR, "skew.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    return res

@@ -1,0 +1,111 @@
+"""Tables 2-4: accuracy vs throughput at cache rates c in {0.75, 0.50, 0.375}.
+
+Methods: Original (on-demand, lossless), Random substitution, BuddyMoE at
+several (alpha -> |B|, rho) settings — mirroring the paper's sweep. Accuracy
+is eval quality on held-out synthetic data: cross-entropy and top-1 agreement
+with the full-residency model (ARC needs pretrained weights; DESIGN.md §7).
+Throughput is the modeled tokens/s from the transfer ledger + compute model.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import BuddyPolicy, make_random_table
+from repro.core.buddies import BuddyTables
+from repro.runtime.cache import ExpertCache
+from repro.serving.engine import ServeEngine
+
+CACHE_RATES = [0.75, 0.50, 0.375]
+EVAL_BATCH, EVAL_LEN = 4, 24
+
+
+def _random_tables(cfg, k_max=16):
+    rt, rq = make_random_table(jax.random.PRNGKey(7), cfg.moe.num_experts,
+                               k_max)
+    return BuddyTables(
+        table=np.tile(np.asarray(rt)[None], (cfg.num_layers, 1, 1)),
+        q=np.tile(np.asarray(rq)[None], (cfg.num_layers, 1, 1)),
+        sizes=np.full((cfg.num_layers, cfg.moe.num_experts), k_max, np.int32))
+
+
+def _run_method(cfg, params, lm, tables, policy, rate, eval_data, ref_top1):
+    from repro.configs.deepseek_v2_lite_buddy import CONFIG as FULL_DS
+    eng = ServeEngine(cfg, params, tables=tables, policy=policy,
+                      cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts,
+                                        rate, seed=1), seed=1,
+                      latency_cfg=FULL_DS)
+    b, s = eval_data.shape
+    caches = eng.init_caches(b, s)
+    nll, n, agree = 0.0, 0, 0
+    import jax.numpy as jnp
+    for pos in range(s - 1):
+        logits, caches = eng.step(jnp.asarray(eval_data[:, pos]), caches, pos)
+        lp = np.asarray(jax.nn.log_softmax(logits.astype(jnp.float32), -1))
+        tgt = eval_data[:, pos + 1]
+        nll += float(-np.take_along_axis(lp, tgt[:, None], 1).sum())
+        agree += int((lp.argmax(-1) == ref_top1[:, pos]).sum())
+        n += b
+    return {
+        "nll": nll / n,
+        "top1_agree": agree / n,
+        "tokens_per_s": eng.stats.tokens_per_s,
+        "n_sub": eng.stats.n_sub,
+        "n_miss_fetch": eng.stats.n_miss_fetch,
+        "pcie_bytes": eng.ledger.total_bytes,
+    }
+
+
+def run(out_rows):
+    cfg, params, lm = common.get_model()
+    rec, q = common.get_profile(cfg, params, lm)
+    sims = common.get_sims(cfg, params, lm)
+    eval_data = lm.sample(EVAL_BATCH, EVAL_LEN)
+
+    # reference top-1 from the full-residency model
+    from repro.models import transformer
+    import jax.numpy as jnp
+    ref_logits, _ = jax.jit(
+        lambda p, t: transformer.forward_train(p, cfg, t))(
+            params, jnp.asarray(eval_data))
+    ref_top1 = np.asarray(ref_logits.argmax(-1))
+
+    t95 = common.get_tables(cfg, q, rec, 0.95, 16, output_sim=sims)
+    methods = [
+        ("original", None, BuddyPolicy(mode="none")),
+        ("random", _random_tables(cfg),
+         BuddyPolicy(tau=0.05, beta=1.1, rho=6, H=16, fallback="drop")),
+        ("buddy_a0.75_B4",
+         common.get_tables(cfg, q, rec, 0.75, 4, output_sim=sims),
+         BuddyPolicy(tau=0.05, beta=1.1, rho=6, H=4, fallback="drop")),
+        ("buddy_a0.95_B16", t95,
+         BuddyPolicy(tau=0.05, beta=1.1, rho=6, H=16, fallback="drop")),
+        ("buddy_a0.95_B16_rho3", t95,
+         BuddyPolicy(tau=0.05, beta=1.1, rho=3, H=16)),
+        ("buddy_a0.95_B16_rho4", t95,
+         BuddyPolicy(tau=0.05, beta=1.1, rho=4, H=16)),
+    ]
+
+    results = {}
+    for rate in CACHE_RATES:
+        for name, tables, pol in methods:
+            t0 = time.time()
+            r = _run_method(cfg, params, lm, tables, pol, rate, eval_data,
+                            ref_top1)
+            key = f"tables.c{rate}.{name}"
+            results[key] = r
+            out_rows.append((key, (time.time() - t0) * 1e6 / (EVAL_LEN - 1),
+                             f"nll={r['nll']:.4f};agree={r['top1_agree']:.3f};"
+                             f"tps={r['tokens_per_s']:.1f}"))
+            print(f"  c={rate} {name:22s} nll {r['nll']:.4f} "
+                  f"agree {r['top1_agree']:.3f} t/s {r['tokens_per_s']:8.1f} "
+                  f"sub {r['n_sub']:4d} fetch {r['n_miss_fetch']:4d}")
+    os.makedirs(common.CACHE_DIR, exist_ok=True)
+    with open(os.path.join(common.CACHE_DIR, "tables234.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results

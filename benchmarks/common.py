@@ -1,0 +1,107 @@
+"""Shared benchmark substrate: a small trained DeepSeek-V2-Lite-family MoE
+(64 experts, top-6 — the paper's §5.1 routing regime), its co-activation
+profile and CFT buddy tables. Trained once and cached on disk."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.deepseek_v2_lite_buddy import profiling
+from repro.core import CoactivationRecorder, build_buddy_lists
+from repro.core.buddies import BuddyTables, load_tables, save_tables
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.models import transformer
+from repro.training.data import MarkovLM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+TRAIN_STEPS = 400
+
+
+def get_model(verbose: bool = True):
+    """Returns (cfg, params, lm). Trains ~TRAIN_STEPS steps once, then caches."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    cfg = profiling()
+    lm = MarkovLM(cfg.vocab_size, num_blocks=8, seed=0)
+    ckpt = os.path.join(CACHE_DIR, "model.npz")
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    if os.path.exists(ckpt):
+        params = load_pytree(ckpt, params)
+    else:
+        t0 = time.time()
+        opt = AdamWConfig(lr=2e-3, total_steps=TRAIN_STEPS, warmup_steps=10)
+        params, hist = train(cfg, opt, lm.batches(8, 64, TRAIN_STEPS),
+                             log_every=20,
+                             log_fn=print if verbose else lambda s: None)
+        if verbose:
+            print(f"[bench] trained {TRAIN_STEPS} steps in "
+                  f"{time.time() - t0:.0f}s, "
+                  f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+        save_pytree(ckpt, params)
+    return cfg, params, lm
+
+
+def get_profile(cfg, params, lm, steps: int = 8, verbose: bool = True):
+    """Returns (recorder, q [L,E,E]). Cached on disk."""
+    path = os.path.join(CACHE_DIR, "coact.npz")
+    if os.path.exists(path):
+        rec = CoactivationRecorder.load(path)
+    else:
+        rec = CoactivationRecorder(cfg.num_layers, cfg.moe.num_experts)
+        fwd = jax.jit(lambda p, t: transformer.forward_train(p, cfg, t,
+                                                             record=True))
+        for i in range(steps):
+            _, aux = fwd(params, jnp.asarray(lm.sample(8, 64)))
+            per = aux["recorded"][0]
+            for l in range(cfg.num_layers):
+                rec.update(l, np.asarray(per["indices"][l]),
+                           np.asarray(per["probs"][l]))
+            rec.step_done()
+        rec.save(path)
+    q = np.stack([rec.conditional(l) for l in range(cfg.num_layers)])
+    return rec, q
+
+
+def get_sims(cfg, params, lm):
+    """[L, E, E] expert output-similarity matrices (cached)."""
+    from repro.core.similarity import all_layer_similarities
+    path = os.path.join(CACHE_DIR, "sims.npy")
+    if os.path.exists(path):
+        return np.load(path)
+    sims = all_layer_similarities(cfg, params, jnp.asarray(lm.sample(4, 64)))
+    np.save(path, sims)
+    return sims
+
+
+def get_tables(cfg, q, rec, alpha: float, k_max: int,
+               output_sim=None) -> BuddyTables:
+    tag = "s" if output_sim is not None else ""
+    path = os.path.join(CACHE_DIR, f"tables_a{alpha}_k{k_max}{tag}.npz")
+    if os.path.exists(path):
+        return load_tables(path)
+    t = build_buddy_lists(q, alpha=alpha, k_max=k_max, activity=rec.A,
+                          output_sim=output_sim)
+    save_tables(path, t)
+    return t
+
+
+def timer(fn, *args, repeats: int = 5, warmup: int = 1):
+    """Median wall time per call in microseconds (CPU functional timing)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or \
+            isinstance(r, (tuple, list)) else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready()
+                     if hasattr(x, "block_until_ready") else x, r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)

@@ -1,0 +1,53 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+results/dryrun/*.json (run after repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def rows(mesh):
+    out = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN, f"*_{mesh}.json"))):
+        if mesh == "16x16" and "2x16x16" in fn:
+            continue
+        out.append(json.load(open(fn)))
+    return out
+
+
+def render_dryrun(mesh="16x16"):
+    print(f"\n### Dry-run ({mesh})\n")
+    print("| arch | shape | compile s | args GB/dev | temp GB/dev | "
+          "FLOPs/dev | HBM bytes/dev | coll bytes/dev | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows(mesh):
+        ma, ha = r["memory_analysis"], r["hlo_analysis"]
+        counts = ",".join(f"{k.replace('all-','a').replace('reduce-scatter','rs').replace('collective-permute','cp')}:{v}"
+                          for k, v in sorted(ha["coll_counts"].items()))
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.1f} "
+              f"| {ma['argument_size_bytes']/1e9:.2f} "
+              f"| {ma['temp_size_bytes']/1e9:.2f} "
+              f"| {ha['flops']:.2e} | {ha['traffic_bytes']:.2e} "
+              f"| {ha['coll_bytes']:.2e} | {counts} |")
+
+
+def render_roofline(mesh="16x16"):
+    print(f"\n### Roofline ({mesh})\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | MODEL_FLOPS | useful ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows(mesh):
+        ro = r["roofline"]
+        print(f"| {ro['arch']} | {ro['shape']} | {ro['compute_s']*1e3:.2f} "
+              f"| {ro['memory_s']*1e3:.2f} | {ro['collective_s']*1e3:.2f} "
+              f"| **{ro['dominant']}** | {ro['model_flops']:.2e} "
+              f"| {ro['useful_flop_ratio']:.1%} |")
+
+
+if __name__ == "__main__":
+    render_dryrun("16x16")
+    render_roofline("16x16")
+    render_dryrun("2x16x16")

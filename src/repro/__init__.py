@@ -1,0 +1,3 @@
+"""repro — BuddyMoE (expert-redundancy substitution for memory-constrained
+MoE inference) reproduced as a multi-pod JAX/Pallas framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,61 @@
+"""Checkpoint I/O: params/opt-state pytrees -> npz, configs -> json.
+
+Buddy tables (core.buddies.BuddyTables) serialize alongside the model
+checkpoint, as the paper prescribes (§3.4 'serialized and distributed
+alongside model checkpoints')."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez_compressed(path, **_flatten_with_paths(tree))
+
+
+def load_pytree(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (same keys)."""
+    data = np.load(path)
+    flat = _flatten_with_paths(like)
+    assert set(flat) == set(data.files), \
+        f"checkpoint keys mismatch: {set(flat) ^ set(data.files)}"
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(_path_str(p) for p in path)
+        arr = data[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_config(path: str, cfg_dict: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cfg_dict, f, indent=2, default=str)
+
+
+def load_config(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,33 @@
+"""Mixtral-8x22B — MoE 8 experts top-2, GQA, SWA [arXiv:2401.04088]."""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    arch_id="mixtral-8x22b",
+    family="moe",
+    source="Mixtral of Experts [arXiv:2401.04088]",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff=16384),
+    sliding_window=4096,
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        arch_id="mixtral22-reduced",
+        family="moe",
+        source=CONFIG.source,
+        num_layers=2,
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=512,
+        vocab_size=512,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff=512),
+        sliding_window=128,
+    )

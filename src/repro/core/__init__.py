@@ -1,0 +1,16 @@
+"""BuddyMoE core — the paper's primary contribution.
+
+Offline: coactivation (profiling, Eq. 4) -> buddies (CFT lists, Eqs. 5-6).
+Online:  gates (TAE Eq. 1, distribution Eq. 2) -> substitute (Alg. 1 + Psi Eq. 3),
+parameterized by policy.BuddyPolicy.
+"""
+from repro.core.buddies import (BuddyTables, alpha_schedule, build_buddy_lists,
+                                cft_prefix_size, list_size_stats, load_tables,
+                                save_tables)
+from repro.core.coactivation import CoactivationRecorder
+from repro.core.gates import (calibrate_tau, distribution_delta,
+                              distribution_gate, prob_margin, tae_from_logits,
+                              tae_from_probs, token_gate)
+from repro.core.policy import DROP, ORIGINAL, BuddyPolicy
+from repro.core.substitute import (SubstituteResult, make_random_table,
+                                   substitute)

@@ -1,0 +1,81 @@
+"""The paper's three sequenced decision metrics (§3.1).
+
+1. Token Activating Entropy (TAE, Eq. 1) — per-token substitution tolerance.
+2. Expert Distribution gate (Eq. 2)      — batch-level CPU-residency fraction.
+3. Buddy Selection Priority Psi (Eq. 3)  — computed in core/substitute.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tae_from_logits(topk_logits: jax.Array, temperature: float = 1.0) -> jax.Array:
+    """TAE over the renormalized top-k distribution (Eq. 1).
+
+    topk_logits: [..., K] router logits restricted to the selected set
+    (optionally temperature-smoothed). Returns [...] in [0, 1].
+    """
+    k = topk_logits.shape[-1]
+    if k <= 1:
+        return jnp.zeros(topk_logits.shape[:-1], jnp.float32)
+    p = jax.nn.softmax(topk_logits.astype(jnp.float32) / temperature, axis=-1)
+    ent = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-20)), axis=-1)
+    return ent / np.log(k)
+
+
+def tae_from_probs(topk_probs: jax.Array) -> jax.Array:
+    """TAE from already-renormalized top-k probabilities."""
+    k = topk_probs.shape[-1]
+    if k <= 1:
+        return jnp.zeros(topk_probs.shape[:-1], jnp.float32)
+    p = topk_probs.astype(jnp.float32)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    ent = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-20)), axis=-1)
+    return ent / np.log(k)
+
+
+def prob_margin(topk_probs: jax.Array) -> jax.Array:
+    """m = p_max - p_2nd over the renormalized top-k distribution."""
+    if topk_probs.shape[-1] < 2:
+        return jnp.ones(topk_probs.shape[:-1], jnp.float32)
+    p = jnp.sort(topk_probs.astype(jnp.float32), axis=-1)
+    return p[..., -1] - p[..., -2]
+
+
+def token_gate(topk_logits: jax.Array, tau: float, temperature: float = 1.0,
+               margin_gamma: float = 1.0) -> jax.Array:
+    """True where substitution is ALLOWED (TAE > tau and margin < gamma)."""
+    t = tae_from_logits(topk_logits, temperature)
+    allow = t > tau
+    if margin_gamma < 1.0:
+        p = jax.nn.softmax(topk_logits.astype(jnp.float32) / temperature, -1)
+        allow = allow & (prob_margin(p) < margin_gamma)
+    return allow
+
+
+def distribution_delta(indices: jax.Array, resident: jax.Array) -> jax.Array:
+    """delta_l(B) (Eq. 2): fraction of *requested* experts that are CPU-resident.
+
+    indices: [T, K] selected expert ids; resident: [E] bool. The requested set
+    R_l(B) is the set of unique experts requested by the micro-batch.
+    """
+    e = resident.shape[0]
+    onehot = jax.nn.one_hot(indices.reshape(-1), e, dtype=jnp.float32)
+    requested = onehot.max(axis=0) > 0                     # [E]
+    n_req = jnp.maximum(requested.sum(), 1.0)
+    n_cpu = (requested & ~resident).sum()
+    return n_cpu.astype(jnp.float32) / n_req
+
+
+def distribution_gate(indices: jax.Array, resident: jax.Array,
+                      beta: float) -> jax.Array:
+    """True (scalar) when substitution is ALLOWED (delta < beta)."""
+    return distribution_delta(indices, resident) < beta
+
+
+def calibrate_tau(tae_samples: np.ndarray, percentile: float = 15.0) -> float:
+    """Percentile calibration of tau from a profiling TAE distribution
+    (§3.1: p in [10, 20])."""
+    return float(np.percentile(np.asarray(tae_samples), percentile))

@@ -1,0 +1,44 @@
+"""BuddyMoE runtime policy (hashable; used as a jit static argument)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BuddyPolicy:
+    """Deployment-time knobs (paper §3.1/§3.4, §5.1).
+
+    tau:    TAE gate threshold — forbid substitution when TAE <= tau.
+    beta:   distribution gate — bypass substitution when delta >= beta.
+    rho:    max substitutions per token (paper §5's replacement budget).
+    H:      max buddy search rank (Algorithm 1).
+    eta:    local router-logit compatibility weight in Psi (Eq. 3).
+    kappa:  cross-partition hop penalty weight in Psi (Eq. 3).
+    temperature: optional TAE smoothing temperature (§3.1, T in [0.8, 1.2]).
+    margin_gamma: optional probability-margin co-gate (>=1.0 disables).
+    fallback: what to do on a miss with no eligible buddy:
+              'fetch' — synchronous transfer of the true expert (lossless,
+              slow; the paper's Original behavior), or 'drop' — skip the
+              expert and renormalize (baseline MoE drop policy).
+    mode:   'buddy' (the paper), 'random' (random-resident baseline),
+            'none' (no substitution — Original baseline).
+    """
+    tau: float = 0.2
+    beta: float = 0.6
+    rho: int = 3
+    H: int = 8
+    eta: float = 0.0
+    kappa: float = 0.0
+    temperature: float = 1.0
+    margin_gamma: float = 1.0
+    fallback: str = "fetch"
+    mode: str = "buddy"
+
+    def __post_init__(self):
+        assert self.fallback in ("fetch", "drop")
+        assert self.mode in ("buddy", "random", "none")
+        assert self.rho >= 0 and self.H >= 1
+
+
+ORIGINAL = BuddyPolicy(mode="none", fallback="fetch")
+DROP = BuddyPolicy(mode="none", fallback="drop")

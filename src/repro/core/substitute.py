@@ -1,0 +1,126 @@
+"""Algorithm 1 — Buddy Expert Substitution (reference jnp implementation).
+
+The Pallas TPU kernel version lives in ``repro.kernels.buddy_substitute``;
+this module is the oracle and the default path on CPU. Semantics follow the
+paper exactly:
+
+  for each token t, for each top-k slot k (in rank order):
+    e = S[t, k]
+    if e not resident and token passes gates and budget rho not exhausted:
+      pick the eligible buddy maximizing Psi(j | e, t) among the first H
+      ranked buddies; eligible = resident AND not already in U_t.
+      Psi = q_{j|e} * (1 + eta * zhat_j(t)) * (1 - kappa * hop(j))   (Eq. 3)
+      (with eta = kappa = 0 this is exactly "first resident unused buddy in
+      table order", i.e. Algorithm 1.)
+    if no eligible buddy: fall back ('fetch' or 'drop' — recorded, decided
+    by the caller via the returned masks).
+
+Uniqueness (b not in U_t) subsumes the paper's multiplicative reuse penalty:
+a buddy already claimed for token t can never be picked again for t.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BuddyPolicy
+
+
+class SubstituteResult(NamedTuple):
+    indices: jax.Array      # [T, K] int32 — possibly rewritten expert ids
+    substituted: jax.Array  # [T, K] bool  — slot was replaced by a buddy
+    missed: jax.Array       # [T, K] bool  — non-resident, no buddy found
+    allowed: jax.Array      # [T]   bool  — token passed TAE gate
+    dist_ok: jax.Array      # []    bool  — batch passed distribution gate
+
+
+def substitute(indices: jax.Array,
+               topk_logits: jax.Array,
+               resident: jax.Array,
+               buddy_table: jax.Array,
+               buddy_q: jax.Array,
+               policy: BuddyPolicy,
+               router_logits: Optional[jax.Array] = None,
+               hop: Optional[jax.Array] = None) -> SubstituteResult:
+    """indices [T, K] int32; topk_logits [T, K] f32 (for TAE);
+    resident [E] bool; buddy_table [E, R] int32 (-1 padded, sorted by q desc);
+    buddy_q [E, R] f32; router_logits [T, E] (optional, for eta term);
+    hop [E] int32 ICI hops to each expert's cache slot (optional)."""
+    from repro.core import gates
+
+    t_n, k_n = indices.shape
+    e_n, r_n = buddy_table.shape
+    h_n = min(policy.H, r_n)
+
+    allowed = gates.token_gate(topk_logits, policy.tau, policy.temperature,
+                               policy.margin_gamma)                      # [T]
+    dist_ok = gates.distribution_gate(indices, resident, policy.beta)    # []
+
+    if policy.mode == "none":
+        miss = ~resident[indices] & True
+        return SubstituteResult(indices, jnp.zeros_like(miss), miss,
+                                allowed, dist_ok)
+
+    gate = allowed & dist_ok                                             # [T]
+
+    if policy.eta != 0.0 and router_logits is not None:
+        zr = router_logits.astype(jnp.float32)
+        zhat = (zr - zr.mean(-1, keepdims=True)) / (zr.std(-1, keepdims=True) + 1e-6)
+    else:
+        zhat = None
+
+    new_idx = indices
+    substituted = jnp.zeros((t_n, k_n), bool)
+    missed = jnp.zeros((t_n, k_n), bool)
+    budget = jnp.where(gate, policy.rho, 0).astype(jnp.int32)            # [T]
+
+    for k in range(k_n):
+        e = new_idx[:, k]                                                # [T]
+        need = ~resident[e] & gate & (budget > 0)                        # [T]
+
+        cand = buddy_table[e][:, :h_n]                                   # [T, H]
+        q = buddy_q[e][:, :h_n].astype(jnp.float32)                      # [T, H]
+        valid = cand >= 0
+        cand_safe = jnp.maximum(cand, 0)
+        elig = valid & resident[cand_safe]                               # [T, H]
+        # uniqueness: candidate must not already be assigned to this token
+        in_row = (cand_safe[:, :, None] == new_idx[:, None, :]).any(-1)  # [T, H]
+        elig = elig & ~in_row
+
+        psi = q
+        if zhat is not None:
+            psi = psi * (1.0 + policy.eta * jnp.take_along_axis(
+                zhat, cand_safe, axis=1))
+        if policy.kappa != 0.0 and hop is not None:
+            psi = psi * (1.0 - policy.kappa * hop[cand_safe].astype(jnp.float32))
+        # strictly-descending tie-break so argmax == lowest rank on equal Psi
+        psi = psi - jnp.arange(h_n, dtype=jnp.float32) * 1e-7
+        psi = jnp.where(elig, psi, -jnp.inf)
+
+        best = jnp.argmax(psi, axis=-1)                                  # [T]
+        found = jnp.take_along_axis(elig, best[:, None], 1)[:, 0]        # [T]
+        buddy = jnp.take_along_axis(cand_safe, best[:, None], 1)[:, 0]   # [T]
+
+        do_sub = need & found
+        new_col = jnp.where(do_sub, buddy, e)
+        new_idx = new_idx.at[:, k].set(new_col)
+        substituted = substituted.at[:, k].set(do_sub)
+        missed = missed.at[:, k].set((~resident[new_col]) & ~do_sub)
+        budget = budget - do_sub.astype(jnp.int32)
+
+    return SubstituteResult(new_idx, substituted, missed, allowed, dist_ok)
+
+
+def make_random_table(key, num_experts: int, r_max: int) -> tuple:
+    """Random-substitution baseline: each expert's 'buddy list' is a uniform
+    random permutation of the other experts (uninformed comparison point)."""
+    def row(k, i):
+        perm = jax.random.permutation(k, num_experts)
+        perm = perm[perm != i][:r_max]
+        return perm
+    keys = jax.random.split(key, num_experts)
+    table = jnp.stack([row(keys[i], i) for i in range(num_experts)])
+    q = jnp.full(table.shape, 1.0 / max(num_experts - 1, 1), jnp.float32)
+    return table.astype(jnp.int32), q

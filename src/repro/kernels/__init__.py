@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; see ops.py for jit'd wrappers and ref.py for the oracles):
+
+  buddy_substitute — Algorithm 1 (the paper's CUDA kernel, TPU-adapted)
+  topk_gate        — fused router top-k + renorm + TAE gate
+  expert_ffn       — grouped expert SwiGLU over dispatch buffers
+  wkv_chunk        — chunkwise-parallel RWKV6 WKV (§Perf B1 hot loop)
+"""

@@ -1,0 +1,37 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python/XLA-CPU for correctness validation; on TPU they compile
+via Mosaic. ``interpret`` is chosen automatically from the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.buddy_substitute import buddy_substitute_pallas
+from repro.kernels.expert_ffn import expert_ffn_pallas
+from repro.kernels.topk_gate import topk_gate_pallas
+from repro.kernels.wkv_chunk import wkv_chunk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def buddy_substitute(s, gate, resident, table, q, *, h: int = 8, rho: int = 3):
+    return buddy_substitute_pallas(s, gate, resident, table, q, h=h, rho=rho,
+                                   interpret=_interpret())
+
+
+def topk_gate(logits, tau, *, k: int):
+    return topk_gate_pallas(logits, tau, k=k, interpret=_interpret())
+
+
+def expert_ffn(x, w1, w3, w2, *, block_c: int = 128, block_f: int = 256):
+    return expert_ffn_pallas(x, w1, w3, w2, block_c=block_c, block_f=block_f,
+                             interpret=_interpret())
+
+
+def wkv_chunk(rt, kt, v, ke, lae, dg, s0):
+    return wkv_chunk_pallas(rt, kt, v, ke, lae, dg, s0,
+                            interpret=_interpret())

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BuddyPolicy
+from repro.core.substitute import substitute as _core_substitute
+
+
+def ref_buddy_substitute(s, gate, resident, table, q, *, h: int = 8,
+                         rho: int = 3):
+    """Oracle for kernels.buddy_substitute. Wraps the core (Alg. 1) reference
+    with the gate supplied externally (the kernel takes gate as an input)."""
+    import numpy as np
+    s = np.asarray(s)
+    gate = np.asarray(gate)
+    resident = np.asarray(resident)
+    table = np.asarray(table)
+    q = np.asarray(q)
+    t_n, k_n = s.shape
+    h_n = min(h, table.shape[1])
+
+    out = s.copy()
+    sub = np.zeros_like(s, bool)
+    miss = np.zeros_like(s, bool)
+    for t in range(t_n):
+        budget = rho if gate[t] else 0
+        for k in range(k_n):
+            e = out[t, k]
+            if resident[e]:
+                continue
+            if not gate[t] or budget <= 0:
+                miss[t, k] = True
+                continue
+            # argmax Psi == first eligible in table order (q sorted desc,
+            # rank tie-break)
+            best, best_psi = -1, -np.inf
+            for r in range(h_n):
+                b = table[e, r]
+                if b < 0:
+                    continue
+                if not resident[b]:
+                    continue
+                if b in out[t]:
+                    continue
+                psi = q[e, r] - r * 1e-7
+                if psi > best_psi:
+                    best_psi, best = psi, b
+            if best >= 0:
+                out[t, k] = best
+                sub[t, k] = True
+                budget -= 1
+            else:
+                miss[t, k] = True
+    return (jnp.asarray(out), jnp.asarray(sub), jnp.asarray(miss))
+
+
+def ref_topk_gate(logits, tau, *, k: int):
+    """Oracle for kernels.topk_gate (jax.lax.top_k based)."""
+    z = logits.astype(jnp.float32)
+    vals, idx = jax.lax.top_k(z, k)
+    p = jax.nn.softmax(vals, axis=-1)
+    if k > 1:
+        ent = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-20)), axis=-1)
+        tae = ent / jnp.log(float(k))
+    else:
+        tae = jnp.zeros(z.shape[:-1], jnp.float32)
+    return idx.astype(jnp.int32), vals, p, tae, tae > tau
+
+
+def ref_expert_ffn(x, w1, w3, w2):
+    """Oracle for kernels.expert_ffn: grouped SwiGLU, f32 accumulation."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w1,
+                               preferred_element_type=jnp.float32))
+    g = jnp.einsum("ecd,edf->ecf", x, w3, preferred_element_type=jnp.float32)
+    hg = (h * g).astype(x.dtype)
+    return jnp.einsum("ecf,efd->ecd", hg, w2,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ref_wkv_chunk(rt, kt, v, ke, lae, dg, s0):
+    """Oracle for kernels.wkv_chunk: sequential chunk loop in jnp.
+    rt/kt/v/ke [BH, N, C, D]; lae [BH, N, D]; dg [BH, N, C]; s0 [BH, D, D].
+    """
+    bh, n, c, d = rt.shape
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+
+    def step(s, inp):
+        r_, k_, v_, ke_, laE, dg_ = inp
+        o_inter = jnp.einsum("bcd,bde->bce", r_, s)
+        scores = jnp.einsum("bcd,bsd->bcs", r_, k_) * mask[None]
+        o = o_inter + jnp.einsum("bcs,bse->bce", scores, v_) \
+            + dg_[..., None] * v_
+        s_new = jnp.exp(laE)[..., None] * s + jnp.einsum("bsd,bse->bde",
+                                                         ke_, v_)
+        return s_new, o
+
+    import jax
+    swap = lambda x: jnp.swapaxes(x, 0, 1)  # noqa: E731
+    s_fin, out = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (swap(rt), swap(kt), swap(v), swap(ke), swap(lae), swap(dg)))
+    return swap(out), s_fin

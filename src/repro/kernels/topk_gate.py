@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: fused MoE router gate.
+
+Fuses, per token tile, in one VMEM pass over the router logits:
+  top-k selection (iterative max, K statically unrolled),
+  renormalized top-k probabilities,
+  Token Activating Entropy (Eq. 1) and the TAE gate (TAE > tau).
+
+This is the hot prologue of every MoE layer in the serving path; fusing it
+avoids materializing softmax(logits) [T, E] plus three follow-up elementwise
+passes in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TOKEN_BLOCK = 256
+NEG = -1e30
+
+
+def _kernel(z_ref, tau_ref, idx_ref, val_ref, prob_ref, tae_ref, allow_ref,
+            *, k_n: int):
+    z = z_ref[...].astype(jnp.float32)          # [T, E]
+    tau = tau_ref[0]
+    t_n, e_n = z.shape
+
+    zm = z
+    idxs, vals = [], []
+    iota = jax.lax.broadcasted_iota(jnp.int32, (t_n, e_n), 1)
+    for _ in range(k_n):
+        v = jnp.max(zm, axis=1)                                   # [T]
+        is_max = (zm == v[:, None])
+        # first argmax: smallest index among maxima
+        i = jnp.min(jnp.where(is_max, iota, e_n), axis=1).astype(jnp.int32)
+        sel = (iota == i[:, None])
+        zm = jnp.where(sel, NEG, zm)
+        idxs.append(i)
+        vals.append(v)
+    idx = jnp.stack(idxs, axis=1)                                 # [T, K]
+    val = jnp.stack(vals, axis=1)
+
+    # renormalized top-k softmax
+    mx = val[:, 0:1]
+    p = jnp.exp(val - mx)
+    p = p / jnp.maximum(p.sum(axis=1, keepdims=True), 1e-20)
+
+    if k_n > 1:
+        ent = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-20)), axis=1)
+        tae = ent / math.log(k_n)
+    else:
+        tae = jnp.zeros((t_n,), jnp.float32)
+
+    idx_ref[...] = idx
+    val_ref[...] = val
+    prob_ref[...] = p
+    tae_ref[...] = tae
+    allow_ref[...] = (tae > tau).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_gate_pallas(logits, tau, *, k: int, interpret: bool = False):
+    """logits [T, E] f32; tau scalar. Returns (idx [T,K] i32, vals [T,K] f32,
+    probs [T,K] f32, tae [T] f32, allow [T] bool)."""
+    t_n, e_n = logits.shape
+    tb = min(TOKEN_BLOCK, t_n)
+    pad = (-t_n) % tb
+    zp = jnp.pad(logits, ((0, pad), (0, 0)))
+    grid = (zp.shape[0] // tb,)
+    tau_arr = jnp.asarray([tau], jnp.float32)
+
+    outs = pl.pallas_call(
+        functools.partial(_kernel, k_n=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, e_n), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb, k), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((zp.shape[0], k), jnp.int32),
+            jax.ShapeDtypeStruct((zp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((zp.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((zp.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((zp.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(zp.astype(jnp.float32), tau_arr)
+    idx, val, prob, tae, allow = outs
+    return (idx[:t_n], val[:t_n], prob[:t_n], tae[:t_n],
+            allow[:t_n].astype(bool))

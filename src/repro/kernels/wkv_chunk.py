@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: chunkwise-parallel WKV (RWKV6 time-mix hot loop).
+
+Computes, per (batch x head) lane and chunk n (sequential grid axis — the
+recurrent state is carried across grid steps in the output ref):
+
+    o_n   = r~_n @ S  +  [lower(r~_n k~_n^T) + diag(dg_n)] @ v_n
+    S     = exp(laE_n) * S + k_end_n^T @ v_n
+
+Inputs are the decay-factorized tensors produced by
+``models/rwkv.wkv_chunked`` (r~ = r*exp(la_{t-1}), k~ = k*exp(-la),
+k_end = k*exp(la_C - la)). Blocks are [C, D] with C = chunk (32) and
+D = head_dim (64..128): a handful of KiB — the whole working set sits in
+VMEM and both matmuls hit the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(rt_ref, kt_ref, v_ref, ke_ref, lae_ref, dg_ref, s0_ref,
+            o_ref, s_ref, *, chunk: int):
+    n = pl.program_id(1)
+
+    @pl.when(n == 0)
+    def _init():
+        s_ref[...] = s0_ref[...]
+
+    s = s_ref[0]                                   # [D, D]
+    rt = rt_ref[0, 0]                              # [C, D]
+    kt = kt_ref[0, 0]
+    v = v_ref[0, 0]
+    ke = ke_ref[0, 0]
+    lae = lae_ref[0, 0]                            # [D]
+    dg = dg_ref[0, 0]                              # [C]
+
+    o_inter = jnp.dot(rt, s, preferred_element_type=jnp.float32)
+    scores = jnp.dot(rt, kt.T, preferred_element_type=jnp.float32)
+    c_iota = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(r_iota < c_iota, scores, 0.0)   # strictly lower
+    o_intra = jnp.dot(scores, v, preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o_inter + o_intra + dg[:, None] * v
+
+    s_new = jnp.exp(lae)[:, None] * s + jnp.dot(
+        ke.T, v, preferred_element_type=jnp.float32)
+    s_ref[...] = s_new[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wkv_chunk_pallas(rt, kt, v, ke, lae, dg, s0, *, interpret: bool = False):
+    """rt/kt/v/ke: [BH, N, C, D] f32; lae: [BH, N, D]; dg: [BH, N, C];
+    s0: [BH, D, D]. Returns (o [BH, N, C, D], s_final [BH, D, D])."""
+    bh, n, c, d = rt.shape
+    out, s_fin = pl.pallas_call(
+        functools.partial(_kernel, chunk=c),
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1, c), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, d, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, d, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, n, c, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, d, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rt.astype(jnp.float32), kt.astype(jnp.float32), v.astype(jnp.float32),
+      ke.astype(jnp.float32), lae.astype(jnp.float32),
+      dg.astype(jnp.float32), s0.astype(jnp.float32))
+    return out, s_fin

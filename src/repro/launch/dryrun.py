@@ -1,0 +1,400 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh; report memory/cost analysis and roofline terms.
+
+MUST be the very first lines — before any other import — since jax locks the
+device count on first init:
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse            # noqa: E402
+import dataclasses         # noqa: E402
+import functools           # noqa: E402
+import json                # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+import jax.numpy as jnp    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig,  # noqa: E402
+                                get_config)
+from repro.core.policy import BuddyPolicy                       # noqa: E402
+from repro.launch import roofline as rl                         # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.sharding import (ShardingProfile, activation_rules,  # noqa: E402
+                                   param_specs, profile_for, sanitize_specs)
+from repro.models import transformer                            # noqa: E402
+from repro.models.common import axis_rules                      # noqa: E402
+from repro.models.moe import BuddyState                         # noqa: E402
+from repro.training.optimizer import AdamWConfig, init_opt_state  # noqa: E402
+from repro.training.train_loop import make_train_step           # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+R_MAX = 8
+
+
+# ---------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins (weak-type-correct, no allocation)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def params_struct(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: transformer.init_params(cfg, k), key)
+
+
+def cond_struct(cfg: ModelConfig, batch: int):
+    if cfg.num_cond_tokens:
+        return _sds((batch, cfg.num_cond_tokens, cfg.cond_dim), jnp.bfloat16)
+    return None
+
+
+def buddy_struct(cfg: ModelConfig):
+    if not cfg.is_moe:
+        return None
+    l = sum(r for k, r in cfg.stack() if k == "attn_moe")
+    e = cfg.moe.num_experts
+    return BuddyState(resident=_sds((l, e), jnp.bool_),
+                      table=_sds((l, e, R_MAX), jnp.int32),
+                      q=_sds((l, e, R_MAX), jnp.float32),
+                      hop=_sds((l, e), jnp.int32))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """All model inputs for the given shape, as ShapeDtypeStructs."""
+    shp = SHAPES[shape_name]
+    b, s = shp.global_batch, shp.seq_len
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if shp.kind == "train":
+        out["targets"] = _sds((b, s), jnp.int32)
+    if shp.kind == "decode":
+        out["token"] = _sds((b,), jnp.int32)
+        out["pos"] = _sds((), jnp.int32)
+    c = cond_struct(cfg, b)
+    if c is not None:
+        out["cond"] = c
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec trees
+# ---------------------------------------------------------------------------
+def _cache_spec_tree(cfg: ModelConfig, prof: ShardingProfile, rules: dict):
+    """PartitionSpecs mirroring transformer.init_caches structure."""
+    bt = prof.batch
+
+    kvh, hd = rules.get("cache_heads"), rules.get("cache_hd")
+    cseq = rules.get("cache_seq")
+    kv = {"k": P(None, bt, cseq, kvh, hd),
+          "v": P(None, bt, cseq, kvh, hd)}
+    specs = []
+    for kind, repeat in cfg.stack():
+        if kind in ("attn_dense", "attn_moe"):
+            specs.append({"kv": kv})
+        elif kind == "rwkv6":
+            specs.append({"wkv": P(None, bt, "model", None, None),
+                          "x_tm": P(None, bt, None, None),
+                          "x_cm": P(None, bt, None, None)})
+        elif kind == "mamba2":
+            specs.append({"conv": P(None, bt, None, "model"),
+                          "ssm": P(None, bt, "model", None, None)})
+        elif kind == "hybrid_super":
+            specs.append({
+                "mamba": {"conv": P(None, None, bt, None, "model"),
+                          "ssm": P(None, None, bt, "model", None, None)},
+                "kv": kv})
+        elif kind == "vlm_super":
+            specs.append({
+                "self_kv": {"k": P(None, None, bt, cseq, kvh, hd),
+                            "v": P(None, None, bt, cseq, kvh, hd)},
+                "cross_kv": (P(None, bt, None, kvh, hd),
+                             P(None, bt, None, kvh, hd))})
+        else:
+            raise ValueError(kind)
+    return tuple(specs)
+
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _arg_shardings(mesh, shardings, args):
+    """Sanitize specs against arg shapes (divisibility), then to shardings."""
+    return tuple(_ns(mesh, sanitize_specs(s, a, mesh))
+                 for s, a in zip(shardings, args))
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+def _bf16(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(cfg, dtype="bfloat16")
+
+
+def lower_case(cfg: ModelConfig, shape_name: str, mesh, prof: ShardingProfile,
+               policy: BuddyPolicy = BuddyPolicy()):
+    """Build + lower the step function for one (arch x shape). Returns
+    (lowered, meta)."""
+    shp = SHAPES[shape_name]
+    cfg = _bf16(cfg)
+    b, s = shp.global_batch, shp.seq_len
+    ins = input_specs(cfg, shape_name)
+    p_struct = params_struct(cfg)
+    p_spec = param_specs(cfg, p_struct, prof)
+    bt = prof.batch
+    has_cond = "cond" in ins
+    model_size = mesh.shape["model"]
+    rules = activation_rules(prof, cfg, model_size)
+
+    if shp.kind == "train":
+        opt_struct = jax.eval_shape(init_opt_state, p_struct)
+        # optimizer state shards like params (FSDP-consistent)
+        opt_spec = type(opt_struct)(P(), p_spec, p_spec)
+        step = make_train_step(cfg, AdamWConfig(), remat=True)
+
+        def fn(params, opt_state, tokens, targets, rng, cond=None):
+            with axis_rules(rules):
+                return step(params, opt_state, tokens, targets, rng,
+                            cond_embeds=cond)
+
+        args = [p_struct, opt_struct, ins["tokens"], ins["targets"],
+                jax.random.PRNGKey(0)]
+        shardings = [p_spec, opt_spec, P(bt, None), P(bt, None), P()]
+        if has_cond:
+            args.append(ins["cond"])
+            shardings.append(P(bt, None, None))
+        out_shardings = (_ns(mesh, sanitize_specs(p_spec, p_struct, mesh)),
+                         _ns(mesh, sanitize_specs(opt_spec, opt_struct, mesh)),
+                         NamedSharding(mesh, P()))
+        jitted = jax.jit(fn, in_shardings=_arg_shardings(mesh, shardings, args),
+                         out_shardings=out_shardings, donate_argnums=(0, 1))
+        return jitted.lower(*args), {"kind": "train"}
+
+    if shp.kind == "prefill":
+        def fn(params, tokens, cond=None):
+            with axis_rules(rules):
+                logits, _ = transformer.forward_train(params, cfg, tokens,
+                                                      cond_embeds=cond)
+                return logits
+
+        args = [p_struct, ins["tokens"]]
+        shardings = [p_spec, P(bt, None)]
+        if has_cond:
+            args.append(ins["cond"])
+            shardings.append(P(bt, None, None))
+        logits_spec = sanitize_specs(
+            P(bt, None, None), _sds((b, s, cfg.vocab_size), jnp.float32), mesh)
+        jitted = jax.jit(fn, in_shardings=_arg_shardings(mesh, shardings, args),
+                         out_shardings=_ns(mesh, logits_spec))
+        return jitted.lower(*args), {"kind": "prefill"}
+
+    # decode
+    long_ctx = s >= 262144
+    window = transformer.effective_window(cfg, s, long_context=long_ctx)
+    cache_struct = jax.eval_shape(
+        lambda: transformer.init_caches(cfg, b, s, window=window,
+                                        dtype=jnp.bfloat16))
+    cache_spec = _cache_spec_tree(cfg, prof, rules)
+    bd_struct = buddy_struct(cfg)
+
+    def decode(params, caches, token, pos, cond, buddies):
+        with axis_rules(rules):
+            logits, new_caches, _ = transformer.decode_step(
+                params, cfg, token, caches, pos, cond_embeds=cond,
+                policy=policy if cfg.is_moe else None,
+                buddies=buddies, window=window)
+            return logits, new_caches
+
+    args = [p_struct, cache_struct, ins["token"], ins["pos"]]
+    shardings = [p_spec, cache_spec, P(bt), P()]
+    if has_cond:
+        fn = lambda p, c, t, ps, cond: decode(p, c, t, ps, cond, None)  # noqa: E731
+        args.append(ins["cond"])
+        shardings.append(P(bt, None, None))
+    elif bd_struct is not None:
+        fn = lambda p, c, t, ps, bd: decode(p, c, t, ps, None, bd)  # noqa: E731
+        args.append(bd_struct)
+        shardings.append(jax.tree.map(lambda _: P(), bd_struct))
+    else:
+        fn = lambda p, c, t, ps: decode(p, c, t, ps, None, None)  # noqa: E731
+    logits_spec = sanitize_specs(
+        P(bt, None), _sds((b, cfg.vocab_size), jnp.float32), mesh)
+    out_shardings = (_ns(mesh, logits_spec),
+                     _ns(mesh, sanitize_specs(cache_spec, cache_struct, mesh)))
+    jitted = jax.jit(fn, in_shardings=_arg_shardings(mesh, shardings, args),
+                     out_shardings=out_shardings, donate_argnums=(1,))
+    return jitted.lower(*args), {"kind": "decode", "window": window}
+
+
+def _is_spec(x):
+    return isinstance(x, P)
+
+
+# ---------------------------------------------------------------------------
+# Run + report
+# ---------------------------------------------------------------------------
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            save: bool = True, verbose: bool = True,
+            cache_layout: str = "auto") -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    prof = profile_for(cfg, multi_pod=multi_pod,
+                       train=SHAPES[shape_name].kind == "train")
+    if cache_layout != "auto":
+        prof = dataclasses.replace(prof, cache_layout=cache_layout)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    with mesh:
+        lowered, meta = lower_case(cfg, shape_name, mesh, prof)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    # loop-aware analyzer (cost_analysis counts while bodies once)
+    hla = rl.analyze_hlo(hlo, chips)
+
+    shp = SHAPES[shape_name]
+    report = rl.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=hla["flops"], bytes_per_device=hla["traffic_bytes"],
+        coll_bytes_per_device=hla["coll_bytes"],
+        model_flops=rl.model_flops(cfg, shp.kind, shp.seq_len,
+                                   shp.global_batch),
+    ).finalize()
+
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "meta": meta,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory_analysis": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_size_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "cost_analysis": {"flops": flops, "bytes_accessed": byts},
+        "hlo_analysis": {k: hla[k] for k in
+                         ("flops", "traffic_bytes", "coll_bytes",
+                          "coll_bytes_by_op", "coll_counts", "loops")},
+        "roofline": report.as_dict(),
+    }
+    if verbose:
+        ma = out["memory_analysis"]
+        print(f"[dryrun] {arch} {shape_name} {mesh_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s | "
+              f"args {_gb(ma['argument_size_bytes'])} "
+              f"temp {_gb(ma['temp_size_bytes'])} | "
+              f"flops/dev {hla['flops']:.3e} bytes/dev "
+              f"{hla['traffic_bytes']:.3e} coll/dev {hla['coll_bytes']:.3e}")
+        print("         " + rl.summarize(report))
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        fn = os.path.join(RESULTS_DIR, f"{arch}_{shape_name}_{mesh_name}.json")
+        with open(fn, "w") as f:
+            json.dump(out, f, indent=1)
+        import gzip
+        hlo_dir = os.path.join(RESULTS_DIR, "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        with gzip.open(os.path.join(
+                hlo_dir, f"{arch}_{shape_name}_{mesh_name}.hlo.gz"),
+                "wt") as f:
+            f.write(hlo)
+    return out
+
+
+def reanalyze_all() -> None:
+    """Recompute rooflines from stored HLO (analyzer iterations are free)."""
+    import glob
+    import gzip
+    for fn in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(fn) as f:
+            out = json.load(f)
+        tag = f"{out['arch']}_{out['shape']}_{out['mesh']}"
+        hfn = os.path.join(RESULTS_DIR, "hlo", tag + ".hlo.gz")
+        if not os.path.exists(hfn):
+            print(f"[reanalyze] no HLO for {tag}")
+            continue
+        with gzip.open(hfn, "rt") as f:
+            hlo = f.read()
+        chips = out["chips"]
+        hla = rl.analyze_hlo(hlo, chips)
+        cfg = get_config(out["arch"])
+        shp = SHAPES[out["shape"]]
+        report = rl.RooflineReport(
+            arch=out["arch"], shape=out["shape"], mesh=out["mesh"],
+            chips=chips, flops_per_device=hla["flops"],
+            bytes_per_device=hla["traffic_bytes"],
+            coll_bytes_per_device=hla["coll_bytes"],
+            model_flops=rl.model_flops(cfg, shp.kind, shp.seq_len,
+                                       shp.global_batch)).finalize()
+        out["hlo_analysis"] = {k: hla[k] for k in
+                               ("flops", "traffic_bytes", "coll_bytes",
+                                "coll_bytes_by_op", "coll_counts", "loops")}
+        out["roofline"] = report.as_dict()
+        with open(fn, "w") as f:
+            json.dump(out, f, indent=1)
+        print("[reanalyze] " + rl.summarize(report))
+
+
+def _gb(x):
+    return f"{x / 1e9:.2f}GB" if x is not None else "?"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="recompute rooflines from stored HLO")
+    ap.add_argument("--cache-layout", default="auto",
+                    choices=["auto", "seq"])
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze_all()
+        return
+
+    archs = ARCH_IDS[:10] if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPES) if args.shape in (None, "all") else [args.shape]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            mesh_name = "2x16x16" if args.multi_pod else "16x16"
+            fn = os.path.join(RESULTS_DIR, f"{arch}_{shape}_{mesh_name}.json")
+            if args.skip_existing and os.path.exists(fn):
+                print(f"[dryrun] skip {arch} {shape} {mesh_name} (exists)")
+                continue
+            try:
+                run_one(arch, shape, args.multi_pod,
+                        cache_layout=args.cache_layout)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, repr(e)))
+                print(f"[dryrun] FAIL {arch} {shape}: {e}")
+                traceback.print_exc(limit=4)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

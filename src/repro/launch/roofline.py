@@ -1,0 +1,443 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per the assignment spec:
+
+  compute term    = HLO_FLOPs   / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes   / (chips * HBM_bw)
+  collective term = coll_bytes  / (chips * link_bw)
+
+Sources: ``compiled.cost_analysis()`` (NOTE: after SPMD partitioning this is
+the PER-DEVICE module, so flops/bytes are per-chip; we multiply by `chips`
+to get the global HLO_FLOPs the formulas expect) and the post-partitioning
+HLO text for collective bytes.
+
+Collective byte conventions (ring algorithms, n = group size):
+  all-gather        (n-1)/n * result_bytes      (received bytes)
+  reduce-scatter    (n-1)/n * operand_bytes
+  all-reduce        2(n-1)/n * operand_bytes    (RS + AG)
+  all-to-all        (n-1)/n * operand_bytes
+  collective-permute  operand_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (.*?) (all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute)(?:-start)?\(", re.M)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> dict:
+    """Per-device collective bytes by op type (ring conventions above)."""
+    out = defaultdict(float)
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        result_bytes = _shape_bytes(result_type)
+        n = max(_group_size(line, n_devices), 1)
+        ring = (n - 1) / n
+        if op == "all-gather":
+            moved = ring * result_bytes
+        elif op == "reduce-scatter":
+            moved = ring * result_bytes * n          # operand = result * n
+        elif op == "all-reduce":
+            moved = 2 * ring * result_bytes          # operand == result
+        elif op == "all-to-all":
+            moved = ring * result_bytes              # operand == result
+        else:  # collective-permute
+            moved = result_bytes
+        out[op] += moved
+        counts[op] += 1
+    return {"bytes_by_op": dict(out), "counts": dict(counts),
+            "total_bytes_per_device": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware HLO analyzer
+#
+# ``compiled.cost_analysis()`` on the CPU backend counts each while-loop body
+# ONCE, so scan-over-layers programs under-count FLOPs/bytes by ~num_layers.
+# XLA annotates optimized while ops with backend_config known_trip_count; we
+# parse the HLO text, propagate trip-count multipliers through the call graph
+# (while bodies, fusions, calls), and count dot FLOPs / collective bytes /
+# HBM traffic per computation x multiplier.
+# ---------------------------------------------------------------------------
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+) = (\(.*?\)|\S+)\s+"
+                    r"([\w\-]+)\((.*?)\)", )
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLEE_RES = [re.compile(p) for p in
+               (r"body=%?([\w.\-]+)", r"condition=%?([\w.\-]+)",
+                r"calls=%?([\w.\-]+)", r"to_apply=%?([\w.\-]+)",
+                r"branch_computations=\{([^}]*)\}")]
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "iota", "after-all", "partition-id", "replica-id",
+                 # control flow: carried buffers alias through the loop
+                 "while", "conditional", "call", "optimization-barrier"}
+
+
+def _first_shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, 1
+    dt, dims = m.group(1), m.group(2)
+    d = [int(x) for x in dims.split(",")] if dims else []
+    n = 1
+    for x in d:
+        n *= x
+    return d, n
+
+
+def parse_hlo_module(text: str) -> dict:
+    """Split into computations; return {comp: [line, ...]} plus ENTRY name."""
+    comps, cur, entry = {}, None, None
+    for line in text.splitlines():
+        if line.startswith("ENTRY") or (line and not line[0].isspace()
+                                        and "{" in line and " = " not in
+                                        line.split("{")[0]):
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and line.strip():
+            comps[cur].append(line)
+    return {"comps": comps, "entry": entry}
+
+
+def analyze_hlo(text: str, n_devices: int) -> dict:
+    """Loop-aware per-device FLOPs, HBM traffic and collective bytes."""
+    mod = parse_hlo_module(text)
+    comps, entry = mod["comps"], mod["entry"]
+    if entry is None:
+        return {"flops": 0.0, "traffic_bytes": 0.0,
+                "coll_bytes_by_op": {}, "coll_counts": {},
+                "coll_bytes": 0.0, "loops": []}
+
+    # op name -> (result type, opcode, first operand) for byte lookup and
+    # convert/copy chain resolution. XLA-CPU has no native bf16: it inserts
+    # convert-to-f32 around every dot, doubling apparent bytes. On the TPU
+    # target those converts do not exist, so we resolve operands through
+    # convert/copy chains to the source tensor's true width.
+    shapes = {}
+    op_info = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m:
+                name, rtype, opcode, operands = m.groups()
+                shapes[name] = rtype
+                first = _OPERAND_RE.match(operands.strip())
+                op_info[name] = (opcode, first.group(1) if first else None)
+
+    def _resolve_bytes(name: str) -> int:
+        """Bytes of `name`, looking through convert/copy/bitcast chains."""
+        for _ in range(4):
+            info = op_info.get(name)
+            if info is None or info[0] not in ("convert", "copy", "bitcast"):
+                break
+            if info[1] is None:
+                break
+            name = info[1]
+        return _shape_bytes(shapes.get(name, ""))
+
+    # Per-fused-computation: parameters consumed ONLY via dynamic-slice
+    # (possibly through bitcast/convert/copy/reshape chains) read a slice
+    # per call, not the full tensor — e.g. a layer scan slicing this layer's
+    # weights from the stacked [L, ...] buffer. param_access[comp][i] =
+    # sliced bytes per call.
+    _PASSTHROUGH = ("bitcast", "convert", "copy", "reshape")
+    param_access = {}
+    pnum_re = re.compile(r"parameter\((\d+)\)")
+    for comp, lines in comps.items():
+        local = {}         # op name -> (opcode, [operand names], rtype)
+        param_of = {}      # op name -> parameter index
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, rtype, opcode, operands = m.groups()
+            local[name] = (opcode, _OPERAND_RE.findall(operands), rtype)
+            if opcode == "parameter":
+                pm = pnum_re.search(line)
+                if pm:
+                    param_of[name] = int(pm.group(1))
+        consumers = defaultdict(list)
+        for name, (opcode, refs, rtype) in local.items():
+            for i, r in enumerate(refs):
+                consumers[r].append((name, i))
+
+        def access_bytes(op_name, depth=0):
+            """(sliced_bytes, is_full) walking consumer chains."""
+            total, full = 0, False
+            for cname, pos in consumers.get(op_name, []):
+                copcode, _, crtype = local[cname]
+                if copcode == "dynamic-slice" and pos == 0:
+                    total += _shape_bytes(crtype)
+                elif copcode == "dynamic-update-slice" and pos == 0:
+                    pass   # buffer aliases in place
+                elif copcode in _PASSTHROUGH and depth < 6:
+                    t, f = access_bytes(cname, depth + 1)
+                    total += t
+                    full = full or f
+                else:
+                    full = True
+            return total, full
+
+        acc = {}
+        for pname, pi in param_of.items():
+            t, f = access_bytes(pname)
+            if not f and t > 0:
+                acc[pi] = t
+        param_access[comp] = acc
+
+    _FUSION_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+
+    # fused computations that only change dtype/layout (parameter + convert/
+    # bitcast/copy/reshape) — CPU-backend artifacts, skipped like converts
+    pure_convert_comps = set()
+    for comp, lines in comps.items():
+        ok, n_ops = True, 0
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            if m.group(3) == "parameter":
+                continue
+            n_ops += 1
+            if m.group(3) not in ("convert", "bitcast", "copy", "reshape",
+                                  "transpose"):
+                ok = False
+                break
+        if ok and n_ops:
+            pure_convert_comps.add(comp)
+
+    # multiplier propagation (iterative DFS over call edges)
+    mult = defaultdict(float)
+    traffic_comp = set()
+    loops = []
+
+    def visit(comp: str, m: float, count_traffic: bool):
+        mult[comp] += m
+        if count_traffic:
+            traffic_comp.add(comp)
+        for line in comps.get(comp, []):
+            om = _OP_RE.match(line)
+            trip = 1.0
+            if om and om.group(3) == "while":
+                t = _TRIP_RE.search(line)
+                if t:
+                    trip = float(t.group(1))
+                    loops.append({"comp": comp, "trip": int(trip)})
+            for cre in _CALLEE_RES:
+                cm = cre.search(line)
+                if not cm:
+                    continue
+                names = [n.strip().lstrip("%") for n in
+                         cm.group(1).split(",")]
+                for name in names:
+                    if name in comps:
+                        child_m = m * (trip if "body=" in cre.pattern or
+                                       "condition=" in cre.pattern else 1.0)
+                        # fusion interiors don't touch HBM
+                        child_traffic = count_traffic and "calls=" not in \
+                            cre.pattern and "to_apply=" not in cre.pattern
+                        visit(name, child_m, child_traffic)
+
+    visit(entry, 1.0, True)
+
+    flops = 0.0
+    traffic = 0.0
+    coll = defaultdict(float)
+    counts = defaultdict(int)
+    for comp, lines in comps.items():
+        m = mult.get(comp, 0.0)
+        if m <= 0:
+            continue
+        in_traffic = comp in traffic_comp
+        for line in lines:
+            om = _OP_RE.match(line)
+            if not om:
+                continue
+            name, rtype, opcode, operands = om.groups()
+            # --- dot FLOPs ---
+            if opcode == "dot":
+                rdims, rn = _first_shape_dims(rtype)
+                cdim_m = _CONTRACT_RE.search(line)
+                csize = 1
+                ops = _OPERAND_RE.findall(operands)
+                if cdim_m and ops:
+                    lhs_dims, _ = _first_shape_dims(shapes.get(ops[0], ""))
+                    if lhs_dims is not None and cdim_m.group(1):
+                        for ci in cdim_m.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(lhs_dims):
+                                csize *= lhs_dims[ci]
+                flops += m * 2.0 * rn * csize
+            if opcode in ("convolution",):
+                rdims, rn = _first_shape_dims(rtype)
+                flops += m * 2.0 * rn  # coarse lower bound
+            # --- collective bytes ---
+            base_op = opcode.replace("-start", "")
+            if base_op in ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute"):
+                rb = _shape_bytes(rtype)
+                ops_ = _OPERAND_RE.findall(operands)
+                if ops_:
+                    src = _resolve_bytes(ops_[0])
+                    rb = min(rb, max(src, rb // 2) if src else rb)
+                n = max(_group_size(line, n_devices), 1)
+                ring = (n - 1) / n
+                if base_op == "all-gather":
+                    moved = ring * rb
+                elif base_op == "reduce-scatter":
+                    moved = ring * rb * n
+                elif base_op == "all-reduce":
+                    moved = 2 * ring * rb
+                elif base_op == "all-to-all":
+                    moved = ring * rb
+                else:
+                    moved = rb
+                coll[base_op] += m * moved
+                counts[base_op] += 1
+            # --- HBM traffic (fusion-boundary convention; converts/copies
+            # are CPU-backend artifacts and excluded) ---
+            if in_traffic and opcode not in _SKIP_TRAFFIC \
+                    and opcode not in ("convert", "copy"):
+                ops_list = _OPERAND_RE.findall(operands)
+                # In-place slice updates (dynamic-update-slice / scatter,
+                # either standalone or as a fusion root — XLA names fusions
+                # after their root op): the carried buffer aliases in place,
+                # so traffic is the small update + written slice, NOT the
+                # whole buffer per loop iteration.
+                is_slice_update = (opcode in ("dynamic-update-slice",
+                                              "scatter")
+                                   or "dynamic-update-slice" in name
+                                   or "scatter" in name)
+                if is_slice_update and ops_list:
+                    op_bytes = [_resolve_bytes(o) for o in ops_list]
+                    b = 2 * max(0, sum(op_bytes) - max(op_bytes))
+                elif opcode == "dynamic-slice" or "dynamic-slice" in name:
+                    b = 2 * _shape_bytes(rtype)   # read + write the slice
+                else:
+                    b = _shape_bytes(rtype)
+                    access = {}
+                    if opcode == "fusion":
+                        cm = _FUSION_CALLS_RE.search(line)
+                        if cm:
+                            if cm.group(1) in pure_convert_comps:
+                                continue
+                            access = param_access.get(cm.group(1), {})
+                    for i, op_name in enumerate(ops_list):
+                        b += access[i] if i in access \
+                            else _resolve_bytes(op_name)
+                traffic += m * b
+
+    return {"flops": flops, "traffic_bytes": traffic,
+            "coll_bytes_by_op": dict(coll), "coll_counts": dict(counts),
+            "coll_bytes": sum(coll.values()), "loops": loops}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    model_flops: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_flop_ratio: float = 0.0
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.flops_per_device / PEAK_FLOPS
+        self.memory_s = self.bytes_per_device / HBM_BW
+        self.collective_s = self.coll_bytes_per_device / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        global_flops = self.flops_per_device * self.chips
+        self.useful_flop_ratio = (self.model_flops / global_flops
+                                  if global_flops else 0.0)
+        return self
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for forward-only (N = active
+    params for MoE), D = total tokens processed (1/step for decode)."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * global_batch
+
+
+def summarize(report: RooflineReport) -> str:
+    r = report
+    return (f"{r.arch:24s} {r.shape:12s} {r.mesh:10s} "
+            f"compute {r.compute_s * 1e3:9.3f} ms | "
+            f"memory {r.memory_s * 1e3:9.3f} ms | "
+            f"collective {r.collective_s * 1e3:9.3f} ms | "
+            f"dominant {r.dominant:10s} | useful {r.useful_flop_ratio:6.1%}")

@@ -1,0 +1,82 @@
+"""Serving launcher — BuddyMoE engine over a trained (or random) checkpoint.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v2-lite-buddy \
+        --reduced --cache-rate 0.5 --policy buddy --steps 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, get_reduced
+from repro.core import BuddyPolicy, CoactivationRecorder, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+
+def profile_buddies(cfg, params, lm, *, steps: int = 4, batch: int = 4,
+                    seq: int = 64, alpha: float = 0.9, k_max: int = 8):
+    """Offline phase: router traces -> co-activation -> CFT buddy lists."""
+    import jax.numpy as jnp
+    n_moe = sum(r for k, r in cfg.stack() if k == "attn_moe")
+    rec = CoactivationRecorder(n_moe, cfg.moe.num_experts)
+    fwd = jax.jit(lambda p, t: transformer.forward_train(p, cfg, t, record=True))
+    for _ in range(steps):
+        toks = jnp.asarray(lm.sample(batch, seq))
+        _, aux = fwd(params, toks)
+        per = aux["recorded"][0]
+        for l in range(n_moe):
+            rec.update(l, np.asarray(per["indices"][l]),
+                       np.asarray(per["probs"][l]))
+        rec.step_done()
+    q = np.stack([rec.conditional(l) for l in range(n_moe)])
+    return build_buddy_lists(q, alpha=alpha, k_max=k_max, activity=rec.A), rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-buddy")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--cache-rate", type=float, default=0.5)
+    ap.add_argument("--policy", choices=["buddy", "random", "none"],
+                    default="buddy")
+    ap.add_argument("--tau", type=float, default=0.2)
+    ap.add_argument("--beta", type=float, default=0.8)
+    ap.add_argument("--rho", type=int, default=3)
+    ap.add_argument("--alpha", type=float, default=0.9)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    assert cfg.is_moe, "serving engine targets MoE archs"
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    if args.checkpoint:
+        from repro.checkpoint.io import load_pytree
+        params = load_pytree(args.checkpoint, params)
+
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    tables, _ = profile_buddies(cfg, params, lm, alpha=args.alpha)
+    n_moe = sum(r for k, r in cfg.stack() if k == "attn_moe")
+    cache = ExpertCache(n_moe, cfg.moe.num_experts, args.cache_rate)
+    policy = BuddyPolicy(tau=args.tau, beta=args.beta, rho=args.rho,
+                         mode=args.policy)
+    eng = ServeEngine(cfg, params, tables=tables, policy=policy, cache=cache,
+                      predictor=PrevStepPredictor(n_moe, cfg.moe.num_experts),
+                      prefetch_k=max(1, cache.capacity // 2))
+    prompts = lm.sample(args.batch, 8)
+    out = eng.generate(prompts, max_new_tokens=args.steps)
+    print(json.dumps(eng.summary(), indent=1, default=str))
+    print("sample output tokens:", out[0, -16:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Sharding rules: logical-axis rules for activations + per-parameter
+PartitionSpecs derived from tree paths.
+
+Baseline layout (see DESIGN.md §3):
+  * batch        -> data (x pod)
+  * TP features  -> model: attention heads / d_ff / vocab; experts are
+    tensor-parallel over d_ff (divides 16 for every assigned arch)
+  * expert FSDP  -> optionally shard expert d_model over data (the two
+    Mixtrals: 2D-sharded expert weights so params fit 16 GB/chip HBM)
+
+Head counts that do not divide the model axis (smollm: 15 q-heads) rely on
+GSPMD padding — lowering succeeds; noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.common import axis_rules
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingProfile:
+    multi_pod: bool = False
+    fsdp_experts: bool = False      # shard expert d_model over data axis
+    fsdp_dense: bool = False        # shard dense ffn / attn over data too
+    shard_vocab: bool = True
+    cache_layout: str = "auto"      # 'auto' (heads/hd) | 'seq' (§Perf it. 2)
+
+    @property
+    def batch(self):
+        return ("pod", "data") if self.multi_pod else "data"
+
+    @property
+    def fsdp_axis(self):
+        return "data"
+
+
+def profile_for(cfg: ModelConfig, multi_pod: bool = False,
+                train: bool = False) -> ShardingProfile:
+    # The two Mixtrals need 2D (FSDP x TP) weight sharding to fit optimizer
+    # state + params in HBM when TRAINING. At inference FSDP conflicts with
+    # batch data-parallelism (the contraction dim and the batch want the same
+    # mesh axis -> giant all-reduces), so serve paths use pure TP; the
+    # resulting >HBM footprint for mixtral-8x22b decode is exactly the
+    # memory-constrained regime BuddyMoE's expert offloading targets
+    # (DESIGN.md (TP) / EXPERIMENTS.md notes).
+    fsdp = train and cfg.arch_id.startswith("mixtral")
+    # Decode KV-cache layout, chosen per-arch by A/B dry-runs (§Perf
+    # iteration 2): sequence-sharding wins when kv_heads don't divide the
+    # model axis AND the step is collective-bound under head/hd sharding
+    # (internlm2-*: 507->1.9ms, phi3: 513->1.3ms collective). It REGRESSES
+    # smollm (small cache), mixtral (SWA window cache) and the nested
+    # zamba2/vlm caches — those keep 'auto'.
+    seq_cache_archs = ("internlm2-1.8b", "internlm2-20b", "phi3-medium-14b")
+    layout = "seq" if cfg.arch_id in seq_cache_archs else "auto"
+    return ShardingProfile(multi_pod=multi_pod, fsdp_experts=fsdp,
+                           fsdp_dense=fsdp, cache_layout=layout)
+
+
+def activation_rules(prof: ShardingProfile, cfg: Optional[ModelConfig] = None,
+                     model_size: int = 16) -> dict:
+    """cache layout (prof.cache_layout):
+      'auto' — shard kv-head axis when it divides `model`, else head_dim.
+      'seq'  — shard the cache SEQUENCE axis over `model` (decode context
+               parallelism): attention scores/outputs reduce over the
+               sharded axis with tiny softmax-stat collectives instead of
+               gathering the cache. §Perf iteration 2.
+    The cache update in attn_decode is constrained to the SAME layout so the
+    dynamic-update-slice stays collective-free."""
+    rules = {
+        "batch": prof.batch,
+        "heads": "model",
+        "kv_heads": "model",
+        "dff": "model",
+        "vocab": "model" if prof.shard_vocab else None,
+        "expert": None,
+        "cache_heads": None,
+        "cache_hd": None,
+        "cache_seq": None,
+    }
+    if cfg is not None:
+        if prof.cache_layout == "seq":
+            rules["cache_seq"] = "model"
+        elif cfg.num_kv_heads % model_size == 0:
+            rules["cache_heads"] = "model"
+        elif cfg.head_dim % model_size == 0:
+            rules["cache_hd"] = "model"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+_OUT_FEATURE = ("wq", "wk", "wv", "wg", "ww", "wr", "w1", "w3", "ck",
+                "in_proj", "conv_w")
+_IN_FEATURE = ("wo", "w2", "cv", "out_proj")
+
+
+def _base_spec(path: str, name: str, ndim: int, prof: ShardingProfile):
+    fsdp = prof.fsdp_axis if prof.fsdp_dense else None
+    if name == "embed":
+        # d_model-sharded: the token gather stays local (a row-sharded table
+        # makes GSPMD emit one-hot matmul gathers + giant all-reduces)
+        return (None, "model")
+    if name == "lm_head":
+        return (None, "model" if prof.shard_vocab else None)
+    if "/moe/" in path:
+        efsdp = prof.fsdp_axis if prof.fsdp_experts else None
+        if name in ("w1", "w3"):
+            return (None, efsdp, "model")        # [E, D, F]
+        if name == "w2":
+            return (None, "model", efsdp)        # [E, F, D]
+        if name == "router":
+            return (None, None)
+    if "/shared/" in path:
+        if name in ("w1", "w3"):
+            return (fsdp, "model")
+        if name == "w2":
+            return ("model", fsdp)
+    if name == "u":
+        return ("model", None)                   # rwkv bonus [H, hd]
+    if name in _OUT_FEATURE:
+        return (fsdp, "model")
+    if name in _IN_FEATURE:
+        return ("model", fsdp)
+    if name == "cr":
+        return (None, None)
+    return None                                   # replicate
+
+
+def param_specs(cfg: ModelConfig, params_shape, prof: ShardingProfile):
+    """PartitionSpec pytree matching params (works on ShapeDtypeStructs)."""
+    def spec(path_elems, leaf):
+        path = "/" + "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                              for p in path_elems) + "/"
+        name = str(getattr(path_elems[-1], "key", path_elems[-1]))
+        base = _base_spec(path, name, leaf.ndim, prof)
+        if base is None:
+            return P()
+        base = [b for b in base]
+        pad = leaf.ndim - len(base)
+        if pad < 0:   # 1-D leaf matched a 2-D rule — replicate
+            return P()
+        return P(*([None] * pad + base))
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axes]
+
+
+def sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes from dims they do not evenly divide (jit in_shardings
+    require exact divisibility — unlike internal sharding constraints)."""
+    out = []
+    for i, axes in enumerate(spec):
+        if axes is None or i >= len(shape):
+            out.append(axes)
+            continue
+        if isinstance(axes, (tuple, list)):
+            kept, size = [], 1
+            for a in axes:
+                if shape[i] % (size * mesh.shape[a]) == 0:
+                    kept.append(a)
+                    size *= mesh.shape[a]
+            out.append(tuple(kept) if len(kept) > 1 else
+                       (kept[0] if kept else None))
+        else:
+            out.append(axes if shape[i] % mesh.shape[axes] == 0 else None)
+    return P(*out)
+
+
+def sanitize_specs(spec_tree, struct_tree, mesh):
+    """Pairwise sanitize a spec pytree against a ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, mesh), spec_tree, struct_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+def token_spec(prof: ShardingProfile) -> P:
+    return P(prof.batch, None)
+
+
+def cache_specs(cache_shapes, prof: ShardingProfile):
+    """Decode caches: shard batch dim. Cache leaves all have the batch at
+    axis 1 (after the stacked-layer axis); ssm 'conv'/'ssm'/'wkv'/'x_*' too.
+    Leaves under hybrid supers have an extra leading axis — detected by ndim
+    heuristics is brittle, so we shard the axis whose size equals the batch
+    via a marker: we instead rebuild specs structurally in dryrun (knowing
+    batch), here we just map: first axis None, batch axis = 1 or 2."""
+    raise NotImplementedError("use dryrun._cache_specs")
+
+
+def apply_rules(prof: ShardingProfile):
+    return axis_rules(activation_rules(prof))

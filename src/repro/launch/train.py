@@ -1,0 +1,46 @@
+"""Training launcher.
+
+CPU-scale run (this container):
+    PYTHONPATH=src python -m repro.launch.train --arch deepseek-v2-lite-buddy \
+        --reduced --steps 200 --batch 8 --seq 64
+
+On a real pod the same module launches with --mesh 16x16 and the full config;
+the dry-run (launch/dryrun.py) proves that path lowers and compiles.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import get_config, get_reduced
+from repro.training.data import MarkovLM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-buddy")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--save", default=None)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    opt = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(10, args.steps // 10))
+    params, hist = train(cfg, opt, lm.batches(args.batch, args.seq, args.steps))
+    if args.save:
+        from repro.checkpoint.io import save_pytree
+        save_pytree(args.save, params)
+        print(f"saved params to {args.save}")
+    print(f"final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,210 @@
+"""Attention: GQA + RoPE, causal/sliding-window, flash-style chunking,
+ring-buffer KV cache for decode, and cross-attention (VLM image layers).
+
+Shapes: x [B, S, D]; q [B, S, H, hd]; k,v [B, S, KV, hd]; GQA group g = H//KV.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope, dense_init, shard
+
+NEG_INF = -1e30
+
+
+def init_attn(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, num_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, num_kv_heads * head_dim, dtype),
+        "wv": dense_init(kv, d_model, num_kv_heads * head_dim, dtype),
+        "wo": dense_init(ko, num_heads * head_dim, d_model, dtype),
+    }
+
+
+def _project_qkv(params, x, x_kv, num_heads, num_kv_heads, head_dim):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, s, num_heads, head_dim)
+    skv = x_kv.shape[1]
+    k = jnp.einsum("bsd,dh->bsh", x_kv, params["wk"]).reshape(b, skv, num_kv_heads, head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x_kv, params["wv"]).reshape(b, skv, num_kv_heads, head_dim)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _flash_attend(q, k, v, q_offset: int, *, causal: bool, window: int,
+                  q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax attention, chunked over q (lax.map) and kv (lax.scan).
+
+    q: [B, Sq, H, hd]; k, v: [B, Skv, KV, hd]. Returns [B, Sq, H, hd].
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill: 0 with
+    Sq == Skv). ``window`` 0 = unbounded.
+    """
+    b, sq, h, hd = q.shape
+    skv, kv_h = k.shape[1], k.shape[2]
+    g = h // kv_h
+    scale = hd ** -0.5
+
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    # pad to multiples
+    pad_q = (-sq) % q_chunk
+    pad_kv = (-skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nkv = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+
+    qp = qp.reshape(b, nq, q_chunk, kv_h, g, hd)
+    kp = kp.reshape(b, nkv, kv_chunk, kv_h, hd)
+    vp = vp.reshape(b, nkv, kv_chunk, kv_h, hd)
+    kv_pos = jnp.arange(nkv * kv_chunk).reshape(nkv, kv_chunk)
+    kv_valid = kv_pos < skv
+
+    def per_q_chunk(args):
+        qi, q_blk = args                              # q_blk [B, qc, KV, g, hd]
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry                         # acc [B,qc,KV,g,hd]; m,l [B,qc,KV,g]
+            k_blk, v_blk, kpos, kval = inp
+            s = jnp.einsum("bqkgh,bckh->bqkgc", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = kval[None, :]
+            if causal:
+                mask = mask & (kpos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (kpos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckh->bqkgh", p, v_blk.astype(jnp.float32))
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, q_chunk, kv_h, g, hd), jnp.float32)
+        m0 = jnp.full((b, q_chunk, kv_h, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kv_h, g), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (kp.swapaxes(0, 1), vp.swapaxes(0, 1), kv_pos, kv_valid))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    out = jax.lax.map(per_q_chunk, (jnp.arange(nq), qp.swapaxes(0, 1)))
+    out = out.swapaxes(0, 1).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def attn_forward(params, x, positions, *, num_heads, num_kv_heads, head_dim,
+                 rope_theta, window: int = 0, cross_embeds: Optional[jax.Array] = None,
+                 return_kv: bool = False):
+    """Full-sequence attention (train / prefill).
+
+    cross_embeds: [B, Nc, D] -> cross-attention (no RoPE on k, no mask).
+    """
+    cross = cross_embeds is not None
+    x_kv = cross_embeds if cross else x
+    q, k, v = _project_qkv(params, x, x_kv, num_heads, num_kv_heads, head_dim)
+    if not cross:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    out = _flash_attend(q, k, v, 0, causal=not cross, window=0 if cross else window)
+    b, s = x.shape[:2]
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, num_heads * head_dim),
+                   params["wo"]).astype(x.dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+def init_kv_cache(batch: int, capacity: int, num_kv_heads: int, head_dim: int,
+                  dtype) -> dict:
+    return {
+        "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+    }
+
+
+def attn_decode(params, x_tok, cache, pos, *, num_heads, num_kv_heads, head_dim,
+                rope_theta, window: int = 0,
+                cross_kv: Optional[tuple] = None):
+    """One decode step. x_tok [B, 1, D]; cache k/v [B, C, KV, hd]; pos scalar
+    (absolute position of the new token). Ring-buffer write at pos % C.
+    Returns (y [B, 1, D], new_cache).
+    """
+    if cross_kv is not None:
+        k, v = cross_kv
+        b = x_tok.shape[0]
+        q = jnp.einsum("bsd,dh->bsh", x_tok, params["wq"]).reshape(
+            b, 1, num_heads, head_dim)
+        out = _attend_single(q, k, v, None, None, 0, 0)
+        y = jnp.einsum("bsh,hd->bsd", out.reshape(b, 1, num_heads * head_dim),
+                       params["wo"]).astype(x_tok.dtype)
+        return y, cache
+
+    b = x_tok.shape[0]
+    cap = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(params, x_tok, x_tok, num_heads,
+                                   num_kv_heads, head_dim)
+    pos_arr = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos[None]
+    q = apply_rope(q, jnp.broadcast_to(pos_arr, (b, 1)), rope_theta)
+    k_new = apply_rope(k_new, jnp.broadcast_to(pos_arr, (b, 1)), rope_theta)
+    # match the cache layout so the update is collective-free
+    k_new = shard(k_new, "batch", None, "cache_heads", "cache_hd")
+    v_new = shard(v_new, "batch", None, "cache_heads", "cache_hd")
+    slot = jnp.asarray(pos % cap, jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+
+    # Absolute position of each cache slot given the ring buffer has wrapped
+    # floor((pos - slot_idx)/cap)*cap + slot_idx -> latest write <= pos.
+    idx = jnp.arange(cap)
+    abs_pos = pos - ((pos - idx) % cap)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if window:
+        valid = valid & (abs_pos > pos - window)
+
+    out = _attend_single(q, k_cache, v_cache, valid, None, num_kv_heads, head_dim)
+    # 4-D output projection: contract (kv, g, hd) with wo reshaped to
+    # [KV, g, hd, D] and hd sharded like the cache — keeps the whole
+    # attention hd-sharded so GSPMD never gathers the KV cache (§Perf B7);
+    # the residual all-reduce is just [B, 1, D].
+    g = num_heads // num_kv_heads
+    d_model = params["wo"].shape[1]
+    wo4 = params["wo"].reshape(num_kv_heads, g, head_dim, d_model)
+    wo4 = shard(wo4, "cache_heads", None, "cache_hd", None)
+    out4 = out.reshape(b, 1, num_kv_heads, g, head_dim)
+    y = jnp.einsum("bqkgh,kghd->bqd", out4, wo4,
+                   preferred_element_type=jnp.float32).astype(x_tok.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _attend_single(q, k, v, valid, _unused, num_kv_heads, head_dim):
+    """q [B,1,H,hd] vs full cache k,v [B,C,KV,hd] (single einsum, no chunking)."""
+    b, _, h, hd = q.shape
+    kv_h = k.shape[2]
+    g = h // kv_h
+    qg = q.reshape(b, 1, kv_h, g, hd)
+    qg = shard(qg, "batch", None, "cache_heads", None, "cache_hd")
+    s = jnp.einsum("bqkgh,bckh->bkgc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    # scores carry no head_dim axis: pin their layout so a head_dim-sharded
+    # cache contracts via partial-sum + small all-reduce instead of an
+    # all-gather of the whole KV cache (§Perf iteration: mixtral decode)
+    s = shard(s, "batch", "cache_heads", None, "cache_seq")
+    if valid is not None:
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckh->bkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -1,0 +1,231 @@
+"""MoE layer: top-k router, capacity-based dispatch, expert SwiGLU compute,
+and the BuddyMoE substitution hook (the paper's runtime layer between the
+router and expert execution, §3.4).
+
+Expert parallelism model: experts are tensor-parallel over the `model` mesh
+axis (d_ff sharded); tokens are data-parallel. Dispatch is therefore local to
+each data shard — no all-to-all on the baseline path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core.policy import BuddyPolicy
+from repro.core.substitute import SubstituteResult, substitute
+from repro.models.common import dense_init, shard, swiglu
+
+
+class BuddyState(NamedTuple):
+    """Per-layer runtime state for BuddyMoE (all replicated, tiny)."""
+    resident: jax.Array   # [E] bool — GPU residency mask M
+    table: jax.Array      # [E, R] int32 — buddy profile B (rank-ordered, -1 pad)
+    q: jax.Array          # [E, R] f32 — q_{j|i} per entry
+    hop: jax.Array        # [E] int32 — ICI hops to each expert's cache slot
+
+
+def full_residency(num_experts: int, r_max: int = 8) -> BuddyState:
+    return BuddyState(
+        resident=jnp.ones((num_experts,), bool),
+        table=jnp.full((num_experts, r_max), -1, jnp.int32),
+        q=jnp.zeros((num_experts, r_max), jnp.float32),
+        hop=jnp.zeros((num_experts,), jnp.int32),
+    )
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, dtype) -> dict:
+    kr, k1, k3, k2, ks = jax.random.split(key, 5)
+    e, f = cfg.num_experts, cfg.d_ff
+    if cfg.upcycle_noise > 0:
+        # sparse upcycling: shared base FFN + per-expert perturbation
+        n = cfg.upcycle_noise
+
+        def up(k, shape_in, shape_out, transpose=False):
+            base = dense_init(jax.random.fold_in(k, 0), shape_in, shape_out,
+                              jnp.float32)
+            noise = jax.random.normal(jax.random.fold_in(k, 1),
+                                      (e, shape_in, shape_out)) \
+                * n * (2.0 / (shape_in + shape_out)) ** 0.5
+            return (base[None] + noise).astype(dtype)
+
+        p = {
+            "router": dense_init(kr, d_model, e, jnp.float32),
+            "w1": up(k1, d_model, f),
+            "w3": up(k3, d_model, f),
+            "w2": up(k2, f, d_model),
+        }
+    else:
+        p = {
+            "router": dense_init(kr, d_model, e, jnp.float32),
+            "w1": dense_init(k1, d_model, e * f, dtype).reshape(d_model, e, f).transpose(1, 0, 2),
+            "w3": dense_init(k3, d_model, e * f, dtype).reshape(d_model, e, f).transpose(1, 0, 2),
+            "w2": dense_init(k2, e * f, d_model, dtype).reshape(e, f, d_model),
+        }
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff * cfg.num_shared_experts
+        a, b, c = jax.random.split(ks, 3)
+        p["shared"] = {
+            "w1": dense_init(a, d_model, fs, dtype),
+            "w3": dense_init(b, d_model, fs, dtype),
+            "w2": dense_init(c, fs, d_model, dtype),
+        }
+    return p
+
+
+class MoEAux(NamedTuple):
+    lb_loss: jax.Array        # scalar load-balance loss (Switch-style)
+    indices: jax.Array        # [T, K] final expert assignment (post-substitution)
+    orig_indices: jax.Array   # [T, K] router's assignment
+    topk_probs: jax.Array     # [T, K] renormalized probs
+    n_substituted: jax.Array  # [] substituted slots
+    n_missed: jax.Array       # [] non-resident slots with no buddy
+    n_dropped: jax.Array      # [] tokens dropped by capacity
+    miss_per_expert: jax.Array  # [E] miss counts (-> fetch bytes in the ledger)
+
+
+def router_topk(router_w, x_flat, top_k: int, jitter_key=None, jitter=0.0):
+    """Returns logits [T, E], topk indices [T, K], topk logits, renorm probs."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    if jitter_key is not None and jitter > 0:
+        logits = logits + jax.random.uniform(
+            jitter_key, logits.shape, minval=-jitter, maxval=jitter)
+    topk_logits, topk_idx = jax.lax.top_k(logits, top_k)
+    probs = jax.nn.softmax(topk_logits, axis=-1)       # renormalized over S
+    return logits, topk_idx.astype(jnp.int32), topk_logits, probs
+
+
+def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
+                policy: Optional[BuddyPolicy] = None,
+                buddy: Optional[BuddyState] = None,
+                capacity_factor: float = 1.25,
+                jitter_key=None,
+                use_kernel: bool = False) -> tuple:
+    """x: [B, S, D] (or [T, D]). Returns (y, MoEAux)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x_flat = x.reshape(-1, d)
+    t_n = x_flat.shape[0]
+    e_n, k_n = cfg.num_experts, cfg.top_k
+
+    logits, idx, topk_logits, probs = router_topk(
+        params["router"], x_flat, k_n, jitter_key, cfg.router_jitter)
+
+    # ---------------- BuddyMoE substitution (Alg. 1) ----------------
+    if policy is not None and buddy is not None and policy.mode != "none":
+        res: SubstituteResult = substitute(
+            idx, topk_logits, buddy.resident, buddy.table, buddy.q, policy,
+            router_logits=logits, hop=buddy.hop)
+        new_idx, substituted, missed = res.indices, res.substituted, res.missed
+    elif buddy is not None:
+        missed = ~buddy.resident[idx]
+        new_idx = idx
+        substituted = jnp.zeros_like(missed)
+    else:
+        new_idx = idx
+        substituted = jnp.zeros(idx.shape, bool)
+        missed = jnp.zeros(idx.shape, bool)
+
+    weights = probs
+    if policy is not None and policy.fallback == "drop":
+        # missed slots are skipped; renormalize over the surviving set
+        weights = jnp.where(missed, 0.0, weights)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # ---------------- active-expert gather (tiny-batch decode) -----------
+    # When the whole batch selects fewer expert-slots than there are experts
+    # (long-context decode, B*K < E), gathering the selected experts' weight
+    # rows reads only the ACTIVE experts from HBM — the dense dispatch path
+    # below streams all E experts' weights every step. §Perf iteration 6.
+    if x.ndim == 3 and x.shape[1] == 1 and t_n * k_n < e_n:
+        e_flat = new_idx.reshape(-1)                               # [T*K]
+        w1s = params["w1"][e_flat]                                 # [T*K, D, F]
+        w3s = params["w3"][e_flat]
+        w2s = params["w2"][e_flat]
+        xr = jnp.repeat(x_flat, k_n, axis=0)                       # [T*K, D]
+        h = jax.nn.silu(jnp.einsum("td,tdf->tf", xr, w1s,
+                                   preferred_element_type=jnp.float32))
+        g = jnp.einsum("td,tdf->tf", xr, w3s,
+                       preferred_element_type=jnp.float32)
+        hg = (h * g).astype(x.dtype)
+        hg = shard(hg, None, "dff")
+        y_rep = jnp.einsum("tf,tfd->td", hg, w2s,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        y = (y_rep.reshape(t_n, k_n, d)
+             * weights[..., None].astype(x.dtype)).sum(1)
+        if cfg.num_shared_experts and "shared" in params:
+            y = y + swiglu(x_flat, params["shared"]["w1"],
+                           params["shared"]["w3"], params["shared"]["w2"])
+        p_mean = jax.nn.softmax(logits, axis=-1).mean(0)
+        onehot_f = jax.nn.one_hot(e_flat, e_n, dtype=jnp.float32)
+        f_frac = onehot_f.reshape(t_n, k_n, e_n).sum(1).mean(0)
+        lb = e_n * jnp.sum(f_frac * p_mean)
+        miss_per_expert = jnp.zeros((e_n,), jnp.int32).at[idx.reshape(-1)].add(
+            missed.reshape(-1).astype(jnp.int32))
+        aux = MoEAux(lb, new_idx, idx, probs, substituted.sum(), missed.sum(),
+                     jnp.zeros((), jnp.int32), miss_per_expert)
+        return y.reshape(orig_shape), aux
+
+    # ---------------- capacity-based dispatch (row-local) ----------------
+    # Dispatch independently per batch row so that with the batch sharded
+    # over `data` the scatter/gather and expert compute are collective-free
+    # (tokens never cross data shards; experts are TP-sharded on d_ff).
+    rows = x.shape[0] if x.ndim == 3 else 1
+    s_n = t_n // rows
+    row_e = new_idx.reshape(rows, s_n * k_n)                        # [B, S*K]
+    onehot = jax.nn.one_hot(row_e, e_n, dtype=jnp.float32)          # [B, S*K, E]
+    pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1).astype(jnp.int32) - 1
+    cap = int(max(k_n, s_n * k_n / e_n * capacity_factor))
+    cap = min(s_n * k_n, -(-cap // 8) * 8)
+    kept = pos < cap
+    n_dropped = (~kept).sum()
+    pos_safe = jnp.where(kept, pos, cap)                            # cap -> dropped
+
+    x_rep = jnp.repeat(x_flat.reshape(rows, s_n, d), k_n, axis=1)   # [B, S*K, D]
+
+    def _row_scatter(xr, er, pr):
+        return jnp.zeros((e_n, cap, d), x.dtype).at[er, pr].set(xr, mode="drop")
+
+    # vmap -> scatter with operand batching dims: GSPMD keeps it data-local
+    buf = jax.vmap(_row_scatter)(x_rep, row_e, pos_safe)            # [B, E, C, D]
+    buf = shard(buf, "batch", "expert", None, None)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        flat = buf.transpose(1, 0, 2, 3).reshape(e_n, rows * cap, d)
+        out = kops.expert_ffn(flat, params["w1"], params["w3"], params["w2"])
+        out_buf = out.reshape(e_n, rows, cap, d).transpose(1, 0, 2, 3)
+    else:
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, params["w1"],
+                                   preferred_element_type=jnp.float32))
+        g = jnp.einsum("becd,edf->becf", buf, params["w3"],
+                       preferred_element_type=jnp.float32)
+        hg = (h * g).astype(x.dtype)
+        hg = shard(hg, "batch", "expert", None, "dff")
+        out_buf = jnp.einsum("becf,efd->becd", hg, params["w2"],
+                             preferred_element_type=jnp.float32).astype(x.dtype)
+
+    def _row_gather(ob, er, pr):
+        return ob.at[er, pr].get(mode="fill", fill_value=0)
+
+    y_rep = jax.vmap(_row_gather)(out_buf, row_e, pos_safe)         # [B, S*K, D]
+    y = (y_rep.reshape(t_n, k_n, d) * weights[..., None].astype(x.dtype)).sum(1)
+
+    if cfg.num_shared_experts and "shared" in params:
+        y = y + swiglu(x_flat, params["shared"]["w1"], params["shared"]["w3"],
+                       params["shared"]["w2"])
+
+    # ---------------- load-balance loss (Switch-style) ----------------
+    p_mean = jax.nn.softmax(logits, axis=-1).mean(0)               # [E]
+    f_frac = onehot.reshape(t_n, k_n, e_n).sum(1).mean(0)          # [E]
+    lb = e_n * jnp.sum(f_frac * p_mean)
+
+    miss_per_expert = jnp.zeros((e_n,), jnp.int32).at[idx.reshape(-1)].add(
+        missed.reshape(-1).astype(jnp.int32))
+
+    aux = MoEAux(lb, new_idx, idx, probs,
+                 substituted.sum(), missed.sum(), n_dropped, miss_per_expert)
+    return y.reshape(orig_shape), aux

@@ -1,0 +1,85 @@
+"""Per-layer expert cache (the GPU-resident expert set).
+
+Host-side structure: for each MoE layer a fixed number of slots
+(capacity = cache_rate * E). Eviction policies: LRU, LFU, or a frequency
+prior (EdgeMoE-style). Slots are assigned round-robin to mesh partitions so
+the topology term hop(j) in Psi (Eq. 3) has real structure.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ExpertCache:
+    def __init__(self, num_layers: int, num_experts: int, cache_rate: float,
+                 policy: str = "lru", num_partitions: int = 1, seed: int = 0):
+        assert policy in ("lru", "lfu")
+        self.num_layers = num_layers
+        self.num_experts = num_experts
+        self.capacity = max(1, int(round(cache_rate * num_experts)))
+        self.policy = policy
+        self.num_partitions = num_partitions
+        self.resident = np.zeros((num_layers, num_experts), bool)
+        self.last_used = np.zeros((num_layers, num_experts), np.int64)
+        self.freq = np.zeros((num_layers, num_experts), np.float64)
+        self.partition = np.zeros((num_layers, num_experts), np.int32)
+        self.clock = 0
+        rng = np.random.default_rng(seed)
+        for l in range(num_layers):
+            init = rng.choice(num_experts, self.capacity, replace=False)
+            self.resident[l, init] = True
+            self._assign_partitions(l)
+
+    def _assign_partitions(self, layer: int) -> None:
+        slots = np.flatnonzero(self.resident[layer])
+        for s_i, e in enumerate(slots):
+            self.partition[layer, e] = s_i % self.num_partitions
+
+    # -- queries --------------------------------------------------------
+    def residency_mask(self) -> np.ndarray:
+        return self.resident.copy()
+
+    def hop_vector(self, layer: int, origin_partition: int = 0) -> np.ndarray:
+        """ICI hops from origin to each expert's slot partition (0 if local;
+        non-resident experts get 0 — they are never eligible buddies)."""
+        p = self.partition[layer]
+        side = max(1, int(np.sqrt(self.num_partitions)))
+        dx = np.abs(p % side - origin_partition % side)
+        dy = np.abs(p // side - origin_partition // side)
+        return ((dx + dy) * self.resident[layer]).astype(np.int32)
+
+    # -- updates --------------------------------------------------------
+    def touch(self, layer: int, experts, weight: float = 1.0) -> None:
+        """Record usage (for LRU clocks / LFU frequencies)."""
+        experts = np.atleast_1d(np.asarray(experts, np.int64))
+        self.clock += 1
+        self.last_used[layer, experts] = self.clock
+        self.freq[layer, experts] += weight
+
+    def insert(self, layer: int, expert: int) -> int:
+        """Insert an expert (post-fetch); evicts per policy if full.
+        Returns the evicted expert id or -1."""
+        if self.resident[layer, expert]:
+            return -1
+        evicted = -1
+        if self.resident[layer].sum() >= self.capacity:
+            cand = np.flatnonzero(self.resident[layer])
+            if self.policy == "lru":
+                evicted = int(cand[np.argmin(self.last_used[layer, cand])])
+            else:
+                evicted = int(cand[np.argmin(self.freq[layer, cand])])
+            self.resident[layer, evicted] = False
+        self.resident[layer, expert] = True
+        self.partition[layer, expert] = (
+            int(self.resident[layer].sum()) % self.num_partitions)
+        return evicted
+
+    def prefetch_to(self, layer: int, experts) -> list:
+        """Ensure ``experts`` resident; returns list of (inserted, evicted)."""
+        out = []
+        for e in experts:
+            e = int(e)
+            if not self.resident[layer, e]:
+                ev = self.insert(layer, e)
+                out.append((e, ev))
+        return out

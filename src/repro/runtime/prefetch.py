@@ -1,0 +1,108 @@
+"""Expert prefetch predictors (§2.3 — the systems BuddyMoE complements).
+
+All predictors answer: which experts should layer l's cache hold for the next
+step? Their misses are exactly what BuddyMoE absorbs.
+
+  TopFreqPredictor   — historical activation frequency (MoE-Infinity-style).
+  PrevStepPredictor  — temporal locality: last step's experts per layer.
+  CrossLayerPredictor— gate-signal chaining (Pre-gated/Fate-style): score
+                       experts at layer l by P(e | experts used at l-1) from
+                       a profiled cross-layer co-usage matrix.
+  NoisyOraclePredictor — ground truth corrupted at rate (1-accuracy): the
+                       controllable-miss-rate harness for Table 1/2-4 sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class TopFreqPredictor:
+    def __init__(self, num_layers: int, num_experts: int, decay: float = 0.99):
+        self.freq = np.ones((num_layers, num_experts), np.float64)
+        self.decay = decay
+
+    def observe(self, layer: int, experts) -> None:
+        self.freq[layer] *= self.decay
+        np.add.at(self.freq[layer], np.asarray(experts, np.int64).reshape(-1), 1.0)
+
+    def predict(self, layer: int, k: int, rng=None) -> np.ndarray:
+        return np.argsort(-self.freq[layer])[:k]
+
+
+class PrevStepPredictor:
+    def __init__(self, num_layers: int, num_experts: int):
+        self.prev = [np.array([], np.int64) for _ in range(num_layers)]
+        self.freq = TopFreqPredictor(num_layers, num_experts)
+
+    def observe(self, layer: int, experts) -> None:
+        self.prev[layer] = np.unique(np.asarray(experts, np.int64).reshape(-1))
+        self.freq.observe(layer, experts)
+
+    def predict(self, layer: int, k: int, rng=None) -> np.ndarray:
+        p = self.prev[layer][:k]
+        if len(p) < k:   # back-fill with frequency prior
+            rest = [e for e in self.freq.predict(layer, k) if e not in p]
+            p = np.concatenate([p, np.asarray(rest[:k - len(p)], np.int64)])
+        return p
+
+
+class CrossLayerPredictor:
+    """P(expert j at layer l | expert i at layer l-1), profiled offline."""
+
+    def __init__(self, num_layers: int, num_experts: int, eps: float = 1e-3):
+        self.C = np.full((num_layers, num_experts, num_experts), eps, np.float64)
+        self.prev_set: Optional[np.ndarray] = None
+        self.freq = TopFreqPredictor(num_layers, num_experts)
+
+    def observe_transition(self, layer: int, prev_experts, cur_experts) -> None:
+        prev_experts = np.unique(np.asarray(prev_experts, np.int64).reshape(-1))
+        cur_experts = np.unique(np.asarray(cur_experts, np.int64).reshape(-1))
+        for i in prev_experts:
+            self.C[layer, i, cur_experts] += 1.0
+
+    def observe(self, layer: int, experts) -> None:
+        self.freq.observe(layer, experts)
+
+    def predict(self, layer: int, k: int, prev_experts=None, rng=None) -> np.ndarray:
+        if prev_experts is None or len(np.atleast_1d(prev_experts)) == 0 or layer == 0:
+            return self.freq.predict(layer, k)
+        prev_experts = np.unique(np.asarray(prev_experts, np.int64).reshape(-1))
+        score = self.C[layer, prev_experts].sum(axis=0)
+        return np.argsort(-score)[:k]
+
+
+class NoisyOraclePredictor:
+    """Knows the true next-step experts; corrupts each slot with prob
+    (1 - accuracy). Gives direct control of the prefetch-miss rate."""
+
+    def __init__(self, num_layers: int, num_experts: int, accuracy: float = 0.8,
+                 seed: int = 0):
+        self.num_experts = num_experts
+        self.accuracy = accuracy
+        self.truth = [np.array([], np.int64) for _ in range(num_layers)]
+        self.rng = np.random.default_rng(seed)
+
+    def set_truth(self, layer: int, experts) -> None:
+        self.truth[layer] = np.unique(np.asarray(experts, np.int64).reshape(-1))
+
+    def observe(self, layer: int, experts) -> None:
+        self.set_truth(layer, experts)
+
+    def predict(self, layer: int, k: int, rng=None) -> np.ndarray:
+        rng = rng or self.rng
+        t = self.truth[layer][:k]
+        out = []
+        for e in t:
+            if rng.random() < self.accuracy:
+                out.append(int(e))
+            else:
+                out.append(int(rng.integers(0, self.num_experts)))
+        seen = set(out)
+        while len(out) < k:
+            e = int(rng.integers(0, self.num_experts))
+            if e not in seen:
+                out.append(e)
+                seen.add(e)
+        return np.asarray(out[:k], np.int64)

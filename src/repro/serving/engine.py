@@ -1,0 +1,222 @@
+"""BuddyMoE serving engine — batched decode with an offloaded expert cache.
+
+Mirrors the paper's Fig. 3 pipeline on the simulation substrate:
+
+  step t:  jitted decode_step runs with the CURRENT residency mask; the
+           in-graph BuddyMoE layer substitutes/flags per-slot (Alg. 1 + gates)
+  between: the host cache manager (a) accounts transfers in the ledger —
+           buddy hits cost nothing, residual misses are synchronous fetches,
+           (b) feeds the predictor with this step's routing, (c) issues
+           prefetches for the next step (overlappable transfers).
+
+Timing model (CPU container — see runtime/memory.py): per-step latency =
+modeled device compute + synchronous stalls + non-overlappable prefetch excess.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.buddies import BuddyTables
+from repro.core.policy import BuddyPolicy
+from repro.models import transformer
+from repro.models.moe import BuddyState
+from repro.runtime.cache import ExpertCache
+from repro.runtime.memory import (DEFAULT_HW, HardwareModel, TransferLedger,
+                                  expert_nbytes)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: int = 0
+    tokens: int = 0
+    sim_time_s: float = 0.0
+    compute_s: float = 0.0
+    stall_s: float = 0.0
+    n_sub: int = 0
+    n_miss_fetch: int = 0
+    n_hit: int = 0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens / self.sim_time_s if self.sim_time_s else 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *,
+                 tables: Optional[BuddyTables] = None,
+                 policy: BuddyPolicy = BuddyPolicy(),
+                 cache: Optional[ExpertCache] = None,
+                 predictor=None,
+                 prefetch_k: int = 0,
+                 hw: HardwareModel = DEFAULT_HW,
+                 window: int = -1,
+                 seed: int = 0,
+                 latency_cfg: Optional[ModelConfig] = None):
+        """latency_cfg: full-scale config whose expert sizes / active params
+        drive the transfer + compute latency model (the accuracy testbed can
+        be a reduced model while latencies reflect the deployment target —
+        e.g. the real DeepSeek-V2-Lite). Defaults to cfg itself."""
+        assert cfg.is_moe, "ServeEngine's expert cache applies to MoE archs"
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.num_moe_layers = sum(r for k, r in cfg.stack() if k == "attn_moe")
+        e = cfg.moe.num_experts
+        self.cache = cache or ExpertCache(self.num_moe_layers, e, 1.0)
+        self.predictor = predictor
+        self.prefetch_k = prefetch_k
+        self.hw = hw
+        self.ledger = TransferLedger(hw)
+        self.stats = EngineStats()
+        self.window = window
+        ref_cfg = latency_cfg or cfg
+        self._expert_bytes = expert_nbytes(ref_cfg.d_model, ref_cfg.moe.d_ff)
+        self._latency_cfg = ref_cfg
+        self._key = jax.random.PRNGKey(seed)
+        self._last_used: dict = {}
+
+        if tables is None:
+            r = 8
+            self._table = np.full((self.num_moe_layers, e, r), -1, np.int32)
+            self._q = np.zeros((self.num_moe_layers, e, r), np.float32)
+        else:
+            self._table = np.asarray(tables.table)
+            self._q = np.asarray(tables.q)
+
+        self._step_fn = jax.jit(
+            functools.partial(transformer.decode_step, cfg=self.cfg,
+                              policy=self.policy, record=True,
+                              window=self.window),
+            static_argnames=())
+
+        self._compute_s = hw.decode_compute_time(
+            ref_cfg.active_param_count(), 1)
+
+    # ------------------------------------------------------------------
+    def _buddy_state(self) -> BuddyState:
+        res = self.cache.residency_mask()
+        hop = np.stack([self.cache.hop_vector(l)
+                        for l in range(self.num_moe_layers)])
+        return BuddyState(resident=jnp.asarray(res),
+                          table=jnp.asarray(self._table),
+                          q=jnp.asarray(self._q),
+                          hop=jnp.asarray(hop))
+
+    def init_caches(self, batch: int, seq_len: int):
+        return transformer.init_caches(
+            self.cfg, batch, seq_len,
+            window=0 if self.window < 0 else self.window)
+
+    # ------------------------------------------------------------------
+    def step(self, token, caches, pos):
+        """One decode step for the whole batch. token [B] int32 device array.
+        Returns (logits [B, V], new_caches)."""
+        buddies = self._buddy_state()
+        self._key, sub = jax.random.split(self._key)
+        logits, caches, aux = self._step_fn(
+            params=self.params, token=token, caches=caches,
+            pos=jnp.asarray(pos, jnp.int32), buddies=buddies, rng=sub)
+        self._account(aux, batch=int(token.shape[0]))
+        return logits, caches
+
+    def _account(self, aux, batch: int) -> None:
+        rec_groups = aux.get("recorded", [])
+        step_sync = 0.0
+        step_prefetch = 0.0
+        layer_off = 0
+        for rec in rec_groups:
+            idx = np.asarray(rec["indices"])                  # [L, T, K]
+            n_sub = np.asarray(rec["n_sub"])                  # [L]
+            miss_pe = np.asarray(rec["miss_per_expert"])      # [L, E]
+            l_n = idx.shape[0]
+            for li in range(l_n):
+                layer = layer_off + li
+                used = idx[li].reshape(-1)
+                self.cache.touch(layer, used)
+                if self.predictor is not None:
+                    if hasattr(self.predictor, "observe_transition") and layer > 0:
+                        self.predictor.observe_transition(
+                            layer, self._last_used.get(layer - 1, []), used)
+                    self.predictor.observe(layer, used)
+                self._last_used[layer] = used
+
+                self.stats.n_sub += int(n_sub[li])
+                self.ledger.buddy_hit(int(n_sub[li]))
+                missing = np.flatnonzero(miss_pe[li] > 0)
+                if self.policy.fallback == "fetch":
+                    for e in missing:
+                        self.ledger.sync_fetch(self._expert_bytes)
+                        step_sync += self.hw.transfer_time(self._expert_bytes)
+                        self.cache.insert(layer, int(e))
+                        self.stats.n_miss_fetch += 1
+                else:
+                    self.ledger.drop(int(miss_pe[li].sum()))
+                # prefetch for next step
+                if self.predictor is not None and self.prefetch_k > 0:
+                    want = self.predictor.predict(layer, self.prefetch_k)
+                    inserted = self.cache.prefetch_to(layer, want)
+                    if inserted:
+                        nb = self._expert_bytes * len(inserted)
+                        self.ledger.prefetch(nb, len(inserted))
+                        step_prefetch += len(inserted) * \
+                            self.hw.transfer_time(self._expert_bytes)
+            layer_off += l_n
+
+        compute = self._compute_s * max(1, batch) ** 0.0  # batch amortized
+        self.stats.steps += 1
+        self.stats.tokens += batch
+        self.stats.compute_s += compute
+        self.stats.stall_s += step_sync
+        self.stats.sim_time_s += compute + step_sync + max(
+            0.0, step_prefetch - compute)
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 greedy: bool = True) -> np.ndarray:
+        """Teacher-free batched generation. prompts [B, P] int32."""
+        b, p_len = prompts.shape
+        total = p_len + max_new_tokens
+        caches = self.init_caches(b, total)
+        out = np.zeros((b, total), np.int64)
+        out[:, :p_len] = prompts
+        tok = jnp.asarray(prompts[:, 0], jnp.int32)
+        logits = None
+        for pos in range(total - 1):
+            logits, caches = self.step(tok, caches, pos)
+            if pos + 1 < p_len:
+                tok = jnp.asarray(prompts[:, pos + 1], jnp.int32)
+            else:
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                out[:, pos + 1] = nxt
+                tok = jnp.asarray(nxt, jnp.int32)
+        return out
+
+    def teacher_forced_nll(self, tokens: np.ndarray) -> float:
+        """Mean next-token NLL under the engine's policy (accuracy metric)."""
+        b, s = tokens.shape
+        caches = self.init_caches(b, s)
+        nll, n = 0.0, 0
+        for pos in range(s - 1):
+            tok = jnp.asarray(tokens[:, pos], jnp.int32)
+            logits, caches = self.step(tok, caches, pos)
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+            tgt = tokens[:, pos + 1]
+            nll += float(-np.take_along_axis(np.asarray(logp), tgt[:, None], 1).sum())
+            n += b
+        return nll / n
+
+    def summary(self) -> dict:
+        return {
+            "policy": dataclasses.asdict(self.policy),
+            "cache_rate": self.cache.capacity / self.cfg.moe.num_experts,
+            "stats": dataclasses.asdict(self.stats),
+            "tokens_per_s": self.stats.tokens_per_s,
+            "ledger": self.ledger.summary(),
+        }

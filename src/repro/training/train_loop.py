@@ -1,0 +1,67 @@
+"""Training loop: loss, train_step, and the jit wiring.
+
+``train_step`` is the function lowered by the multi-pod dry-run for the
+``train_4k`` shape; it is also what examples/train_moe_100m.py runs on CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.training.optimizer import (AdamWConfig, OptState, apply_updates,
+                                      init_opt_state)
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, targets, *, cond_embeds=None,
+            rng=None, lb_coef: float = 0.01, remat: bool = False):
+    logits, aux = transformer.forward_train(params, cfg, tokens,
+                                            cond_embeds=cond_embeds, rng=rng,
+                                            remat=remat)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ce = nll.mean()
+    n_moe = max(sum(r for k, r in cfg.stack() if k == "attn_moe"), 1)
+    loss = ce + lb_coef * aux["lb"] / n_moe
+    return loss, {"ce": ce, "lb": aux["lb"] / n_moe}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    cond_shape=None, lb_coef: float = 0.01,
+                    remat: bool = False):
+    def train_step(params, opt_state: OptState, tokens, targets, rng,
+                   cond_embeds=None):
+        (loss, metrics), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+            params, cfg, tokens, targets, cond_embeds=cond_embeds, rng=rng,
+            lb_coef=lb_coef, remat=remat)
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+    return train_step
+
+
+def train(cfg: ModelConfig, opt_cfg: AdamWConfig, data_iter, *,
+          seed: int = 0, log_every: int = 10, recorder=None,
+          lb_coef: float = 0.01, log_fn=print):
+    """CPU-scale training driver (examples + accuracy benchmarks)."""
+    key = jax.random.PRNGKey(seed)
+    params = transformer.init_params(cfg, key)
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, lb_coef=lb_coef))
+    history = []
+    for i, batch in enumerate(data_iter):
+        tokens, targets = batch[:, :-1], batch[:, 1:]
+        rng = jax.random.fold_in(key, i + 1)
+        params, opt_state, m = step_fn(params, opt_state,
+                                       jnp.asarray(tokens), jnp.asarray(targets), rng)
+        if i % log_every == 0:
+            m = {k: float(v) for k, v in m.items()}
+            history.append({"step": i, **m})
+            log_fn(f"step {i:4d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                   f"lb {m['lb']:.4f} gnorm {m['grad_norm']:.2f}")
+    return params, history

@@ -1,0 +1,10 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+# CPU tests must see exactly 1 device (the dry-run subprocess sets its own
+# XLA_FLAGS); keep everything deterministic and in f32.
+jax.config.update("jax_enable_x64", False)

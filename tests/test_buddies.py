@@ -1,0 +1,98 @@
+"""Property tests for CFT buddy-list construction (§3.3, Eqs. 5-6)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import buddies
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_q(rng, l, e):
+    q = rng.random((l, e, e))
+    for i in range(e):
+        q[:, i, i] = 0.0
+    q /= np.maximum(q.sum(-1, keepdims=True), 1e-30)
+    return q
+
+
+@given(st.integers(0, 1000), st.integers(2, 12), st.integers(1, 3),
+       st.floats(0.05, 1.0))
+def test_cft_coverage_and_minimality(seed, e, l, alpha):
+    rng = np.random.default_rng(seed)
+    q = _rand_q(rng, l, e)
+    t = buddies.build_buddy_lists(q, alpha=alpha, k_max=e)
+    for li in range(l):
+        for i in range(e):
+            size = t.sizes[li, i]
+            assert size >= 1
+            ids = t.table[li, i, :size]
+            assert (ids >= 0).all()
+            assert i not in ids                      # never self
+            assert len(set(ids.tolist())) == size    # unique
+            cover = q[li, i, ids].sum()
+            # coverage >= alpha unless capped by k_max(=e here, no cap)
+            if size < e - 1:
+                assert cover >= alpha - 1e-9
+                # minimality: dropping the last entry breaks coverage
+                assert q[li, i, ids[:-1]].sum() < alpha - 1e-12
+            # entries are sorted by q descending
+            qs = q[li, i, ids]
+            assert (np.diff(qs) <= 1e-12).all()
+            # padding is -1
+            assert (t.table[li, i, size:] == -1).all()
+
+
+@given(st.integers(0, 100), st.integers(4, 10))
+def test_cft_kmax_cap(seed, e):
+    rng = np.random.default_rng(seed)
+    q = _rand_q(rng, 1, e)
+    t = buddies.build_buddy_lists(q, alpha=1.0, k_max=2)
+    assert (t.sizes <= 2).all()
+
+
+def test_cft_prefix_size_exact():
+    q = np.asarray([0.5, 0.3, 0.15, 0.05])
+    assert buddies.cft_prefix_size(q, 0.5) == 1
+    assert buddies.cft_prefix_size(q, 0.51) == 2
+    assert buddies.cft_prefix_size(q, 0.8) == 2
+    assert buddies.cft_prefix_size(q, 0.81) == 3
+    assert buddies.cft_prefix_size(q, 1.0) == 4
+
+
+def test_alpha_larger_gives_larger_lists():
+    rng = np.random.default_rng(7)
+    q = _rand_q(rng, 2, 10)
+    t_small = buddies.build_buddy_lists(q, alpha=0.3, k_max=10)
+    t_big = buddies.build_buddy_lists(q, alpha=0.95, k_max=10)
+    assert (t_big.sizes >= t_small.sizes).all()
+    assert t_big.sizes.sum() > t_small.sizes.sum()
+
+
+def test_inactive_pivots_empty():
+    rng = np.random.default_rng(8)
+    q = _rand_q(rng, 1, 6)
+    act = np.ones((1, 6))
+    act[0, 2] = 0
+    t = buddies.build_buddy_lists(q, alpha=0.9, k_max=6, activity=act)
+    assert t.sizes[0, 2] == 0
+    assert (t.table[0, 2] == -1).all()
+
+
+def test_alpha_schedule_monotone():
+    s = buddies.alpha_schedule(10, early=0.95, late=0.8)
+    assert s[0] == 0.95 and abs(s[-1] - 0.8) < 1e-9
+    assert (np.diff(s) <= 0).all()
+
+
+def test_save_load_roundtrip(tmp_path):
+    rng = np.random.default_rng(9)
+    q = _rand_q(rng, 2, 6)
+    t = buddies.build_buddy_lists(q, alpha=0.9, k_max=4)
+    p = str(tmp_path / "tables.npz")
+    buddies.save_tables(p, t)
+    t2 = buddies.load_tables(p)
+    np.testing.assert_array_equal(t.table, t2.table)
+    np.testing.assert_array_equal(t.sizes, t2.sizes)
+    np.testing.assert_allclose(t.q, t2.q)

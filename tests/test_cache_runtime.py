@@ -1,0 +1,124 @@
+"""Runtime substrate: expert cache eviction invariants, transfer ledger
+arithmetic, prefetch predictors."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.cache import ExpertCache
+from repro.runtime.memory import (HardwareModel, TransferLedger,
+                                  expert_nbytes)
+from repro.runtime.prefetch import (CrossLayerPredictor, NoisyOraclePredictor,
+                                    PrevStepPredictor, TopFreqPredictor)
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 300), st.integers(2, 16), st.floats(0.2, 1.0),
+       st.sampled_from(["lru", "lfu"]), st.integers(1, 60))
+def test_cache_capacity_invariant(seed, e, rate, policy, n_ops):
+    rng = np.random.default_rng(seed)
+    c = ExpertCache(2, e, rate, policy=policy, seed=seed)
+    cap = c.capacity
+    assert c.resident.sum(axis=1).max() <= cap
+    for _ in range(n_ops):
+        l = int(rng.integers(0, 2))
+        op = rng.random()
+        if op < 0.5:
+            c.touch(l, rng.integers(0, e, size=3))
+        else:
+            c.insert(l, int(rng.integers(0, e)))
+        assert c.resident[l].sum() <= cap
+    # every layer still has exactly cap residents after enough inserts
+    for l in range(2):
+        for i in range(e):
+            c.insert(l, i)
+        assert c.resident[l].sum() == cap
+
+
+def test_lru_evicts_least_recent():
+    c = ExpertCache(1, 4, 0.5, policy="lru", seed=0)
+    res = np.flatnonzero(c.resident[0])
+    c.touch(0, [res[1]])
+    c.touch(0, [res[0]])
+    missing = np.flatnonzero(~c.resident[0])[0]
+    evicted = c.insert(0, int(missing))
+    assert evicted == res[1]  # res[1] touched before res[0] -> LRU
+
+
+def test_lfu_evicts_least_frequent():
+    c = ExpertCache(1, 4, 0.5, policy="lfu", seed=0)
+    res = np.flatnonzero(c.resident[0])
+    c.touch(0, [res[0]])
+    c.touch(0, [res[0]])
+    c.touch(0, [res[1]])
+    missing = np.flatnonzero(~c.resident[0])[0]
+    evicted = c.insert(0, int(missing))
+    assert evicted == res[1]
+
+
+def test_hop_vector_zero_single_partition():
+    c = ExpertCache(1, 8, 0.5, num_partitions=1)
+    assert (c.hop_vector(0) == 0).all()
+
+
+def test_hop_vector_multi_partition():
+    c = ExpertCache(1, 8, 1.0, num_partitions=4)
+    h = c.hop_vector(0, origin_partition=0)
+    assert h.min() == 0 and h.max() >= 1
+
+
+def test_ledger_arithmetic():
+    hw = HardwareModel(pcie_bw=10e9, pcie_fixed_s=1e-3)
+    led = TransferLedger(hw)
+    led.sync_fetch(10e9)            # 1s transfer + 1ms fixed
+    assert abs(led.sync_stall_s - 1.001) < 1e-9
+    led.prefetch(5e9, 2)
+    assert abs(led.overlap_s - (0.5 + 2e-3)) < 1e-9
+    led.buddy_hit(3)
+    s = led.summary()
+    assert s["total_bytes"] == 15e9
+    assert s["events"]["buddy_sub"] == 3
+    led.reset()
+    assert led.total_bytes == 0
+
+
+def test_expert_nbytes():
+    assert expert_nbytes(4096, 14336) == 3 * 4096 * 14336 * 2
+
+
+def test_topfreq_predictor():
+    p = TopFreqPredictor(1, 8)
+    for _ in range(5):
+        p.observe(0, [3, 5])
+    top = p.predict(0, 2)
+    assert set(top) == {3, 5}
+
+
+def test_prevstep_predictor():
+    p = PrevStepPredictor(1, 8)
+    p.observe(0, [1, 2])
+    p.observe(0, [6])
+    got = p.predict(0, 3)
+    assert 6 in got
+    assert len(got) == 3
+    assert len(set(got.tolist())) == 3
+
+
+def test_crosslayer_predictor():
+    p = CrossLayerPredictor(2, 8)
+    for _ in range(10):
+        p.observe_transition(1, [0], [4, 5])
+        p.observe(1, [4, 5])
+    got = p.predict(1, 2, prev_experts=[0])
+    assert set(got) == {4, 5}
+
+
+def test_noisy_oracle_accuracy_extremes():
+    p = NoisyOraclePredictor(1, 16, accuracy=1.0, seed=0)
+    p.set_truth(0, [2, 9, 11])
+    assert set(p.predict(0, 3)) == {2, 9, 11}
+    p0 = NoisyOraclePredictor(1, 1024, accuracy=0.0, seed=0)
+    p0.set_truth(0, [2, 9, 11])
+    hits = len(set(p0.predict(0, 3)) & {2, 9, 11})
+    assert hits <= 1  # wildly unlikely to match at accuracy 0 with E=1024

@@ -1,0 +1,89 @@
+"""Co-activation recorder (§3.2) vs brute-force counting."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.coactivation import CoactivationRecorder
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 500), st.integers(2, 10), st.integers(1, 3),
+       st.integers(1, 20))
+def test_counts_match_bruteforce(seed, e, k, t):
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    idx = np.stack([rng.choice(e, k, replace=False) for _ in range(t)])
+    rec = CoactivationRecorder(1, e)
+    rec.update(0, idx)
+
+    a_ref = np.zeros(e)
+    m_ref = np.zeros((e, e))
+    for row in idx:
+        for i in row:
+            a_ref[i] += 1
+        for i in row:
+            for j in row:
+                if i != j:
+                    m_ref[i, j] += 1
+    np.testing.assert_allclose(rec.A[0], a_ref)
+    np.testing.assert_allclose(rec.M[0], m_ref)
+
+
+def test_conditional_rows_normalized():
+    rng = np.random.default_rng(1)
+    rec = CoactivationRecorder(2, 8)
+    for _ in range(5):
+        idx = np.stack([rng.choice(8, 3, replace=False) for _ in range(16)])
+        rec.update(0, idx)
+        rec.update(1, idx)
+    for l in range(2):
+        q = rec.conditional(l)
+        np.testing.assert_allclose(q.sum(1), 1.0, rtol=1e-9)
+        assert (np.diag(q) == 0).all()
+
+
+def test_prob_weighted_coactivation():
+    rec = CoactivationRecorder(1, 4)
+    idx = np.asarray([[0, 1]])
+    probs = np.asarray([[0.7, 0.3]])
+    rec.update(0, idx, probs)
+    assert abs(rec.W[0][0, 1] - 0.3) < 1e-9   # min(p_i, p_j)
+    assert abs(rec.W[0][1, 0] - 0.3) < 1e-9
+    assert rec.W[0][0, 0] == 0                # diag zero
+
+
+def test_warmup_downweight():
+    rec = CoactivationRecorder(1, 4, warmup_steps=1, warmup_weight=0.5)
+    rec.update(0, np.asarray([[0, 1]]))
+    rec.step_done()
+    assert abs(rec.M[0][0, 1] - 0.5) < 1e-9
+    rec.update(0, np.asarray([[0, 1]]))
+    assert abs(rec.M[0][0, 1] - 1.5) < 1e-9
+
+
+def test_skew_and_coverage_stats():
+    rng = np.random.default_rng(2)
+    rec = CoactivationRecorder(1, 16)
+    # heavy-tailed usage: expert 0 dominates
+    for _ in range(20):
+        idx = np.concatenate([np.zeros((12, 1), np.int64),
+                              rng.integers(1, 16, (12, 1))], axis=1)
+        rec.update(0, idx)
+    skew = rec.activation_skew(0)
+    assert skew["top1_share"] > 0.3
+    assert 0 < skew["gini"] <= 1
+    cov = rec.topr_coverage(0, r=3)
+    assert cov.shape == (16,)
+    assert (cov <= 1 + 1e-9).all()
+
+
+def test_save_load_roundtrip(tmp_path):
+    rec = CoactivationRecorder(1, 4)
+    rec.update(0, np.asarray([[0, 1], [2, 3]]))
+    p = str(tmp_path / "coact.npz")
+    rec.save(p)
+    rec2 = CoactivationRecorder.load(p)
+    np.testing.assert_allclose(rec.M, rec2.M)
+    np.testing.assert_allclose(rec.A, rec2.A)

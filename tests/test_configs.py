@@ -1,0 +1,90 @@
+"""Exact assigned-architecture configs (the public-pool table)."""
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, get_reduced
+
+EXPECTED = {
+    "rwkv6-1.6b": dict(family="ssm", num_layers=24, d_model=2048,
+                       d_ff=7168, vocab_size=65536),
+    "zamba2-7b": dict(family="hybrid", num_layers=81, d_model=3584,
+                      num_heads=32, num_kv_heads=32, d_ff=14336,
+                      vocab_size=32000),
+    "internlm2-1.8b": dict(family="dense", num_layers=24, d_model=2048,
+                           num_heads=16, num_kv_heads=8, d_ff=8192,
+                           vocab_size=92544),
+    "mixtral-8x7b": dict(family="moe", num_layers=32, d_model=4096,
+                         num_heads=32, num_kv_heads=8, d_ff=14336,
+                         vocab_size=32000),
+    "smollm-360m": dict(family="dense", num_layers=32, d_model=960,
+                        num_heads=15, num_kv_heads=5, d_ff=2560,
+                        vocab_size=49152),
+    "musicgen-large": dict(family="audio", num_layers=48, d_model=2048,
+                           num_heads=32, num_kv_heads=32, d_ff=8192,
+                           vocab_size=2048),
+    "mixtral-8x22b": dict(family="moe", num_layers=56, d_model=6144,
+                          num_heads=48, num_kv_heads=8, d_ff=16384,
+                          vocab_size=32768),
+    "llama-3.2-vision-11b": dict(family="vlm", num_layers=40, d_model=4096,
+                                 num_heads=32, num_kv_heads=8, d_ff=14336,
+                                 vocab_size=128256),
+    "internlm2-20b": dict(family="dense", num_layers=48, d_model=6144,
+                          num_heads=48, num_kv_heads=8, d_ff=16384,
+                          vocab_size=92544),
+    "phi3-medium-14b": dict(family="dense", num_layers=40, d_model=5120,
+                            num_heads=40, num_kv_heads=10, d_ff=17920,
+                            vocab_size=100352),
+}
+
+
+@pytest.mark.parametrize("arch", list(EXPECTED))
+def test_exact_config(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_moe_routing_params():
+    m7 = get_config("mixtral-8x7b").moe
+    assert m7.num_experts == 8 and m7.top_k == 2
+    m22 = get_config("mixtral-8x22b").moe
+    assert m22.num_experts == 8 and m22.top_k == 2
+    ds = get_config("deepseek-v2-lite-buddy").moe
+    assert ds.num_experts == 64 and ds.top_k == 6  # the paper's §5.1 setup
+
+
+def test_ssm_state():
+    z = get_config("zamba2-7b")
+    assert z.ssm.state_dim == 64
+    assert z.attn_every > 0
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_is_small(arch):
+    r = get_reduced(arch)
+    assert r.num_layers <= 2
+    assert r.d_model <= 512
+    if r.is_moe:
+        assert r.moe.num_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+def test_param_counts_plausible():
+    # sanity: within 2x of the advertised sizes
+    approx = {
+        "mixtral-8x7b": 46e9, "mixtral-8x22b": 140e9, "phi3-medium-14b": 14e9,
+        "internlm2-20b": 20e9, "internlm2-1.8b": 1.8e9, "smollm-360m": 360e6,
+        "rwkv6-1.6b": 1.6e9,
+    }
+    for arch, n in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.5 * n < got < 2.2 * n, f"{arch}: {got:.2e} vs {n:.2e}"

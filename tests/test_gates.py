@@ -1,0 +1,87 @@
+"""Property tests for the three decision metrics (§3.1)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import gates
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+logits_arrays = hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                                        min_side=2, max_side=8),
+                           elements=st.floats(-20, 20, width=32))
+
+
+@given(logits_arrays)
+def test_tae_in_unit_interval(z):
+    t = np.asarray(gates.tae_from_logits(jnp.asarray(z)))
+    assert np.all(t >= -1e-6) and np.all(t <= 1 + 1e-6)
+
+
+@given(st.integers(2, 8), st.floats(5, 30))
+def test_tae_peaky_vs_diffuse(k, gap):
+    peaky = np.zeros((1, k), np.float32)
+    peaky[0, 0] = gap
+    diffuse = np.zeros((1, k), np.float32)
+    tp = float(gates.tae_from_logits(jnp.asarray(peaky))[0])
+    td = float(gates.tae_from_logits(jnp.asarray(diffuse))[0])
+    assert td > tp
+    assert abs(td - 1.0) < 1e-5  # uniform -> max entropy
+    assert tp < 0.5 or gap < 8   # strong peak -> low TAE
+
+
+@given(logits_arrays)
+def test_tae_from_probs_consistent(z):
+    p = np.exp(z - z.max(1, keepdims=True))
+    p = p / p.sum(1, keepdims=True)
+    t1 = np.asarray(gates.tae_from_logits(jnp.asarray(z)))
+    t2 = np.asarray(gates.tae_from_probs(jnp.asarray(p)))
+    np.testing.assert_allclose(t1, t2, rtol=1e-3, atol=1e-4)
+
+
+def test_tae_k1_is_zero():
+    z = np.random.default_rng(0).normal(size=(5, 1)).astype(np.float32)
+    assert np.all(np.asarray(gates.tae_from_logits(jnp.asarray(z))) == 0)
+
+
+@given(st.data())
+def test_distribution_delta(data):
+    e = data.draw(st.integers(2, 16))
+    t = data.draw(st.integers(1, 32))
+    k = data.draw(st.integers(1, min(4, e)))
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    idx = rng.integers(0, e, size=(t, k))
+    resident = rng.random(e) < 0.5
+    d = float(gates.distribution_delta(jnp.asarray(idx), jnp.asarray(resident)))
+    req = np.unique(idx)
+    expected = (~resident[req]).sum() / len(req)
+    assert abs(d - expected) < 1e-6
+    assert 0.0 <= d <= 1.0
+
+
+def test_distribution_gate_threshold():
+    idx = jnp.asarray([[0, 1], [2, 3]])
+    resident = jnp.asarray([True, True, False, False])  # delta = 0.5
+    assert bool(gates.distribution_gate(idx, resident, beta=0.6))
+    assert not bool(gates.distribution_gate(idx, resident, beta=0.5))
+    assert not bool(gates.distribution_gate(idx, resident, beta=0.4))
+
+
+@given(hnp.arrays(np.float32, st.integers(50, 200),
+                  elements=st.floats(0, 1, width=32)),
+       st.floats(5, 30))
+def test_calibrate_tau_percentile(samples, p):
+    tau = gates.calibrate_tau(samples, p)
+    frac_below = (samples <= tau + 1e-9).mean()
+    assert frac_below >= p / 100 - 0.02
+
+
+def test_margin_gate():
+    z = jnp.asarray([[10.0, 0.0], [0.1, 0.0]])
+    # margin co-gate: peaky margin forbids even with high tau pass
+    allow = gates.token_gate(z, tau=-0.1, margin_gamma=0.5)
+    assert not bool(allow[0])   # huge margin -> forbidden
+    assert bool(allow[1])       # small margin + high TAE -> allowed

@@ -1,0 +1,136 @@
+"""Pallas kernel sweeps: shapes x dtypes, assert_allclose vs ref.py oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _buddy_setup(rng, t, e, k, r):
+    s = np.stack([rng.choice(e, k, replace=False) for _ in range(t)]).astype(np.int32)
+    gate = rng.random(t) < 0.7
+    resident = rng.random(e) < 0.5
+    table = np.full((e, r), -1, np.int32)
+    q = np.zeros((e, r), np.float32)
+    for i in range(e):
+        n = int(rng.integers(1, r + 1))
+        peers = rng.choice([x for x in range(e) if x != i], n, replace=False)
+        table[i, :n] = peers
+        q[i, :n] = np.sort(rng.random(n))[::-1]
+    return s, gate, resident, table, q
+
+
+@pytest.mark.parametrize("t,e,k,r,h,rho", [
+    (1, 4, 1, 2, 2, 1),
+    (17, 8, 2, 4, 4, 2),
+    (100, 16, 4, 6, 4, 2),
+    (256, 64, 6, 16, 8, 3),     # the paper's DeepSeek-V2-Lite regime
+    (300, 8, 2, 8, 8, 8),
+])
+def test_buddy_substitute_sweep(t, e, k, r, h, rho):
+    rng = np.random.default_rng(t * 1000 + e)
+    s, gate, resident, table, q = _buddy_setup(rng, t, e, k, r)
+    got = ops.buddy_substitute(jnp.asarray(s), jnp.asarray(gate),
+                               jnp.asarray(resident), jnp.asarray(table),
+                               jnp.asarray(q), h=h, rho=rho)
+    want = ref.ref_buddy_substitute(s, gate, resident, table, q, h=h, rho=rho)
+    for g, w, name in zip(got, want, ("indices", "substituted", "missed")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("t,e,k", [(1, 4, 1), (64, 8, 2), (300, 64, 6),
+                                   (1000, 16, 4)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_topk_gate_sweep(t, e, k, dtype):
+    rng = np.random.default_rng(t + e)
+    z = rng.normal(size=(t, e)).astype(dtype)
+    tau = 0.4
+    got = ops.topk_gate(jnp.asarray(z), tau, k=k)
+    want = ref.ref_topk_gate(jnp.asarray(z), tau, k=k)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[3]), np.asarray(want[3]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got[4]), np.asarray(want[4]))
+
+
+@pytest.mark.parametrize("e,c,d,f,bc,bf", [
+    (1, 8, 32, 64, 8, 32),
+    (4, 96, 128, 384, 32, 128),
+    (8, 100, 64, 200, 64, 64),    # non-divisible c/f -> padding path
+])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_expert_ffn_sweep(e, c, d, f, bc, bf, dtype, tol):
+    rng = np.random.default_rng(e * 100 + c)
+    x = (rng.normal(size=(e, c, d)) * 0.1).astype(np.float32)
+    w1 = (rng.normal(size=(e, d, f)) * 0.05).astype(np.float32)
+    w3 = (rng.normal(size=(e, d, f)) * 0.05).astype(np.float32)
+    w2 = (rng.normal(size=(e, f, d)) * 0.05).astype(np.float32)
+    args = [jnp.asarray(a, dtype) for a in (x, w1, w3, w2)]
+    got = ops.expert_ffn(*args, block_c=bc, block_f=bf)
+    want = ref.ref_expert_ffn(*args)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_topk_gate_ties_stable():
+    """Equal logits: kernel and lax.top_k must both pick lowest index first."""
+    z = np.zeros((4, 8), np.float32)
+    got = ops.topk_gate(jnp.asarray(z), 0.5, k=3)
+    want = ref.ref_topk_gate(jnp.asarray(z), 0.5, k=3)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+
+
+def test_buddy_kernel_matches_core_substitute():
+    """Kernel path == core.substitute (the in-model reference) when gates are
+    computed the same way."""
+    import jax
+    from repro.core.gates import token_gate, distribution_gate
+    from repro.core.policy import BuddyPolicy
+    from repro.core.substitute import substitute
+
+    rng = np.random.default_rng(42)
+    t, e, k, r = 50, 16, 4, 6
+    s, _, resident, table, q = _buddy_setup(rng, t, e, k, r)
+    logits = rng.normal(size=(t, k)).astype(np.float32)
+    pol = BuddyPolicy(tau=0.3, beta=0.9, rho=k, H=r)
+
+    res = substitute(jnp.asarray(s), jnp.asarray(logits), jnp.asarray(resident),
+                     jnp.asarray(table), jnp.asarray(q), pol)
+    allow = token_gate(jnp.asarray(logits), pol.tau)
+    dist = distribution_gate(jnp.asarray(s), jnp.asarray(resident), pol.beta)
+    gate = np.asarray(allow) & bool(dist)
+    got = ops.buddy_substitute(jnp.asarray(s), jnp.asarray(gate),
+                               jnp.asarray(resident), jnp.asarray(table),
+                               jnp.asarray(q), h=pol.H, rho=pol.rho)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(res.indices))
+    np.testing.assert_array_equal(np.asarray(got[1]),
+                                  np.asarray(res.substituted))
+
+
+@pytest.mark.parametrize("bh,n,c,d", [(1, 1, 32, 64), (3, 4, 32, 64),
+                                      (2, 2, 32, 128), (4, 8, 16, 32)])
+def test_wkv_chunk_sweep(bh, n, c, d):
+    rng = np.random.default_rng(bh * 100 + n)
+    rt = rng.normal(size=(bh, n, c, d)).astype(np.float32)
+    kt = rng.normal(size=(bh, n, c, d)).astype(np.float32)
+    v = rng.normal(size=(bh, n, c, d)).astype(np.float32)
+    ke = rng.normal(size=(bh, n, c, d)).astype(np.float32)
+    lae = -np.abs(rng.normal(size=(bh, n, d))).astype(np.float32)
+    dg = rng.normal(size=(bh, n, c)).astype(np.float32)
+    s0 = (rng.normal(size=(bh, d, d)) * 0.1).astype(np.float32)
+    args = [jnp.asarray(x) for x in (rt, kt, v, ke, lae, dg, s0)]
+    o1, s1 = ops.wkv_chunk(*args)
+    o2, s2 = ref.ref_wkv_chunk(*args)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=3e-4, atol=3e-4)

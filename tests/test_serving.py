@@ -1,0 +1,112 @@
+"""Serving engine integration: policies change transfers and accuracy in the
+directions the paper claims (Tables 1-4 mechanics)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced()
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(cfg, key)
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    e = cfg.moe.num_experts
+    l = cfg.num_layers
+    rng = np.random.default_rng(0)
+    q = rng.random((l, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    return cfg, params, lm, tables
+
+
+def _engine(cfg, params, tables, policy, rate=0.5, seed=0):
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    return ServeEngine(cfg, params, tables=tables, policy=policy,
+                       cache=ExpertCache(l, e, rate, seed=seed), seed=seed)
+
+
+def test_buddy_eliminates_sync_fetches(setup):
+    cfg, params, lm, tables = setup
+    prompts = lm.sample(2, 4)
+
+    eng_b = _engine(cfg, params, tables,
+                    BuddyPolicy(tau=0.0, beta=1.1, rho=4, H=3))
+    eng_b.generate(prompts, max_new_tokens=6)
+    eng_o = _engine(cfg, params, tables, BuddyPolicy(mode="none"))
+    eng_o.generate(prompts, max_new_tokens=6)
+
+    # Original pays sync fetches; buddy converts them to substitutions
+    assert eng_o.stats.n_miss_fetch > 0
+    assert eng_b.stats.n_sub > 0
+    assert eng_b.stats.n_miss_fetch < eng_o.stats.n_miss_fetch
+    # and therefore moves fewer PCIe bytes (Fig. 8) and is faster (Tables 2-4)
+    assert eng_b.ledger.total_bytes < eng_o.ledger.total_bytes
+    assert eng_b.stats.tokens_per_s > eng_o.stats.tokens_per_s
+
+
+def test_full_cache_no_activity(setup):
+    cfg, params, lm, tables = setup
+    eng = _engine(cfg, params, tables,
+                  BuddyPolicy(tau=0.0, beta=1.1, rho=4, H=3), rate=1.0)
+    eng.generate(lm.sample(2, 4), max_new_tokens=4)
+    assert eng.stats.n_sub == 0
+    assert eng.stats.n_miss_fetch == 0
+    assert eng.ledger.total_bytes == 0
+
+
+def test_drop_fallback_no_transfers(setup):
+    cfg, params, lm, tables = setup
+    eng = _engine(cfg, params, tables,
+                  BuddyPolicy(mode="none", fallback="drop"))
+    eng.generate(lm.sample(2, 4), max_new_tokens=4)
+    assert eng.ledger.total_bytes == 0
+    assert eng.ledger.events_by_cause.get("drop", 0) > 0
+
+
+def test_teacher_forced_nll_ordering(setup):
+    """Original (lossless) NLL <= drop-everything NLL on the same data."""
+    cfg, params, lm, tables = setup
+    data = lm.sample(2, 8)
+    nll_orig = _engine(cfg, params, tables,
+                       BuddyPolicy(mode="none")).teacher_forced_nll(data)
+    nll_drop = _engine(cfg, params, tables,
+                       BuddyPolicy(mode="none",
+                                   fallback="drop")).teacher_forced_nll(data)
+    assert np.isfinite(nll_orig) and np.isfinite(nll_drop)
+    # dropping half the experts must not be better (tiny slack for noise)
+    assert nll_drop >= nll_orig - 0.05
+
+
+def test_prefetch_reduces_misses(setup):
+    cfg, params, lm, tables = setup
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    data = lm.sample(2, 10)
+    base = _engine(cfg, params, tables, BuddyPolicy(mode="none"), seed=1)
+    base.teacher_forced_nll(data)
+    pred = ServeEngine(cfg, params, tables=tables,
+                       policy=BuddyPolicy(mode="none"),
+                       cache=ExpertCache(l, e, 0.5, seed=1),
+                       predictor=PrevStepPredictor(l, e),
+                       prefetch_k=2, seed=1)
+    pred.teacher_forced_nll(data)
+    # prefetching shifts traffic from sync to overlapped
+    assert pred.ledger.bytes_by_cause.get("prefetch", 0) > 0
+
+
+def test_summary_roundtrips(setup):
+    cfg, params, lm, tables = setup
+    eng = _engine(cfg, params, tables, BuddyPolicy())
+    eng.generate(lm.sample(1, 3), max_new_tokens=2)
+    s = eng.summary()
+    assert 0 < s["cache_rate"] <= 1
+    assert s["stats"]["steps"] > 0
+    import json
+    json.dumps(s, default=str)

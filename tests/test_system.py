@@ -1,0 +1,176 @@
+"""End-to-end behaviour: train (upcycled MoE) -> profile -> CFT buddies ->
+serve under memory pressure. Reproduces the paper's qualitative claims on a
+small model:
+
+  * trained routers show uneven activation + concentrated co-activation
+    (Figs. 6/7/9),
+  * upcycled experts are functionally redundant (Fig. 4) and buddies are
+    measurably better substitutes than random experts (the central claim),
+  * BuddyMoE converts prefetch misses into substitutions and moves fewer
+    PCIe bytes than on-demand fetching (Table 1 / Fig. 8).
+
+The shared trained model comes from benchmarks.common (cached on disk), so
+the suite trains it at most once.
+"""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.core import (BuddyPolicy, build_buddy_lists, make_random_table)
+from repro.core.buddies import BuddyTables
+from repro.core.similarity import all_layer_similarities, collect_layer_inputs
+from repro.models import transformer
+from repro.models.moe import BuddyState
+from repro.runtime.cache import ExpertCache
+from repro.serving.engine import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from benchmarks import common
+    cfg, params, lm = common.get_model(verbose=False)
+    rec, q = common.get_profile(cfg, params, lm, verbose=False)
+    sims = all_layer_similarities(cfg, params, jnp.asarray(lm.sample(4, 64)))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=16, activity=rec.A,
+                               output_sim=sims)
+    return cfg, params, lm, rec, q, sims, tables
+
+
+def test_router_specializes(setup):
+    """Figs. 6/7/9 mechanics on the trained model."""
+    cfg, params, lm, rec, q, sims, tables = setup
+    for l in range(cfg.num_layers):
+        assert rec.activation_skew(l)["gini"] > 0.02
+        cov = rec.topr_coverage(l, 8).mean()
+        assert cov > 8 / (cfg.moe.num_experts - 1) * 1.5, \
+            f"co-activation not concentrated: {cov}"
+
+
+def test_upcycled_experts_are_redundant(setup):
+    """Fig. 4: substantial pairwise output similarity (the redundancy)."""
+    cfg, params, lm, rec, q, sims, tables = setup
+    e = cfg.moe.num_experts
+    off = sims[0][~np.eye(e, dtype=bool)]
+    assert off.mean() > 0.2, f"no redundancy to exploit: {off.mean():.3f}"
+
+
+def test_buddies_are_better_substitutes_than_random(setup):
+    """Mechanistic core claim: replacing expert i by its top buddy changes
+    the layer output less than replacing it by a random expert."""
+    cfg, params, lm, rec, q, sims, tables = setup
+    e_n = cfg.moe.num_experts
+    xs = collect_layer_inputs(cfg, params, jnp.asarray(lm.sample(2, 64)))
+    rng = np.random.default_rng(0)
+    gp = params["groups"][0]
+
+    def expert_out(lp, e, x):
+        m = lp["moe"]
+        h = jax.nn.silu(x @ m["w1"][e]) * (x @ m["w3"][e])
+        return h @ m["w2"][e]
+
+    errs = {"buddy": [], "random": []}
+    for l in range(cfg.num_layers):
+        lp = jax.tree.map(lambda a: a[l], gp)
+        x = xs[l][:128]
+        for i in range(e_n):
+            if rec.A[l, i] <= 0 or tables.table[l, i, 0] < 0:
+                continue
+            yi = expert_out(lp, i, x)
+            for name, j in (("buddy", int(tables.table[l, i, 0])),
+                            ("random", int(rng.choice(
+                                [x_ for x_ in range(e_n) if x_ != i])))):
+                yj = expert_out(lp, j, x)
+                errs[name].append(float(jnp.linalg.norm(yi - yj)
+                                        / (jnp.linalg.norm(yi) + 1e-8)))
+    assert np.mean(errs["buddy"]) < np.mean(errs["random"]), \
+        f"buddy {np.mean(errs['buddy']):.4f} !< random {np.mean(errs['random']):.4f}"
+
+
+def _agreement(cfg, params, eval_toks, full_logits, tables_t, tables_q,
+               policy, resident):
+    l_n, e_n = resident.shape
+    buddies = BuddyState(resident=jnp.asarray(resident),
+                         table=jnp.asarray(tables_t), q=jnp.asarray(tables_q),
+                         hop=jnp.zeros((l_n, e_n), jnp.int32))
+    logits, aux = transformer.forward_train(params, cfg, eval_toks,
+                                            policy=policy, buddies=buddies)
+    agree = float((logits.argmax(-1) == full_logits.argmax(-1)).mean())
+    return agree, aux
+
+
+def test_buddy_beats_random_end_to_end(setup):
+    """Tables 2-4 direction: at c=0.5, buddy substitution preserves top-1
+    agreement with the full model better than random substitution
+    (averaged over residency draws)."""
+    cfg, params, lm, rec, q, sims, tables = setup
+    l_n, e_n = cfg.num_layers, cfg.moe.num_experts
+    eval_toks = jnp.asarray(lm.sample(8, 48))
+    full_logits, _ = transformer.forward_train(params, cfg, eval_toks)
+
+    rt, rq = make_random_table(jax.random.PRNGKey(7), e_n, 16)
+    rt = np.tile(np.asarray(rt)[None], (l_n, 1, 1))
+    rq = np.tile(np.asarray(rq)[None], (l_n, 1, 1))
+    pol = BuddyPolicy(tau=0.05, beta=1.1, rho=6, H=16, fallback="drop")
+
+    rng = np.random.default_rng(1)
+    diffs = []
+    for trial in range(3):
+        resident = np.zeros((l_n, e_n), bool)
+        for l in range(l_n):
+            resident[l, rng.choice(e_n, e_n // 2, replace=False)] = True
+        ab, auxb = _agreement(cfg, params, eval_toks, full_logits,
+                              tables.table, tables.q, pol, resident)
+        ar, _ = _agreement(cfg, params, eval_toks, full_logits, rt, rq, pol,
+                           resident)
+        assert int(auxb["n_sub"]) > 0
+        diffs.append(ab - ar)
+    assert np.mean(diffs) > -0.005, f"buddy worse than random: {diffs}"
+
+
+def test_buddy_reduces_pcie_bytes(setup):
+    """Fig. 8 + Table 1: substitutions replace sync fetches -> fewer bytes,
+    higher modeled throughput."""
+    cfg, params, lm, rec, q, sims, tables = setup
+
+    def run(policy, seed=2):
+        eng = ServeEngine(cfg, params, tables=tables, policy=policy,
+                          cache=ExpertCache(cfg.num_layers,
+                                            cfg.moe.num_experts, 0.5,
+                                            seed=seed), seed=seed)
+        eng.generate(lm.sample(2, 4), max_new_tokens=6)
+        return eng
+
+    eng_b = run(BuddyPolicy(tau=0.0, beta=1.1, rho=6, H=16))
+    eng_o = run(BuddyPolicy(mode="none"))
+    assert eng_o.stats.n_miss_fetch > 0
+    assert eng_b.stats.n_sub > 0
+    assert eng_b.stats.n_miss_fetch < eng_o.stats.n_miss_fetch
+    assert eng_b.ledger.total_bytes < eng_o.ledger.total_bytes
+    assert eng_b.stats.tokens_per_s > eng_o.stats.tokens_per_s
+
+
+def test_gates_restrict_substitution(setup):
+    cfg, params, lm, rec, q, sims, tables = setup
+    l_n, e_n = cfg.num_layers, cfg.moe.num_experts
+    eval_toks = jnp.asarray(lm.sample(2, 16))
+    full_logits, _ = transformer.forward_train(params, cfg, eval_toks)
+    rng = np.random.default_rng(3)
+    resident = np.zeros((l_n, e_n), bool)
+    for l in range(l_n):
+        resident[l, rng.choice(e_n, e_n // 2, replace=False)] = True
+    # tau=1 forbids everything
+    _, aux = _agreement(cfg, params, eval_toks, full_logits, tables.table,
+                        tables.q, BuddyPolicy(tau=1.0, beta=1.1, rho=6, H=16),
+                        resident)
+    assert int(aux["n_sub"]) == 0
+    # beta=0 bypasses at batch level
+    _, aux = _agreement(cfg, params, eval_toks, full_logits, tables.table,
+                        tables.q, BuddyPolicy(tau=0.0, beta=0.0, rho=6, H=16),
+                        resident)
+    assert int(aux["n_sub"]) == 0

@@ -1,0 +1,80 @@
+"""Training substrate: loss decreases, optimizer math, checkpoint roundtrip,
+synthetic data properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import load_pytree, save_pytree
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.training import optimizer as O
+from repro.training.data import MarkovLM
+from repro.training.train_loop import train
+
+
+def test_loss_decreases():
+    cfg = reduced()
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    opt = O.AdamWConfig(lr=1e-3, total_steps=30, warmup_steps=5)
+    logs = []
+    params, hist = train(cfg, opt, lm.batches(4, 32, 30), log_every=1,
+                         log_fn=lambda s: logs.append(s))
+    first = np.mean([h["loss"] for h in hist[:3]])
+    last = np.mean([h["loss"] for h in hist[-3:]])
+    assert last < first - 0.1, f"no learning: {first} -> {last}"
+
+
+def test_adamw_step_math():
+    params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+    grads = {"w": jnp.full((4, 4), 0.5), "b": jnp.ones((4,))}
+    st = O.init_opt_state(params)
+    cfg = O.AdamWConfig(lr=0.1, warmup_steps=0, total_steps=10,
+                        weight_decay=0.0, grad_clip=1e9)
+    p2, st2, m = O.apply_updates(params, grads, st, cfg)
+    # first Adam step moves every param by ~lr in -sign(grad)
+    assert np.allclose(np.asarray(p2["w"]), 1.0 - 0.1, atol=1e-2)
+    assert int(st2.step) == 1
+    assert float(m["grad_norm"]) > 0
+
+
+def test_grad_clip():
+    params = {"w": jnp.ones((2,))}
+    grads = {"w": jnp.full((2,), 100.0)}
+    st = O.init_opt_state(params)
+    cfg = O.AdamWConfig(lr=1.0, warmup_steps=0, grad_clip=1.0,
+                        weight_decay=0.0)
+    _, _, m = O.apply_updates(params, grads, st, cfg)
+    assert float(m["grad_norm"]) > 100  # reported pre-clip
+
+
+def test_schedule_shape():
+    cfg = O.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                        min_lr_ratio=0.1)
+    lrs = [float(O.schedule(cfg, jnp.asarray(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1.0) < 1e-6          # end of warmup
+    assert lrs[-1] <= lrs[1]
+    assert abs(lrs[-1] - 0.1) < 1e-2         # cosine floor
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = reduced()
+    key = jax.random.PRNGKey(0)
+    from repro.models import transformer
+    params = transformer.init_params(cfg, key)
+    p = str(tmp_path / "ckpt.npz")
+    save_pytree(p, params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    restored = load_pytree(p, zeros)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_markov_data_learnable_structure():
+    lm = MarkovLM(512, num_blocks=8, seed=0)
+    x = lm.sample(4, 256)
+    assert x.shape == (4, 256)
+    assert x.min() >= 0 and x.max() < 512
+    # block persistence: consecutive tokens usually share a block
+    blocks = x // lm.block_size
+    same = (blocks[:, 1:] == blocks[:, :-1]).mean()
+    assert same > 0.8
