@@ -21,10 +21,13 @@ BATCH = 4
 
 def _bytes_for(cfg, params, lm, tables, policy, rate=0.5):
     from repro.configs.deepseek_v2_lite_buddy import CONFIG as FULL_DS
+    from repro.runtime.prefetch import PrevStepPredictor
     eng = ServeEngine(cfg, params, tables=tables, policy=policy,
                       cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts,
                                         rate, seed=2), seed=2,
-                      latency_cfg=FULL_DS)
+                      predictor=PrevStepPredictor(cfg.num_layers,
+                                                  cfg.moe.num_experts),
+                      prefetch_k=4, latency_cfg=FULL_DS)
     eng.generate(lm.sample(BATCH, 4), max_new_tokens=STEPS)
     return eng.ledger.summary(), eng.stats
 
@@ -49,11 +52,19 @@ def run(out_rows):
         "base_bytes": b0, "buddy_bytes": b1, "reduction": reduction,
         "base_sync_stall_s": base_led["sync_stall_s"],
         "buddy_sync_stall_s": buddy_led["sync_stall_s"],
+        "base_stall_breakdown": base_led["stall_breakdown"],
+        "buddy_stall_breakdown": buddy_led["stall_breakdown"],
         "buddy_subs": buddy_stats.n_sub,
+        "buddy_late_prefetches": buddy_stats.n_late_prefetch,
     }
     print(f"  PCIe bytes: base {b0/1e6:.1f}MB buddy {b1/1e6:.1f}MB "
           f"(-{reduction:.1%}); stalls {base_led['sync_stall_s']:.3f}s -> "
           f"{buddy_led['sync_stall_s']:.3f}s")
+    for tag, led in (("base", base_led), ("buddy", buddy_led)):
+        bd = led["stall_breakdown"]
+        print(f"    {tag}: demand {bd['demand_stall_s']:.3f}s  "
+              f"late-prefetch {bd['late_prefetch_stall_s']:.3f}s  "
+              f"overlapped {bd['overlapped_s']:.3f}s")
     out_rows.append(("pcie.reduction", us, f"{reduction:.4f}"))
     with open(os.path.join(common.CACHE_DIR, "pcie.json"), "w") as f:
         json.dump(res, f, indent=1)

@@ -58,6 +58,7 @@ def _run_method(cfg, params, lm, tables, policy, rate, eval_data, ref_top1):
         "n_sub": eng.stats.n_sub,
         "n_miss_fetch": eng.stats.n_miss_fetch,
         "pcie_bytes": eng.ledger.total_bytes,
+        "stall_breakdown": eng.stall_breakdown(),
     }
 
 

@@ -28,6 +28,8 @@ def main():
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prefetch", type=int, default=8)
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="prefetch depth: issue layer l+k while l computes")
     args = ap.parse_args()
 
     cfg, params, lm = common.get_model()
@@ -41,7 +43,7 @@ def main():
         cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts,
                           args.cache_rate, seed=0),
         predictor=PrevStepPredictor(cfg.num_layers, cfg.moe.num_experts),
-        prefetch_k=args.prefetch, seed=0)
+        prefetch_k=args.prefetch, lookahead=args.lookahead, seed=0)
 
     rng = np.random.default_rng(0)
     requests = [Request(rid=i, prompt=lm.sample(1, int(rng.integers(4, 9)))[0],
@@ -61,9 +63,14 @@ def main():
     print(f"\npolicy={args.policy} cache_rate={args.cache_rate}")
     print(f"tokens/s (modeled): {s['tokens_per_s']:.1f}")
     print(f"substitutions: {s['stats']['n_sub']}  "
-          f"sync fetches: {s['stats']['n_miss_fetch']}")
+          f"sync fetches: {s['stats']['n_miss_fetch']}  "
+          f"late prefetches: {s['stats']['n_late_prefetch']}")
     print(f"PCIe bytes: {s['ledger']['total_bytes']/1e6:.1f}MB  "
           f"stall: {s['ledger']['sync_stall_s']*1e3:.1f}ms")
+    bd = s["stall_breakdown"]
+    print(f"stall breakdown: demand {bd['demand_stall_s']*1e3:.1f}ms  "
+          f"late-prefetch {bd['late_prefetch_stall_s']*1e3:.1f}ms  "
+          f"overlapped {bd['overlapped_s']*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

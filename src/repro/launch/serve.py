@@ -15,9 +15,16 @@ from repro.configs.base import get_config, get_reduced
 from repro.core import BuddyPolicy, CoactivationRecorder, build_buddy_lists
 from repro.models import transformer
 from repro.runtime.cache import ExpertCache
-from repro.runtime.prefetch import PrevStepPredictor
+from repro.runtime.prefetch import (CrossLayerPredictor, PrevStepPredictor,
+                                    TopFreqPredictor)
 from repro.serving.engine import ServeEngine
 from repro.training.data import MarkovLM
+
+PREDICTORS = {
+    "prev-step": PrevStepPredictor,
+    "top-freq": TopFreqPredictor,
+    "cross-layer": CrossLayerPredictor,
+}
 
 
 def profile_buddies(cfg, params, lm, *, steps: int = 4, batch: int = 4,
@@ -53,7 +60,15 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.9)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--predictor", choices=sorted(PREDICTORS),
+                    default="prev-step")
+    ap.add_argument("--prefetch-k", type=int, default=-1,
+                    help="-1: half the cache capacity")
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="issue layer l+k prefetches while layer l computes")
     args = ap.parse_args()
+    if args.lookahead < 1:
+        ap.error("--lookahead must be >= 1 (layers ahead to prefetch)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     assert cfg.is_moe, "serving engine targets MoE archs"
@@ -69,12 +84,20 @@ def main():
     cache = ExpertCache(n_moe, cfg.moe.num_experts, args.cache_rate)
     policy = BuddyPolicy(tau=args.tau, beta=args.beta, rho=args.rho,
                          mode=args.policy)
+    prefetch_k = (max(1, cache.capacity // 2) if args.prefetch_k < 0
+                  else args.prefetch_k)
+    predictor = PREDICTORS[args.predictor](n_moe, cfg.moe.num_experts)
     eng = ServeEngine(cfg, params, tables=tables, policy=policy, cache=cache,
-                      predictor=PrevStepPredictor(n_moe, cfg.moe.num_experts),
-                      prefetch_k=max(1, cache.capacity // 2))
+                      predictor=predictor, prefetch_k=prefetch_k,
+                      lookahead=args.lookahead)
     prompts = lm.sample(args.batch, 8)
     out = eng.generate(prompts, max_new_tokens=args.steps)
-    print(json.dumps(eng.summary(), indent=1, default=str))
+    s = eng.summary()
+    print(json.dumps(s, indent=1, default=str))
+    bd = s["stall_breakdown"]
+    print(f"stalls: demand {bd['demand_stall_s']*1e3:.2f}ms  "
+          f"late-prefetch {bd['late_prefetch_stall_s']*1e3:.2f}ms  "
+          f"overlapped {bd['overlapped_s']*1e3:.2f}ms")
     print("sample output tokens:", out[0, -16:].tolist())
 
 

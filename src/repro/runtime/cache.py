@@ -4,15 +4,32 @@ Host-side structure: for each MoE layer a fixed number of slots
 (capacity = cache_rate * E). Eviction policies: LRU, LFU, or a frequency
 prior (EdgeMoE-style). Slots are assigned round-robin to mesh partitions so
 the topology term hop(j) in Psi (Eq. 3) has real structure.
+
+Residency states (driven by the transfer scheduler's timeline):
+
+  resident   weights are on device and USABLE this step
+  in-flight  a transfer was issued but has not arrived — the expert is NOT
+             usable (the paper's late-prefetch case) and NOT evictable
+  pinned     resident and in use by the layer currently computing — never
+             chosen as an eviction victim mid-use
+
+Eviction is buddy-aware when a buddy table is attached: among the
+policy-worst candidates, prefer evicting an expert that still has resident
+buddies, so a future miss on it can be absorbed by substitution instead of a
+synchronous PCIe fetch.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
 
 class ExpertCache:
     def __init__(self, num_layers: int, num_experts: int, cache_rate: float,
-                 policy: str = "lru", num_partitions: int = 1, seed: int = 0):
+                 policy: str = "lru", num_partitions: int = 1, seed: int = 0,
+                 buddy_table: Optional[np.ndarray] = None,
+                 buddy_candidates: int = 4):
         assert policy in ("lru", "lfu")
         self.num_layers = num_layers
         self.num_experts = num_experts
@@ -20,10 +37,15 @@ class ExpertCache:
         self.policy = policy
         self.num_partitions = num_partitions
         self.resident = np.zeros((num_layers, num_experts), bool)
+        self.inflight = np.zeros((num_layers, num_experts), bool)
+        self.pinned = np.zeros((num_layers, num_experts), bool)
         self.last_used = np.zeros((num_layers, num_experts), np.int64)
         self.freq = np.zeros((num_layers, num_experts), np.float64)
         self.partition = np.zeros((num_layers, num_experts), np.int32)
         self.clock = 0
+        # [L, E, R] buddy lists (-1 padded) for buddy-aware victim choice
+        self.buddy_table = buddy_table
+        self.buddy_candidates = buddy_candidates
         rng = np.random.default_rng(seed)
         for l in range(num_layers):
             init = rng.choice(num_experts, self.capacity, replace=False)
@@ -37,6 +59,7 @@ class ExpertCache:
 
     # -- queries --------------------------------------------------------
     def residency_mask(self) -> np.ndarray:
+        """Usable experts only — in-flight transfers have NOT arrived."""
         return self.resident.copy()
 
     def hop_vector(self, layer: int, origin_partition: int = 0) -> np.ndarray:
@@ -56,26 +79,97 @@ class ExpertCache:
         self.last_used[layer, experts] = self.clock
         self.freq[layer, experts] += weight
 
+    # -- pinning (mid-use protection) -----------------------------------
+    def pin(self, layer: int, experts) -> None:
+        experts = np.atleast_1d(np.asarray(experts, np.int64))
+        self.pinned[layer, experts] = True
+
+    def unpin(self, layer: int, experts=None) -> None:
+        if experts is None:
+            self.pinned[layer] = False
+        else:
+            experts = np.atleast_1d(np.asarray(experts, np.int64))
+            self.pinned[layer, experts] = False
+
+    # -- in-flight lifecycle (scheduler-driven) -------------------------
+    def begin_inflight(self, layer: int, expert: int) -> None:
+        if not self.resident[layer, expert]:
+            self.inflight[layer, expert] = True
+
+    def cancel_inflight(self, layer: int, expert: int) -> None:
+        self.inflight[layer, expert] = False
+
+    def commit_inflight(self, layer: int, expert: int) -> int:
+        """Transfer arrived: the expert becomes resident (evicting per
+        policy if needed). Returns the evicted expert id or -1."""
+        self.inflight[layer, expert] = False
+        return self.insert(layer, expert)
+
+    def on_transfer_event(self, kind: str, t) -> None:
+        """Listener hook for runtime.transfers.TransferScheduler."""
+        if kind == "submit":
+            self.begin_inflight(t.layer, t.expert)
+        elif kind == "complete":
+            self.commit_inflight(t.layer, t.expert)
+        elif kind == "cancel":
+            self.cancel_inflight(t.layer, t.expert)
+
+    # -- eviction -------------------------------------------------------
+    def _policy_order(self, layer: int, cand: np.ndarray) -> np.ndarray:
+        """Candidates sorted worst-first under the eviction policy."""
+        score = (self.last_used if self.policy == "lru" else self.freq)
+        return cand[np.argsort(score[layer, cand], kind="stable")]
+
+    def _pick_victim(self, layer: int, exclude: int) -> int:
+        """Choose an eviction victim: never pinned, never the incoming
+        expert; among the policy-worst few, prefer one whose buddies are
+        resident (its future misses are absorbable). Returns -1 if every
+        candidate is pinned (caller tolerates transient over-capacity)."""
+        cand = np.flatnonzero(self.resident[layer] & ~self.pinned[layer])
+        cand = cand[cand != exclude]
+        if len(cand) == 0:
+            return -1
+        ordered = self._policy_order(layer, cand)
+        pool = ordered[:max(1, self.buddy_candidates)]
+        if self.buddy_table is not None and len(pool) > 1:
+            for e in pool:
+                buddies = self.buddy_table[layer, e]
+                buddies = buddies[buddies >= 0]
+                if len(buddies) and self.resident[layer, buddies].any():
+                    return int(e)
+        return int(pool[0])
+
     def insert(self, layer: int, expert: int) -> int:
         """Insert an expert (post-fetch); evicts per policy if full.
         Returns the evicted expert id or -1."""
         if self.resident[layer, expert]:
             return -1
         evicted = -1
-        if self.resident[layer].sum() >= self.capacity:
-            cand = np.flatnonzero(self.resident[layer])
-            if self.policy == "lru":
-                evicted = int(cand[np.argmin(self.last_used[layer, cand])])
-            else:
-                evicted = int(cand[np.argmin(self.freq[layer, cand])])
-            self.resident[layer, evicted] = False
+        n_res = int(self.resident[layer].sum())
+        if n_res >= self.capacity:
+            evicted = self._pick_victim(layer, exclude=expert)
+            if evicted >= 0:
+                self.resident[layer, evicted] = False
         self.resident[layer, expert] = True
-        self.partition[layer, expert] = (
-            int(self.resident[layer].sum()) % self.num_partitions)
+        if evicted >= 0:
+            # reuse the vacated slot so partition topology stays stable
+            self.partition[layer, expert] = self.partition[layer, evicted]
+        else:
+            self.partition[layer, expert] = n_res % self.num_partitions
+        # trim any transient over-capacity left by fully-pinned layers
+        while (int(self.resident[layer].sum()) > self.capacity):
+            extra = self._pick_victim(layer, exclude=expert)
+            if extra < 0:
+                break
+            self.resident[layer, extra] = False
         return evicted
 
     def prefetch_to(self, layer: int, experts) -> list:
-        """Ensure ``experts`` resident; returns list of (inserted, evicted)."""
+        """Ensure ``experts`` resident; returns list of (inserted, evicted).
+
+        Legacy instant-arrival path (no timeline). The serving engine now
+        issues prefetches through the TransferScheduler instead, so arrival
+        happens at the modeled PCIe completion time."""
         out = []
         for e in experts:
             e = int(e)

@@ -38,7 +38,21 @@ DEFAULT_HW = HardwareModel()
 
 class TransferLedger:
     """Counts host<->device traffic by cause; the measurement substrate for
-    Fig. 8 (PCIe bytes) and the Tables 2-4 throughput model."""
+    Fig. 8 (PCIe bytes) and the Tables 2-4 throughput model.
+
+    Two recording paths coexist:
+      * the legacy direct calls (``prefetch``/``sync_fetch``) used by unit
+        tests and simple scripts, and
+      * the event path — attach the ledger to a
+        ``runtime.transfers.TransferScheduler`` and every submit/cancel
+        updates byte counts, while the engine attributes stalls via
+        ``stall()``/``overlapped()`` with a cause breakdown:
+          demand_stall_s        cold miss, nothing in flight (full fetch wait)
+          late_prefetch_stall_s predicted but not yet ARRIVED — the paper's
+                                late-prefetch case; stall is only the tail
+          overlapped_s          transfer time hidden under earlier layers'
+                                compute (costs bytes, not latency)
+    """
 
     def __init__(self, hw: HardwareModel = DEFAULT_HW):
         self.hw = hw
@@ -49,6 +63,44 @@ class TransferLedger:
         self.events_by_cause = defaultdict(int)
         self.sync_stall_s = 0.0
         self.overlap_s = 0.0
+        self.demand_stall_s = 0.0
+        self.late_prefetch_stall_s = 0.0
+        self.overlapped_s = 0.0
+
+    # -- scheduler event path -------------------------------------------
+    _CAUSE_KEY = {"prefetch": "prefetch", "demand": "sync_fetch"}
+
+    def attach(self, scheduler) -> None:
+        scheduler.add_listener(self.on_transfer_event)
+
+    def on_transfer_event(self, kind: str, t) -> None:
+        key = self._CAUSE_KEY.get(t.cause, t.cause)
+        if kind == "submit":
+            self.bytes_by_cause[key] += t.nbytes
+            self.events_by_cause[key] += 1
+        elif kind == "cancel":
+            self.events_by_cause["cancelled"] += 1
+            if not t.started:
+                # never touched the link: refund the bytes
+                self.bytes_by_cause[key] -= t.nbytes
+                self.events_by_cause[key] -= 1
+        elif kind == "escalate":
+            self.events_by_cause["escalated"] += 1
+
+    def stall(self, kind: str, seconds: float) -> None:
+        """Engine-attributed pipeline stall. kind: 'demand'|'late_prefetch'."""
+        assert kind in ("demand", "late_prefetch")
+        seconds = max(0.0, seconds)
+        if kind == "demand":
+            self.demand_stall_s += seconds
+        else:
+            self.late_prefetch_stall_s += seconds
+        self.sync_stall_s += seconds     # aggregate view stays coherent
+
+    def overlapped(self, seconds: float) -> None:
+        """Transfer service time hidden under compute (no latency cost)."""
+        self.overlapped_s += max(0.0, seconds)
+        self.overlap_s += max(0.0, seconds)
 
     # -- recording ------------------------------------------------------
     def prefetch(self, nbytes: int, n_events: int = 1) -> None:
@@ -83,6 +135,11 @@ class TransferLedger:
             "total_bytes": self.total_bytes,
             "sync_stall_s": self.sync_stall_s,
             "overlap_s": self.overlap_s,
+            "stall_breakdown": {
+                "demand_stall_s": self.demand_stall_s,
+                "late_prefetch_stall_s": self.late_prefetch_stall_s,
+                "overlapped_s": self.overlapped_s,
+            },
         }
 
 

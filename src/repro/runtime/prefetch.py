@@ -10,6 +10,13 @@ step? Their misses are exactly what BuddyMoE absorbs.
                        a profiled cross-layer co-usage matrix.
   NoisyOraclePredictor — ground truth corrupted at rate (1-accuracy): the
                        controllable-miss-rate harness for Table 1/2-4 sweeps.
+
+Lookahead API: ``predict_ahead(layer, k, lookahead)`` answers "while layer l
+computes, which experts should be in flight for layer l+lookahead?" so the
+transfer scheduler can overlap layer l+k prefetches with layer l compute.
+The default is the same-layer temporal prediction; CrossLayerPredictor
+chains its co-usage matrices ``lookahead`` hops so deeper lookahead has a
+real signal (Pre-gated/Fate-style pipelining).
 """
 from __future__ import annotations
 
@@ -18,7 +25,15 @@ from typing import Optional
 import numpy as np
 
 
-class TopFreqPredictor:
+class LookaheadMixin:
+    """Default lookahead: reuse the per-layer temporal prediction."""
+
+    def predict_ahead(self, layer: int, k: int, lookahead: int = 1,
+                      context=None, rng=None) -> np.ndarray:
+        return self.predict(layer, k, rng=rng)
+
+
+class TopFreqPredictor(LookaheadMixin):
     def __init__(self, num_layers: int, num_experts: int, decay: float = 0.99):
         self.freq = np.ones((num_layers, num_experts), np.float64)
         self.decay = decay
@@ -31,7 +46,7 @@ class TopFreqPredictor:
         return np.argsort(-self.freq[layer])[:k]
 
 
-class PrevStepPredictor:
+class PrevStepPredictor(LookaheadMixin):
     def __init__(self, num_layers: int, num_experts: int):
         self.prev = [np.array([], np.int64) for _ in range(num_layers)]
         self.freq = TopFreqPredictor(num_layers, num_experts)
@@ -48,7 +63,7 @@ class PrevStepPredictor:
         return p
 
 
-class CrossLayerPredictor:
+class CrossLayerPredictor(LookaheadMixin):
     """P(expert j at layer l | expert i at layer l-1), profiled offline."""
 
     def __init__(self, num_layers: int, num_experts: int, eps: float = 1e-3):
@@ -72,8 +87,28 @@ class CrossLayerPredictor:
         score = self.C[layer, prev_experts].sum(axis=0)
         return np.argsort(-score)[:k]
 
+    def predict_ahead(self, layer: int, k: int, lookahead: int = 1,
+                      context=None, rng=None) -> np.ndarray:
+        """Chain co-usage matrices ``lookahead`` hops forward: while layer
+        ``layer - lookahead`` computes with experts ``context``, score layer
+        ``layer``'s experts by propagating the activation indicator through
+        C[layer-lookahead+1] .. C[layer] (row-normalised)."""
+        if context is None or len(np.atleast_1d(context)) == 0 or lookahead < 1:
+            return self.predict(layer, k)
+        src = layer - lookahead
+        if src < 0:
+            return self.freq.predict(layer, k)
+        e_n = self.C.shape[1]
+        s = np.zeros(e_n, np.float64)
+        s[np.unique(np.asarray(context, np.int64).reshape(-1))] = 1.0
+        for m in range(src + 1, layer + 1):
+            cm = self.C[m]
+            cm = cm / np.maximum(cm.sum(axis=1, keepdims=True), 1e-30)
+            s = s @ cm
+        return np.argsort(-s)[:k]
 
-class NoisyOraclePredictor:
+
+class NoisyOraclePredictor(LookaheadMixin):
     """Knows the true next-step experts; corrupts each slot with prob
     (1 - accuracy). Gives direct control of the prefetch-miss rate."""
 

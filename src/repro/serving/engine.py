@@ -2,15 +2,22 @@
 
 Mirrors the paper's Fig. 3 pipeline on the simulation substrate:
 
-  step t:  jitted decode_step runs with the CURRENT residency mask; the
-           in-graph BuddyMoE layer substitutes/flags per-slot (Alg. 1 + gates)
-  between: the host cache manager (a) accounts transfers in the ledger —
-           buddy hits cost nothing, residual misses are synchronous fetches,
-           (b) feeds the predictor with this step's routing, (c) issues
-           prefetches for the next step (overlappable transfers).
+  step t:  jitted decode_step runs with the CURRENT residency mask (experts
+           whose transfers have ARRIVED — in-flight prefetches are misses);
+           the in-graph BuddyMoE layer substitutes/flags per-slot (Alg. 1)
+  between: the host cache manager replays the step on the event-driven PCIe
+           timeline (runtime/transfers.py): compute advances layer by layer,
+           in-flight transfers overlap the compute of earlier layers, a miss
+           stalls only the layer that needs it, and prefetches for layer
+           l+lookahead are issued while layer l computes.
 
-Timing model (CPU container — see runtime/memory.py): per-step latency =
-modeled device compute + synchronous stalls + non-overlappable prefetch excess.
+Stall attribution (the Fig. 8 / Tables 2-4 measurement substrate):
+  demand stall        cold miss, nothing in flight — full fetch wait
+  late-prefetch stall predicted but not yet arrived — the transfer is
+                      escalated to demand priority and the layer waits only
+                      for its remaining tail (buddy substitution absorbs
+                      these misses entirely under policy=buddy)
+  overlapped          transfer time hidden under compute — bytes, no latency
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ from repro.models.moe import BuddyState
 from repro.runtime.cache import ExpertCache
 from repro.runtime.memory import (DEFAULT_HW, HardwareModel, TransferLedger,
                                   expert_nbytes)
+from repro.runtime.transfers import TransferScheduler
 
 
 @dataclasses.dataclass
@@ -42,6 +50,9 @@ class EngineStats:
     n_sub: int = 0
     n_miss_fetch: int = 0
     n_hit: int = 0
+    n_late_prefetch: int = 0
+    n_prefetch_issued: int = 0
+    n_prefetch_cancelled: int = 0
 
     @property
     def tokens_per_s(self) -> float:
@@ -55,6 +66,7 @@ class ServeEngine:
                  cache: Optional[ExpertCache] = None,
                  predictor=None,
                  prefetch_k: int = 0,
+                 lookahead: int = 1,
                  hw: HardwareModel = DEFAULT_HW,
                  window: int = -1,
                  seed: int = 0,
@@ -64,6 +76,7 @@ class ServeEngine:
         be a reduced model while latencies reflect the deployment target —
         e.g. the real DeepSeek-V2-Lite). Defaults to cfg itself."""
         assert cfg.is_moe, "ServeEngine's expert cache applies to MoE archs"
+        assert lookahead >= 1, "lookahead: layers ahead to prefetch (>= 1)"
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -72,13 +85,19 @@ class ServeEngine:
         self.cache = cache or ExpertCache(self.num_moe_layers, e, 1.0)
         self.predictor = predictor
         self.prefetch_k = prefetch_k
+        self.lookahead = lookahead
         self.hw = hw
         self.ledger = TransferLedger(hw)
+        self.scheduler = TransferScheduler(hw)
+        # residency commits and byte counts are driven by the same timeline
+        self.scheduler.add_listener(self.cache.on_transfer_event)
+        self.ledger.attach(self.scheduler)
         self.stats = EngineStats()
         self.window = window
         ref_cfg = latency_cfg or cfg
         self._expert_bytes = expert_nbytes(ref_cfg.d_model, ref_cfg.moe.d_ff)
         self._latency_cfg = ref_cfg
+        self._active_params = ref_cfg.active_param_count()
         self._key = jax.random.PRNGKey(seed)
         self._last_used: dict = {}
 
@@ -89,15 +108,15 @@ class ServeEngine:
         else:
             self._table = np.asarray(tables.table)
             self._q = np.asarray(tables.q)
+        if self.cache.buddy_table is None and tables is not None:
+            # buddy-aware eviction: prefer victims whose misses buddies absorb
+            self.cache.buddy_table = self._table
 
         self._step_fn = jax.jit(
             functools.partial(transformer.decode_step, cfg=self.cfg,
                               policy=self.policy, record=True,
                               window=self.window),
             static_argnames=())
-
-        self._compute_s = hw.decode_compute_time(
-            ref_cfg.active_param_count(), 1)
 
     # ------------------------------------------------------------------
     def _buddy_state(self) -> BuddyState:
@@ -126,56 +145,112 @@ class ServeEngine:
         self._account(aux, batch=int(token.shape[0]))
         return logits, caches
 
+    # -- per-layer step timeline ---------------------------------------
     def _account(self, aux, batch: int) -> None:
-        rec_groups = aux.get("recorded", [])
-        step_sync = 0.0
-        step_prefetch = 0.0
+        """Replay the step on the transfer timeline, layer by layer."""
+        sched = self.scheduler
+        step_t0 = sched.now
+        busy0 = sched.busy_s
+        compute_total = self.hw.decode_compute_time(
+            self._active_params, max(1, batch))
+        per_layer = compute_total / max(1, self.num_moe_layers)
+        cursor = step_t0
+        step_stall = 0.0
+
         layer_off = 0
-        for rec in rec_groups:
+        for rec in aux.get("recorded", []):
             idx = np.asarray(rec["indices"])                  # [L, T, K]
             n_sub = np.asarray(rec["n_sub"])                  # [L]
             miss_pe = np.asarray(rec["miss_per_expert"])      # [L, E]
-            l_n = idx.shape[0]
-            for li in range(l_n):
+            for li in range(idx.shape[0]):
                 layer = layer_off + li
+                # transfers in flight overlap all earlier layers' compute
+                sched.advance(cursor)
                 used = idx[li].reshape(-1)
-                self.cache.touch(layer, used)
-                if self.predictor is not None:
-                    if hasattr(self.predictor, "observe_transition") and layer > 0:
-                        self.predictor.observe_transition(
-                            layer, self._last_used.get(layer - 1, []), used)
-                    self.predictor.observe(layer, used)
-                self._last_used[layer] = used
+                self._observe_layer(layer, used)
+                res_used = np.unique(used[self.cache.resident[layer, used]])
+                self.cache.pin(layer, res_used)
+                self.stats.n_hit += int(len(res_used))
 
                 self.stats.n_sub += int(n_sub[li])
                 self.ledger.buddy_hit(int(n_sub[li]))
-                missing = np.flatnonzero(miss_pe[li] > 0)
-                if self.policy.fallback == "fetch":
-                    for e in missing:
-                        self.ledger.sync_fetch(self._expert_bytes)
-                        step_sync += self.hw.transfer_time(self._expert_bytes)
-                        self.cache.insert(layer, int(e))
-                        self.stats.n_miss_fetch += 1
-                else:
-                    self.ledger.drop(int(miss_pe[li].sum()))
-                # prefetch for next step
-                if self.predictor is not None and self.prefetch_k > 0:
-                    want = self.predictor.predict(layer, self.prefetch_k)
-                    inserted = self.cache.prefetch_to(layer, want)
-                    if inserted:
-                        nb = self._expert_bytes * len(inserted)
-                        self.ledger.prefetch(nb, len(inserted))
-                        step_prefetch += len(inserted) * \
-                            self.hw.transfer_time(self._expert_bytes)
-            layer_off += l_n
+                cursor, stall = self._resolve_misses(layer, miss_pe[li],
+                                                     cursor)
+                step_stall += stall
+                cursor += per_layer          # this layer's compute slice
+                self._issue_prefetches(layer, used)
+                self.cache.unpin(layer)
+            layer_off += idx.shape[0]
 
-        compute = self._compute_s * max(1, batch) ** 0.0  # batch amortized
+        sched.advance(cursor)               # drain overlap to end of step
+        step_time = cursor - step_t0
+        overlapped = max(0.0, (sched.busy_s - busy0) - step_stall)
+        self.ledger.overlapped(overlapped)
+
         self.stats.steps += 1
         self.stats.tokens += batch
-        self.stats.compute_s += compute
-        self.stats.stall_s += step_sync
-        self.stats.sim_time_s += compute + step_sync + max(
-            0.0, step_prefetch - compute)
+        self.stats.compute_s += compute_total
+        self.stats.stall_s += step_stall
+        self.stats.sim_time_s += step_time
+
+    def _observe_layer(self, layer: int, used: np.ndarray) -> None:
+        self.cache.touch(layer, used)
+        if self.predictor is not None:
+            if hasattr(self.predictor, "observe_transition") and layer > 0:
+                self.predictor.observe_transition(
+                    layer, self._last_used.get(layer - 1, []), used)
+            self.predictor.observe(layer, used)
+        self._last_used[layer] = used
+
+    def _resolve_misses(self, layer: int, miss_row: np.ndarray,
+                        cursor: float):
+        """Residual misses (post-substitution) block THIS layer only. An
+        in-flight prefetch is escalated and waited for its tail (late
+        prefetch); otherwise a demand fetch pays the full transfer."""
+        missing = np.flatnonzero(miss_row > 0)
+        if self.policy.fallback != "fetch":
+            self.ledger.drop(int(miss_row.sum()))
+            return cursor, 0.0
+        sched = self.scheduler
+        stall = 0.0
+        for e in missing:
+            e = int(e)
+            if self.cache.resident[layer, e]:
+                # arrived after this step's mask snapshot — already on device
+                continue
+            t = sched.in_flight(layer, e)
+            if t is not None:
+                sched.escalate(t)
+                kind = "late_prefetch"
+                self.stats.n_late_prefetch += 1
+            else:
+                t = sched.submit(layer, e, self._expert_bytes, "demand")
+                kind = "demand"
+            done = sched.run_until_done(t)
+            s = max(0.0, done - cursor)
+            self.ledger.stall(kind, s)      # ledger owns the breakdown
+            stall += s
+            cursor = max(cursor, done)
+            self.stats.n_miss_fetch += 1
+        return cursor, stall
+
+    def _issue_prefetches(self, layer: int, used: np.ndarray) -> None:
+        """While ``layer`` computes, line up transfers for layer
+        ``layer + lookahead`` (wrapping into the next step). Predictions
+        that changed since the last issue are cancelled if still unserved."""
+        if self.predictor is None or self.prefetch_k <= 0:
+            return
+        tgt = (layer + self.lookahead) % self.num_moe_layers
+        want = self.predictor.predict_ahead(
+            tgt, self.prefetch_k, lookahead=self.lookahead, context=used)
+        want = [int(e) for e in np.atleast_1d(want)]
+        self.stats.n_prefetch_cancelled += \
+            self.scheduler.cancel_stale_prefetches(tgt, want)
+        for e in want:
+            if self.cache.resident[tgt, e] or self.cache.inflight[tgt, e]:
+                continue
+            self.scheduler.submit(tgt, e, self._expert_bytes, "prefetch")
+            self.stats.n_prefetch_issued += 1
 
     # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
@@ -212,11 +287,20 @@ class ServeEngine:
             n += b
         return nll / n
 
+    def stall_breakdown(self) -> dict:
+        """Single source of truth: the ledger's event-timeline attribution."""
+        return {
+            "demand_stall_s": self.ledger.demand_stall_s,
+            "late_prefetch_stall_s": self.ledger.late_prefetch_stall_s,
+            "overlapped_s": self.ledger.overlapped_s,
+        }
+
     def summary(self) -> dict:
         return {
             "policy": dataclasses.asdict(self.policy),
             "cache_rate": self.cache.capacity / self.cfg.moe.num_experts,
             "stats": dataclasses.asdict(self.stats),
             "tokens_per_s": self.stats.tokens_per_s,
+            "stall_breakdown": self.stall_breakdown(),
             "ledger": self.ledger.summary(),
         }

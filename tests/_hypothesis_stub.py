@@ -1,0 +1,174 @@
+"""Fallback stand-in for ``hypothesis`` when it is not installed.
+
+Six test modules use property-based tests. On CI images without
+``hypothesis`` we install a tiny deterministic replacement into
+``sys.modules`` (see conftest.py) so the suite still collects and the
+properties are exercised on a fixed, seeded set of examples. When the real
+``hypothesis`` is importable this module is never used.
+
+Supported surface (only what the suite needs):
+  given, settings (register_profile/load_profile), strategies.{integers,
+  floats, booleans, sampled_from, data}, hypothesis.extra.numpy.{arrays,
+  array_shapes}.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+# Examples per @given test in fallback mode. Kept modest: several suites jit
+# per drawn shape, and the point here is collection + smoke coverage, not
+# shrinking.
+_FALLBACK_MAX_EXAMPLES = 12
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample  # sample(rng) -> value
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self.sample(rng)))
+
+    def filter(self, pred):
+        def sample(rng):
+            for _ in range(1000):
+                v = self.sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return _Strategy(sample)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value, width=None, **_kw):
+    def sample(rng):
+        v = float(rng.uniform(min_value, max_value))
+        return float(np.float32(v)) if width == 32 else v
+    return _Strategy(sample)
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elements, min_size=0, max_size=10):
+    def sample(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.sample(rng) for _ in range(n)]
+    return _Strategy(sample)
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        return strategy.sample(self._rng)
+
+
+def data():
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
+def _np_arrays(dtype, shape, elements=None, **_kw):
+    """hypothesis.extra.numpy.arrays lookalike."""
+    def sample(rng):
+        shp = shape.sample(rng) if isinstance(shape, _Strategy) else shape
+        if isinstance(shp, (int, np.integer)):
+            shp = (int(shp),)
+        n = int(np.prod(shp)) if len(shp) else 1
+        if elements is not None:
+            flat = np.asarray([elements.sample(rng) for _ in range(n)])
+        else:
+            flat = rng.random(n)
+        return flat.astype(dtype).reshape(shp)
+    return _Strategy(sample)
+
+
+def _np_array_shapes(min_dims=1, max_dims=3, min_side=1, max_side=8):
+    def sample(rng):
+        d = int(rng.integers(min_dims, max_dims + 1))
+        return tuple(int(rng.integers(min_side, max_side + 1))
+                     for _ in range(d))
+    return _Strategy(sample)
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' API
+    _profiles: dict = {}
+    _current: dict = {}
+
+    def __init__(self, **kw):
+        self._kw = kw
+
+    def __call__(self, fn):   # used as a decorator
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = cls._profiles.get(name, {})
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        n = min(int(settings._current.get("max_examples", 25)),
+                _FALLBACK_MAX_EXAMPLES)
+        # stable per-test seed so failures reproduce across runs
+        seed = abs(hash(fn.__qualname__)) % (2 ** 31)
+
+        @functools.wraps(fn)
+        def wrapper():
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                args = [s.sample(rng) for s in strategies]
+                kwargs = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                fn(*args, **kwargs)
+
+        # pytest resolves fixtures from the (followed) signature; the drawn
+        # parameters must not look like fixtures.
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+def install():
+    """Register fake hypothesis modules in sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = lambda cond: True
+    hyp.__version__ = "0.0-fallback"
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "data"):
+        setattr(st_mod, name, globals()[name])
+    hyp.strategies = st_mod
+
+    extra = types.ModuleType("hypothesis.extra")
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+    hnp.arrays = _np_arrays
+    hnp.array_shapes = _np_array_shapes
+    extra.numpy = hnp
+    hyp.extra = extra
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = hnp
