@@ -2,6 +2,8 @@
 configurable cache rate, with the full request/batcher plumbing.
 
 Run:  PYTHONPATH=src python examples/serve_buddymoe.py --cache-rate 0.5
+      PYTHONPATH=src python examples/serve_buddymoe.py --continuous \
+          --arrival-rate 400
 """
 import argparse
 import os
@@ -15,23 +17,14 @@ import numpy as np
 from benchmarks import common
 from repro.core import BuddyPolicy
 from repro.runtime.cache import ExpertCache
-from repro.runtime.prefetch import PrevStepPredictor
+from repro.runtime.prefetch import AdaptiveBudgetController, PrevStepPredictor
 from repro.serving.engine import ServeEngine
 from repro.serving.requests import Request, StaticBatcher
+from repro.serving.scheduler import (ContinuousScheduler, PoissonArrivals,
+                                     RequestQueue, SLOConfig, make_requests)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--cache-rate", type=float, default=0.5)
-    ap.add_argument("--policy", choices=["buddy", "none"], default="buddy")
-    ap.add_argument("--batch-size", type=int, default=4)
-    ap.add_argument("--num-requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prefetch", type=int, default=8)
-    ap.add_argument("--lookahead", type=int, default=1,
-                    help="prefetch depth: issue layer l+k while l computes")
-    args = ap.parse_args()
-
+def build_engine(args):
     cfg, params, lm = common.get_model()
     rec, q = common.get_profile(cfg, params, lm)
     tables = common.get_tables(cfg, q, rec, 0.95, 16)
@@ -44,30 +37,78 @@ def main():
                           args.cache_rate, seed=0),
         predictor=PrevStepPredictor(cfg.num_layers, cfg.moe.num_experts),
         prefetch_k=args.prefetch, lookahead=args.lookahead, seed=0)
+    return cfg, lm, eng
 
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-rate", type=float, default=0.5)
+    ap.add_argument("--policy", choices=["buddy", "none"], default="buddy")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prefetch", type=int, default=8)
+    ap.add_argument("--lookahead", type=int, default=1,
+                    help="prefetch depth: issue layer l+k while l computes")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a Poisson arrival stream with continuous "
+                         "batching instead of static batches")
+    ap.add_argument("--arrival-rate", type=float, default=300.0,
+                    help="requests per simulated second (--continuous)")
+    args = ap.parse_args()
+
+    cfg, lm, eng = build_engine(args)
     rng = np.random.default_rng(0)
-    requests = [Request(rid=i, prompt=lm.sample(1, int(rng.integers(4, 9)))[0],
-                        max_new_tokens=args.max_new)
-                for i in range(args.num_requests)]
-    batcher = StaticBatcher(args.batch_size)
-    done = 0
-    for chunk, prompts in batcher.batches(requests):
-        out = eng.generate(prompts, max_new_tokens=args.max_new)
-        for i, r in enumerate(chunk):
-            if r.rid >= 0:
-                r.output = out[i]
-                done += 1
-        print(f"batch done ({done}/{args.num_requests} requests)")
+    prompts = [lm.sample(1, int(rng.integers(4, 9)))[0]
+               for _ in range(args.num_requests)]
 
-    s = eng.summary()
-    print(f"\npolicy={args.policy} cache_rate={args.cache_rate}")
-    print(f"tokens/s (modeled): {s['tokens_per_s']:.1f}")
-    print(f"substitutions: {s['stats']['n_sub']}  "
-          f"sync fetches: {s['stats']['n_miss_fetch']}  "
-          f"late prefetches: {s['stats']['n_late_prefetch']}")
-    print(f"PCIe bytes: {s['ledger']['total_bytes']/1e6:.1f}MB  "
-          f"stall: {s['ledger']['sync_stall_s']*1e3:.1f}ms")
-    bd = s["stall_breakdown"]
+    if args.continuous:
+        slo = SLOConfig(ttft_s=20e-3, tpot_s=5e-3)
+        reqs = make_requests(prompts, PoissonArrivals(args.arrival_rate,
+                                                      seed=1),
+                             args.max_new, slo)
+        ctrl = None
+        if args.prefetch > 0:       # no prefetch -> nothing to adapt
+            ctrl = AdaptiveBudgetController(
+                prefetch_k=args.prefetch, lookahead=args.lookahead,
+                max_k=2 * args.prefetch,
+                max_lookahead=max(4, args.lookahead))
+        sched = ContinuousScheduler(eng, slots=args.batch_size,
+                                    controller=ctrl)
+        s = sched.run(RequestQueue(reqs))
+        print(f"\ncontinuous: {s['completed']}/{s['num_requests']} done, "
+              f"{s['steps']} steps, mean occupancy "
+              f"{s['mean_occupancy']:.2f}/{args.batch_size}")
+        print(f"TTFT p50/p95/p99: {s['ttft_s']['p50']*1e3:.2f}/"
+              f"{s['ttft_s']['p95']*1e3:.2f}/{s['ttft_s']['p99']*1e3:.2f}ms")
+        print(f"goodput {s['goodput_rps']:.1f} req/s "
+              f"({s['goodput_tok_s']:.0f} tok/s), SLO-met "
+              f"{s['slo_met_frac']*100:.0f}%")
+        bd = s["engine"]["stall_breakdown"]
+    else:
+        requests = [Request(rid=i, prompt=p, max_new_tokens=args.max_new)
+                    for i, p in enumerate(prompts)]
+        batcher = StaticBatcher(args.batch_size)
+        done = 0
+        for chunk, mat, mask in batcher.batches(requests):
+            out = eng.generate(mat, max_new_tokens=args.max_new,
+                               row_mask=mask)
+            for i, r in enumerate(chunk):
+                if r.rid >= 0:
+                    r.output = out[i]
+                    done += 1
+            print(f"batch done ({done}/{args.num_requests} requests)")
+
+        s = eng.summary()
+        print(f"\npolicy={args.policy} cache_rate={args.cache_rate}")
+        print(f"tokens/s (modeled, pad rows excluded): "
+              f"{s['tokens_per_s']:.1f}")
+        print(f"substitutions: {s['stats']['n_sub']}  "
+              f"sync fetches: {s['stats']['n_miss_fetch']}  "
+              f"late prefetches: {s['stats']['n_late_prefetch']}")
+        print(f"PCIe bytes: {s['ledger']['total_bytes']/1e6:.1f}MB  "
+              f"stall: {s['ledger']['sync_stall_s']*1e3:.1f}ms")
+        bd = s["stall_breakdown"]
     print(f"stall breakdown: demand {bd['demand_stall_s']*1e3:.1f}ms  "
           f"late-prefetch {bd['late_prefetch_stall_s']*1e3:.1f}ms  "
           f"overlapped {bd['overlapped_s']*1e3:.1f}ms")

@@ -139,9 +139,10 @@ def init_kv_cache(batch: int, capacity: int, num_kv_heads: int, head_dim: int,
 def attn_decode(params, x_tok, cache, pos, *, num_heads, num_kv_heads, head_dim,
                 rope_theta, window: int = 0,
                 cross_kv: Optional[tuple] = None):
-    """One decode step. x_tok [B, 1, D]; cache k/v [B, C, KV, hd]; pos scalar
-    (absolute position of the new token). Ring-buffer write at pos % C.
-    Returns (y [B, 1, D], new_cache).
+    """One decode step. x_tok [B, 1, D]; cache k/v [B, C, KV, hd]; pos is the
+    absolute position of the new token — a scalar (whole batch in lockstep)
+    or a [B] vector (continuous batching: each row at its own position).
+    Ring-buffer write at pos % C per row. Returns (y [B, 1, D], new_cache).
     """
     if cross_kv is not None:
         k, v = cross_kv
@@ -155,25 +156,37 @@ def attn_decode(params, x_tok, cache, pos, *, num_heads, num_kv_heads, head_dim,
 
     b = x_tok.shape[0]
     cap = cache["k"].shape[1]
+    per_row = jnp.ndim(pos) == 1
     q, k_new, v_new = _project_qkv(params, x_tok, x_tok, num_heads,
                                    num_kv_heads, head_dim)
-    pos_arr = jnp.full((1,), pos, jnp.int32) if jnp.ndim(pos) == 0 else pos[None]
-    q = apply_rope(q, jnp.broadcast_to(pos_arr, (b, 1)), rope_theta)
-    k_new = apply_rope(k_new, jnp.broadcast_to(pos_arr, (b, 1)), rope_theta)
+    pos_b = (jnp.asarray(pos, jnp.int32)[:, None] if per_row
+             else jnp.full((1, 1), pos, jnp.int32))          # [B,1] | [1,1]
+    rope_pos = jnp.broadcast_to(pos_b, (b, 1))
+    q = apply_rope(q, rope_pos, rope_theta)
+    k_new = apply_rope(k_new, rope_pos, rope_theta)
     # match the cache layout so the update is collective-free
     k_new = shard(k_new, "batch", None, "cache_heads", "cache_hd")
     v_new = shard(v_new, "batch", None, "cache_heads", "cache_hd")
-    slot = jnp.asarray(pos % cap, jnp.int32)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+    if per_row:
+        # rows write independent slots: batched scatter, O(B) writes (a
+        # full-cache select would move O(B*C) every step)
+        rows = jnp.arange(b)
+        slots = (pos_b[:, 0] % cap).astype(jnp.int32)
+        k_cache = cache["k"].at[rows, slots].set(k_new[:, 0])
+        v_cache = cache["v"].at[rows, slots].set(v_new[:, 0])
+    else:
+        slot = jnp.asarray(pos % cap, jnp.int32)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
 
     # Absolute position of each cache slot given the ring buffer has wrapped
     # floor((pos - slot_idx)/cap)*cap + slot_idx -> latest write <= pos.
-    idx = jnp.arange(cap)
-    abs_pos = pos - ((pos - idx) % cap)
-    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    # [B, C] (per-row) or [1, C] (lockstep, broadcast over rows).
+    idx = jnp.arange(cap)[None, :]
+    abs_pos = pos_b - ((pos_b - idx) % cap)
+    valid = (abs_pos >= 0) & (abs_pos <= pos_b)
     if window:
-        valid = valid & (abs_pos > pos - window)
+        valid = valid & (abs_pos > pos_b - window)
 
     out = _attend_single(q, k_cache, v_cache, valid, None, num_kv_heads, head_dim)
     # 4-D output projection: contract (kv, g, hd) with wo reshaped to
@@ -191,7 +204,8 @@ def attn_decode(params, x_tok, cache, pos, *, num_heads, num_kv_heads, head_dim,
 
 
 def _attend_single(q, k, v, valid, _unused, num_kv_heads, head_dim):
-    """q [B,1,H,hd] vs full cache k,v [B,C,KV,hd] (single einsum, no chunking)."""
+    """q [B,1,H,hd] vs full cache k,v [B,C,KV,hd] (single einsum, no chunking).
+    valid: [B, C] (per-row positions) or [1, C] (lockstep) slot-validity mask."""
     b, _, h, hd = q.shape
     kv_h = k.shape[2]
     g = h // kv_h
@@ -204,7 +218,7 @@ def _attend_single(q, k, v, valid, _unused, num_kv_heads, head_dim):
     # all-gather of the whole KV cache (§Perf iteration: mixtral decode)
     s = shard(s, "batch", "cache_heads", None, "cache_seq")
     if valid is not None:
-        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgc,bckh->bkgh", p, v.astype(jnp.float32))
     return out.reshape(b, 1, h, hd).astype(q.dtype)

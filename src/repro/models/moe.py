@@ -85,6 +85,9 @@ class MoEAux(NamedTuple):
     n_missed: jax.Array       # [] non-resident slots with no buddy
     n_dropped: jax.Array      # [] tokens dropped by capacity
     miss_per_expert: jax.Array  # [E] miss counts (-> fetch bytes in the ledger)
+    sub_slots: jax.Array      # [T, K] bool — per-slot substitution mask (lets
+    miss_slots: jax.Array     # [T, K] bool — the serving engine mask out
+    #                           inactive batch rows under continuous batching)
 
 
 def router_topk(router_w, x_flat, top_k: int, jitter_key=None, jitter=0.0):
@@ -166,7 +169,8 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         miss_per_expert = jnp.zeros((e_n,), jnp.int32).at[idx.reshape(-1)].add(
             missed.reshape(-1).astype(jnp.int32))
         aux = MoEAux(lb, new_idx, idx, probs, substituted.sum(), missed.sum(),
-                     jnp.zeros((), jnp.int32), miss_per_expert)
+                     jnp.zeros((), jnp.int32), miss_per_expert,
+                     substituted, missed)
         return y.reshape(orig_shape), aux
 
     # ---------------- capacity-based dispatch (row-local) ----------------
@@ -227,5 +231,6 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         missed.reshape(-1).astype(jnp.int32))
 
     aux = MoEAux(lb, new_idx, idx, probs,
-                 substituted.sum(), missed.sum(), n_dropped, miss_per_expert)
+                 substituted.sum(), missed.sum(), n_dropped, miss_per_expert,
+                 substituted, missed)
     return y.reshape(orig_shape), aux

@@ -155,6 +155,8 @@ def _moe_aux_dict(cfg, aux: moe_mod.MoEAux, record: bool):
     if record:
         d["indices"] = aux.orig_indices
         d["probs"] = aux.topk_probs
+        d["substituted"] = aux.sub_slots
+        d["missed"] = aux.miss_slots
     return d
 
 
@@ -304,7 +306,8 @@ def _run_group(kind: str, gparams, x, gcache, ctx: StepCtx, gbuddy=None,
     if ctx.record:
         red["per_layer"] = {k: v for k, v in auxs.items()
                             if k in ("indices", "probs", "n_sub", "n_miss",
-                                     "miss_per_expert")}
+                                     "miss_per_expert", "substituted",
+                                     "missed")}
     return x, new_caches, red
 
 
@@ -459,9 +462,10 @@ def decode_step(params, cfg: ModelConfig, token, caches, pos, *,
                 cond_embeds=None, policy: Optional[BuddyPolicy] = None,
                 buddies=None, rng=None, window: int = -1,
                 record: bool = False):
-    """One-token decode. token [B] int32; pos scalar int32 (absolute position,
-    including any audio conditioning prefix). Returns (logits [B, V],
-    new_caches, aux)."""
+    """One-token decode. token [B] int32; pos int32 — a scalar (lockstep
+    batch) or a [B] vector of per-row absolute positions (continuous
+    batching), including any audio conditioning prefix. Returns
+    (logits [B, V], new_caches, aux)."""
     if window < 0:
         window = cfg.sliding_window
     x = params["embed"][token][:, None, :]            # [B, 1, D]

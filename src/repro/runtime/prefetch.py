@@ -20,6 +20,7 @@ real signal (Pre-gated/Fate-style pipelining).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import numpy as np
@@ -106,6 +107,112 @@ class CrossLayerPredictor(LookaheadMixin):
             cm = cm / np.maximum(cm.sum(axis=1, keepdims=True), 1e-30)
             s = s @ cm
         return np.argsort(-s)[:k]
+
+
+@dataclasses.dataclass
+class PrefetchBudget:
+    """How much speculative PCIe traffic the runtime may spend per layer."""
+    prefetch_k: int           # experts predicted/issued per target layer
+    lookahead: int            # layers ahead the prediction targets
+    max_inflight: int         # link-level concurrent-prefetch cap
+
+
+class AdaptiveBudgetController:
+    """Closes the loop between the serving scheduler and the transfer
+    runtime: instead of a fixed ``--prefetch-k`` CLI constant, the budget is
+    resized every ``window`` steps from two signals —
+
+      * the ledger's stall-attribution DELTAS over the window
+        (``stall_breakdown``: demand vs late-prefetch vs overlapped), and
+      * the request-queue depth (continuous batching: deeper backlog means
+        fuller batches, longer compute slices, more overlap headroom).
+
+    Policy (each adjustment is one step on an integer ladder, so the budget
+    cannot oscillate wildly):
+
+      late-prefetch stalls dominate  -> the link cannot land speculation in
+          time: SHRINK prefetch_k (fewer, better bets) and DEEPEN lookahead
+          (issue earlier so the tail lands before the layer needs it);
+      demand stalls dominate         -> speculation is too timid: GROW
+          prefetch_k (and let the link cap follow);
+      mostly overlapped / idle       -> hold.
+
+    Queue depth sets the ceiling: an empty queue halves the allowed k (the
+    speculative bytes would evict still-useful experts for no latency win);
+    a deep queue restores the full configured range.
+    """
+
+    def __init__(self, prefetch_k: int, lookahead: int = 1, *,
+                 min_k: int = 1, max_k: int = 16,
+                 min_lookahead: int = 1, max_lookahead: int = 4,
+                 max_inflight: int = 4, window: int = 8,
+                 dominance: float = 1.5, deep_queue: int = 4):
+        assert min_k <= prefetch_k <= max_k
+        assert min_lookahead <= lookahead <= max_lookahead
+        self.budget = PrefetchBudget(prefetch_k, lookahead,
+                                     max(1, min(max_inflight, prefetch_k)))
+        self.max_inflight_cap = max_inflight
+        self.min_k, self.max_k = min_k, max_k
+        self.min_lookahead, self.max_lookahead = min_lookahead, max_lookahead
+        self.window = max(1, window)
+        self.dominance = dominance
+        self.deep_queue = deep_queue
+        self._steps = 0
+        self._last = {"demand_stall_s": 0.0, "late_prefetch_stall_s": 0.0,
+                      "overlapped_s": 0.0}
+        self.trace: list = []
+
+    # -- observation ----------------------------------------------------
+    def observe_step(self, stall_breakdown: dict, queue_depth: int):
+        """Call once per engine step. Returns the (possibly updated) budget."""
+        self._steps += 1
+        if self._steps % self.window == 0:
+            self.update(stall_breakdown, queue_depth)
+        return self.budget
+
+    def update(self, stall_breakdown: dict, queue_depth: int) -> PrefetchBudget:
+        """Apply one feedback adjustment from cumulative stall attribution
+        (deltas are taken against the previous update)."""
+        d_demand = stall_breakdown["demand_stall_s"] - \
+            self._last["demand_stall_s"]
+        d_late = stall_breakdown["late_prefetch_stall_s"] - \
+            self._last["late_prefetch_stall_s"]
+        self._last = {k: stall_breakdown[k] for k in self._last}
+
+        b = self.budget
+        k, la = b.prefetch_k, b.lookahead
+        if d_late > self.dominance * max(d_demand, 1e-12):
+            # speculation arrives too late: spend less, issue earlier
+            k = max(self.min_k, k - 1)
+            la = min(self.max_lookahead, la + 1)
+        elif d_demand > self.dominance * max(d_late, 1e-12):
+            k = min(self._queue_cap(queue_depth), k + 1)
+            # lateness is no longer the problem: walk lookahead back toward
+            # shallow (prediction accuracy decays with depth)
+            la = max(self.min_lookahead, la - 1)
+        k = min(k, self._queue_cap(queue_depth))
+        b.prefetch_k, b.lookahead = k, la
+        b.max_inflight = max(1, min(self.max_inflight_cap, k))
+        self.trace.append({"step": self._steps, "prefetch_k": k,
+                           "lookahead": la,
+                           "demand_delta_s": d_demand,
+                           "late_delta_s": d_late,
+                           "queue_depth": queue_depth})
+        return b
+
+    def _queue_cap(self, queue_depth: int) -> int:
+        if queue_depth >= self.deep_queue:
+            return self.max_k
+        return max(self.min_k, self.max_k // 2)
+
+    # -- actuation ------------------------------------------------------
+    def apply(self, engine) -> PrefetchBudget:
+        """Push the current budget into a ServeEngine and its transfer
+        scheduler (the runtime knobs the budget governs)."""
+        engine.prefetch_k = self.budget.prefetch_k
+        engine.lookahead = self.budget.lookahead
+        engine.scheduler.set_prefetch_cap(self.budget.max_inflight)
+        return self.budget
 
 
 class NoisyOraclePredictor(LookaheadMixin):

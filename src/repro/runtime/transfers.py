@@ -162,6 +162,13 @@ class TransferScheduler:
                 n += int(self.cancel(t))
         return n
 
+    def set_prefetch_cap(self, n: int) -> None:
+        """Resize the concurrent-prefetch cap (the serving layer's adaptive
+        budget controller shrinks this when late-prefetch stalls dominate).
+        Already-admitted prefetches keep streaming; the new cap gates
+        admission from the queue."""
+        self.max_inflight_prefetch = max(1, int(n))
+
     # -- timeline -------------------------------------------------------
     def _admit(self) -> None:
         """Move queued transfers onto the link: every demand immediately;

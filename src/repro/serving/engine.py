@@ -134,47 +134,64 @@ class ServeEngine:
             window=0 if self.window < 0 else self.window)
 
     # ------------------------------------------------------------------
-    def step(self, token, caches, pos):
-        """One decode step for the whole batch. token [B] int32 device array.
+    def step(self, token, caches, pos, active: Optional[np.ndarray] = None):
+        """One decode step for the whole batch. token [B] int32 device array;
+        pos scalar (lockstep batch) or [B] per-row positions (continuous
+        batching). ``active`` is a bool [B] slot mask: inactive rows still
+        flow through the fixed-shape jitted graph, but are excluded from all
+        expert-usage, transfer, and throughput accounting.
         Returns (logits [B, V], new_caches)."""
         buddies = self._buddy_state()
         self._key, sub = jax.random.split(self._key)
         logits, caches, aux = self._step_fn(
             params=self.params, token=token, caches=caches,
             pos=jnp.asarray(pos, jnp.int32), buddies=buddies, rng=sub)
-        self._account(aux, batch=int(token.shape[0]))
+        if active is None:
+            active = np.ones(int(token.shape[0]), bool)
+        self._account(aux, active=np.asarray(active, bool))
         return logits, caches
 
     # -- per-layer step timeline ---------------------------------------
-    def _account(self, aux, batch: int) -> None:
-        """Replay the step on the transfer timeline, layer by layer."""
+    def _account(self, aux, active: np.ndarray) -> None:
+        """Replay the step on the transfer timeline, layer by layer.
+        ``active`` [B] masks which batch rows carry live requests — pad rows
+        (StaticBatcher) and empty decode slots (continuous batching) must not
+        generate expert traffic or count as served tokens."""
+        n_active = int(active.sum())
+        if n_active == 0:
+            return
         sched = self.scheduler
         step_t0 = sched.now
         busy0 = sched.busy_s
         compute_total = self.hw.decode_compute_time(
-            self._active_params, max(1, batch))
+            self._active_params, n_active)
         per_layer = compute_total / max(1, self.num_moe_layers)
         cursor = step_t0
         step_stall = 0.0
 
         layer_off = 0
+        e_n = self.cfg.moe.num_experts
         for rec in aux.get("recorded", []):
             idx = np.asarray(rec["indices"])                  # [L, T, K]
-            n_sub = np.asarray(rec["n_sub"])                  # [L]
-            miss_pe = np.asarray(rec["miss_per_expert"])      # [L, E]
+            sub_sl = np.asarray(rec["substituted"])           # [L, T, K]
+            miss_sl = np.asarray(rec["missed"])               # [L, T, K]
             for li in range(idx.shape[0]):
                 layer = layer_off + li
                 # transfers in flight overlap all earlier layers' compute
                 sched.advance(cursor)
-                used = idx[li].reshape(-1)
+                rows = idx[li][active]                        # [T_act, K]
+                used = rows.reshape(-1)
                 self._observe_layer(layer, used)
                 res_used = np.unique(used[self.cache.resident[layer, used]])
                 self.cache.pin(layer, res_used)
                 self.stats.n_hit += int(len(res_used))
 
-                self.stats.n_sub += int(n_sub[li])
-                self.ledger.buddy_hit(int(n_sub[li]))
-                cursor, stall = self._resolve_misses(layer, miss_pe[li],
+                n_sub = int(sub_sl[li][active].sum())
+                self.stats.n_sub += n_sub
+                self.ledger.buddy_hit(n_sub)
+                miss_row = np.bincount(rows[miss_sl[li][active]],
+                                       minlength=e_n)
+                cursor, stall = self._resolve_misses(layer, miss_row,
                                                      cursor)
                 step_stall += stall
                 cursor += per_layer          # this layer's compute slice
@@ -188,7 +205,7 @@ class ServeEngine:
         self.ledger.overlapped(overlapped)
 
         self.stats.steps += 1
-        self.stats.tokens += batch
+        self.stats.tokens += n_active
         self.stats.compute_s += compute_total
         self.stats.stall_s += step_stall
         self.stats.sim_time_s += step_time
@@ -253,9 +270,61 @@ class ServeEngine:
             self.stats.n_prefetch_issued += 1
 
     # ------------------------------------------------------------------
+    def reset_runtime(self, cache: Optional[ExpertCache] = None,
+                      predictor=None) -> None:
+        """Fresh serving state (clock, ledger, cache, predictor, stats) on
+        the same compiled model — e.g. after a measurement probe, or to
+        reuse one engine across benchmark runs without re-jitting."""
+        e = self.cfg.moe.num_experts
+        if cache is None:
+            old = self.cache
+            cache = ExpertCache(self.num_moe_layers, e, old.capacity / e,
+                                policy=old.policy,
+                                num_partitions=old.num_partitions,
+                                buddy_table=old.buddy_table,
+                                buddy_candidates=old.buddy_candidates)
+        self.cache = cache
+        if predictor is None and self.predictor is not None:
+            predictor = type(self.predictor)(self.num_moe_layers, e)
+        self.predictor = predictor
+        self.ledger = TransferLedger(self.hw)
+        self.scheduler = TransferScheduler(self.hw)
+        self.scheduler.add_listener(self.cache.on_transfer_event)
+        self.ledger.attach(self.scheduler)
+        self.stats = EngineStats()
+        self._last_used = {}
+
+    def reset_rows(self, caches, rows):
+        """Zero the decode caches of ``rows`` (batch indices) so a freed slot
+        can be re-used by a newly admitted request. Only attention-stack
+        caches keep batch on axis 1 of every leaf ([repeat, B, ...]); super
+        groups (hybrid/vlm) nest another layer axis first, so guard rather
+        than silently zero the wrong axis."""
+        assert all(k in ("attn_dense", "attn_moe") for k, _ in
+                   self.cfg.stack()), \
+            "reset_rows assumes [repeat, B, ...] cache leaves (attention " \
+            f"stacks only), got {self.cfg.stack()}"
+        rows = jnp.asarray(np.atleast_1d(rows), jnp.int32)
+        return jax.tree.map(lambda a: a.at[:, rows].set(0), caches)
+
+    def sample_tokens(self, logits, greedy: bool, temperature: float = 1.0):
+        """Next-token choice from [B, V] logits: argmax, or seeded temperature
+        sampling from the engine's PRNG stream (greedy=False)."""
+        if greedy:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        assert temperature > 0.0, "temperature must be > 0 for sampling"
+        self._key, sub = jax.random.split(self._key)
+        scaled = logits.astype(jnp.float32) / temperature
+        return np.asarray(jax.random.categorical(sub, scaled, axis=-1))
+
     def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 greedy: bool = True) -> np.ndarray:
-        """Teacher-free batched generation. prompts [B, P] int32."""
+                 greedy: bool = True, temperature: float = 1.0,
+                 row_mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Teacher-free batched generation. prompts [B, P] int32.
+        ``row_mask`` [B] marks real rows — StaticBatcher pad rows (rid=-1
+        copies) are stepped for shape but excluded from throughput/transfer
+        accounting. greedy=False samples with ``temperature`` from the
+        engine's seeded PRNG."""
         b, p_len = prompts.shape
         total = p_len + max_new_tokens
         caches = self.init_caches(b, total)
@@ -264,27 +333,32 @@ class ServeEngine:
         tok = jnp.asarray(prompts[:, 0], jnp.int32)
         logits = None
         for pos in range(total - 1):
-            logits, caches = self.step(tok, caches, pos)
+            logits, caches = self.step(tok, caches, pos, active=row_mask)
             if pos + 1 < p_len:
                 tok = jnp.asarray(prompts[:, pos + 1], jnp.int32)
             else:
-                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                nxt = self.sample_tokens(logits, greedy, temperature)
                 out[:, pos + 1] = nxt
                 tok = jnp.asarray(nxt, jnp.int32)
         return out
 
-    def teacher_forced_nll(self, tokens: np.ndarray) -> float:
-        """Mean next-token NLL under the engine's policy (accuracy metric)."""
+    def teacher_forced_nll(self, tokens: np.ndarray,
+                           row_mask: Optional[np.ndarray] = None) -> float:
+        """Mean next-token NLL under the engine's policy (accuracy metric).
+        ``row_mask`` [B] excludes pad rows from the mean."""
         b, s = tokens.shape
+        mask = (np.ones(b, bool) if row_mask is None
+                else np.asarray(row_mask, bool))
         caches = self.init_caches(b, s)
         nll, n = 0.0, 0
         for pos in range(s - 1):
             tok = jnp.asarray(tokens[:, pos], jnp.int32)
-            logits, caches = self.step(tok, caches, pos)
+            logits, caches = self.step(tok, caches, pos, active=mask)
             logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
             tgt = tokens[:, pos + 1]
-            nll += float(-np.take_along_axis(np.asarray(logp), tgt[:, None], 1).sum())
-            n += b
+            row_nll = -np.take_along_axis(np.asarray(logp), tgt[:, None], 1)[:, 0]
+            nll += float(row_nll[mask].sum())
+            n += int(mask.sum())
         return nll / n
 
     def stall_breakdown(self) -> dict:

@@ -1,0 +1,499 @@
+"""Continuous-batching request scheduler on the transfer timeline.
+
+The paper's llama.cpp harness serves fixed static batches: a batch forms,
+decodes in lockstep to completion, and only then does the next batch start.
+BuddyMoE's value — hiding PCIe transfers behind compute and absorbing late
+prefetches with buddies — only shows up under realistic serving load, where
+requests arrive continuously and queueing interacts with expert-transfer
+stalls. This module turns the repro into a traffic-serving simulator:
+
+  ArrivalProcess     Poisson / bursty (Markov-modulated) / trace-replay
+                     request arrival generators, all in SIMULATED seconds on
+                     the same clock the TransferScheduler advances.
+  ServeRequest       per-request SLO state: arrival, admission, TTFT, TPOT,
+                     deadline, per-token emission timestamps.
+  RequestQueue       FCFS backlog with optional SLO-aware admission: a
+                     request whose deadline cannot be met given the current
+                     service-time estimate is shed instead of admitted.
+  ContinuousScheduler token-level continuous batching over ServeEngine's
+                     per-layer step timeline: requests join free decode
+                     slots mid-stream (per-row positions — no global
+                     barrier), retire the step their budget completes, and
+                     the freed slot is re-used immediately. Prefetch budget
+                     adapts to queue depth + stall attribution through
+                     runtime.prefetch.AdaptiveBudgetController.
+  StaticServer       the llama.cpp-style baseline on the same clock:
+                     batch formation barrier, left-padded prompts, lockstep
+                     decode, stragglers hold the whole batch.
+
+Both servers report p50/p95/p99 TTFT / TPOT / end-to-end latency and
+goodput (SLO-satisfying requests and tokens per simulated second), next to
+``ServeEngine.summary()``'s stall attribution — the measurement substrate
+for the serving-load experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.prefetch import AdaptiveBudgetController
+
+# Request lifecycle states
+WAITING = "waiting"
+RUNNING = "running"
+FINISHED = "finished"
+REJECTED = "rejected"           # shed by SLO-aware admission
+
+
+# ===========================================================================
+# Arrival processes (simulated-clock seconds)
+# ===========================================================================
+class ArrivalProcess:
+    def times(self, n: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+class PoissonArrivals(ArrivalProcess):
+    """Memoryless arrivals at ``rate`` requests per simulated second."""
+
+    def __init__(self, rate: float, seed: int = 0, start_s: float = 0.0):
+        assert rate > 0
+        self.rate = rate
+        self.seed = seed
+        self.start_s = start_s
+
+    def times(self, n: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        gaps = rng.exponential(1.0 / self.rate, n)
+        return self.start_s + np.cumsum(gaps)
+
+
+class BurstyArrivals(ArrivalProcess):
+    """Markov-modulated Poisson: bursts of ~``burst_size`` requests arrive at
+    ``burstiness`` x the base rate, separated by long quiet gaps, with the
+    same long-run mean rate as PoissonArrivals(rate)."""
+
+    def __init__(self, rate: float, burst_size: int = 4,
+                 burstiness: float = 8.0, seed: int = 0, start_s: float = 0.0):
+        assert rate > 0 and burst_size >= 1 and burstiness > 1.0
+        self.rate = rate
+        self.burst_size = burst_size
+        self.burstiness = burstiness
+        self.seed = seed
+        self.start_s = start_s
+
+    def times(self, n: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        # inside a burst: gaps at burstiness*rate; between bursts: the gap is
+        # stretched so the long-run mean matches `rate`
+        out, t = [], self.start_s
+        fast = 1.0 / (self.rate * self.burstiness)
+        # mean time per burst cycle must be burst_size/rate:
+        slow = self.burst_size / self.rate - (self.burst_size - 1) * fast
+        while len(out) < n:
+            size = max(1, int(rng.geometric(1.0 / self.burst_size)))
+            t += rng.exponential(slow)
+            for _ in range(min(size, n - len(out))):
+                out.append(t)
+                t += rng.exponential(fast)
+        return np.asarray(out[:n])
+
+
+class ReplayArrivals(ArrivalProcess):
+    """Replay recorded arrival timestamps (sorted)."""
+
+    def __init__(self, times_s: Sequence[float]):
+        self._times = np.sort(np.asarray(times_s, np.float64))
+
+    def times(self, n: int) -> np.ndarray:
+        assert n <= len(self._times), "trace shorter than request count"
+        return self._times[:n].copy()
+
+
+# ===========================================================================
+# Requests + SLO state
+# ===========================================================================
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Per-request service-level objectives (simulated seconds). ``None``
+    disables a term. ``deadline_s`` is relative to arrival."""
+    ttft_s: Optional[float] = None
+    tpot_s: Optional[float] = None
+    deadline_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    rid: int
+    prompt: np.ndarray                  # [P] int tokens
+    max_new_tokens: int
+    arrival_s: float
+    slo: Optional[SLOConfig] = None
+    # -- runtime state (filled by the scheduler) ------------------------
+    state: str = WAITING
+    admitted_s: float = -1.0
+    first_token_s: float = -1.0
+    finished_s: float = -1.0
+    cursor: int = 0                     # next prompt token to feed
+    tokens: list = dataclasses.field(default_factory=list)
+    token_times: list = dataclasses.field(default_factory=list)
+
+    # -- metrics --------------------------------------------------------
+    def ttft(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    def tpot(self) -> float:
+        """Mean time per output token after the first."""
+        if len(self.token_times) < 2:
+            return 0.0
+        return ((self.token_times[-1] - self.token_times[0])
+                / (len(self.token_times) - 1))
+
+    def e2e(self) -> float:
+        return self.finished_s - self.arrival_s
+
+    def token_gaps(self) -> List[float]:
+        """Per-token latency: arrival->first token, then inter-token gaps."""
+        ts = [self.arrival_s] + list(self.token_times)
+        return [b - a for a, b in zip(ts, ts[1:])]
+
+    def slo_ok(self) -> bool:
+        if self.state != FINISHED:
+            return False
+        if self.slo is None:
+            return True
+        s = self.slo
+        if s.ttft_s is not None and self.ttft() > s.ttft_s:
+            return False
+        if s.tpot_s is not None and len(self.token_times) > 1 \
+                and self.tpot() > s.tpot_s:
+            return False
+        if s.deadline_s is not None and self.e2e() > s.deadline_s:
+            return False
+        return True
+
+
+def make_requests(prompts: Sequence[np.ndarray], arrivals: ArrivalProcess,
+                  max_new_tokens, slo: Optional[SLOConfig] = None
+                  ) -> List[ServeRequest]:
+    """Zip prompts with an arrival process into a workload. ``max_new_tokens``
+    is an int or a per-request sequence."""
+    n = len(prompts)
+    ts = arrivals.times(n)
+    if np.isscalar(max_new_tokens):
+        max_new_tokens = [int(max_new_tokens)] * n
+    return [ServeRequest(rid=i, prompt=np.asarray(p, np.int64),
+                         max_new_tokens=int(m), arrival_s=float(t), slo=slo)
+            for i, (p, m, t) in enumerate(zip(prompts, max_new_tokens, ts))]
+
+
+# ===========================================================================
+# Request queue with SLO-aware admission
+# ===========================================================================
+class RequestQueue:
+    """FCFS backlog on the simulated clock. ``admission="slo"`` sheds
+    requests at pop time when the service-time estimate says their deadline
+    is already unreachable — serving them would waste slots that later
+    requests could still use (goodput-aware load shedding)."""
+
+    def __init__(self, requests: Sequence[ServeRequest],
+                 admission: str = "fcfs"):
+        assert admission in ("fcfs", "slo")
+        self.admission = admission
+        self.total = len(requests)          # offered workload size
+        self._future = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        self._pending: List[ServeRequest] = []
+        self.rejected: List[ServeRequest] = []
+        self.peak_depth = 0
+
+    # -- clock-driven release -------------------------------------------
+    def release_until(self, now: float) -> None:
+        while self._future and self._future[0].arrival_s <= now:
+            self._pending.append(self._future.pop(0))
+        self.peak_depth = max(self.peak_depth, len(self._pending))
+
+    def depth(self, now: Optional[float] = None) -> int:
+        if now is not None:
+            self.release_until(now)
+        return len(self._pending)
+
+    def next_arrival(self) -> Optional[float]:
+        return self._future[0].arrival_s if self._future else None
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._future and not self._pending
+
+    def max_context(self) -> int:
+        rs = self._future + self._pending
+        return max((len(r.prompt) + r.max_new_tokens for r in rs), default=1)
+
+    # -- admission ------------------------------------------------------
+    def pop(self, now: float,
+            est_service_fn: Optional[Callable[[ServeRequest], float]] = None
+            ) -> Optional[ServeRequest]:
+        """Next admissible request, shedding doomed ones under ``slo``."""
+        self.release_until(now)
+        while self._pending:
+            r = self._pending.pop(0)
+            if (self.admission == "slo" and est_service_fn is not None
+                    and r.slo is not None and r.slo.deadline_s is not None):
+                est_finish = now + est_service_fn(r)
+                if est_finish > r.arrival_s + r.slo.deadline_s:
+                    r.state = REJECTED
+                    self.rejected.append(r)
+                    continue
+            return r
+        return None
+
+
+# ===========================================================================
+# Percentile / summary helpers
+# ===========================================================================
+def percentiles(xs: Sequence[float]) -> dict:
+    """p50/p95/p99/mean with linear interpolation (empty -> zeros)."""
+    if not len(xs):
+        return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "mean": float(a.mean())}
+
+
+def _summarize(label: str, requests: Sequence[ServeRequest],
+               rejected: Sequence[ServeRequest], elapsed_s: float,
+               engine, extra: Optional[dict] = None,
+               total: Optional[int] = None) -> dict:
+    """``total`` is the offered workload size — requests still waiting or
+    running when a run truncates must count against the SLO fraction."""
+    done = [r for r in requests if r.state == FINISHED]
+    ok = [r for r in done if r.slo_ok()]
+    gaps = [g for r in done for g in r.token_gaps()]
+    tok_ok = sum(len(r.tokens) for r in ok)
+    tok_all = sum(len(r.tokens) for r in done)
+    el = max(elapsed_s, 1e-12)
+    if total is None:
+        total = len(requests) + len(rejected)
+    out = {
+        "mode": label,
+        "num_requests": total,
+        "completed": len(done),
+        "rejected": len(rejected),
+        "slo_met": len(ok),
+        "slo_met_frac": len(ok) / max(1, total),
+        "elapsed_s": elapsed_s,
+        "ttft_s": percentiles([r.ttft() for r in done]),
+        "tpot_s": percentiles([r.tpot() for r in done if len(r.tokens) > 1]),
+        "e2e_s": percentiles([r.e2e() for r in done]),
+        "token_latency_s": percentiles(gaps),
+        "goodput_rps": len(ok) / el,
+        "goodput_tok_s": tok_ok / el,
+        "throughput_tok_s": tok_all / el,
+        "engine": engine.summary(),
+    }
+    if extra:
+        out.update(extra)
+    return out
+
+
+# ===========================================================================
+# Continuous batching
+# ===========================================================================
+class ContinuousScheduler:
+    """Token-level continuous batching over a ServeEngine.
+
+    ``slots`` decode rows step together in one fixed-shape jitted graph, but
+    each row carries its own position (per-row ring-buffer KV) so a new
+    prompt joins the step after a slot frees — prefill tokens of one request
+    interleave with decode tokens of the others, no global barrier. A row
+    retires the step its budget completes and the slot is re-admitted from
+    the queue before the next step.
+    """
+
+    def __init__(self, engine, slots: int, *,
+                 greedy: bool = True, temperature: float = 1.0,
+                 controller: Optional[AdaptiveBudgetController] = None,
+                 max_steps: int = 1_000_000):
+        assert slots >= 1
+        self.engine = engine
+        self.slots = slots
+        self.greedy = greedy
+        self.temperature = temperature
+        self.controller = controller
+        self.max_steps = max_steps
+        self.completed: List[ServeRequest] = []
+        self.occupancy: List[int] = []
+        self.steps = 0
+
+    # -- service-time estimate for SLO-aware admission ------------------
+    def _est_service(self, r: ServeRequest, est_step_s: float) -> float:
+        return (len(r.prompt) + r.max_new_tokens) * est_step_s
+
+    def run(self, queue: RequestQueue,
+            max_context: Optional[int] = None) -> dict:
+        eng = self.engine
+        b = self.slots
+        ctx = max_context or queue.max_context()
+        caches = eng.init_caches(b, ctx)
+        slot: List[Optional[ServeRequest]] = [None] * b
+        pos = np.zeros(b, np.int32)
+        tok = np.zeros(b, np.int64)
+        t_start = eng.scheduler.now
+        # seed the step-time estimate from the hardware model (refined online)
+        est_step_s = eng.hw.decode_compute_time(eng._active_params, b)
+
+        while self.steps < self.max_steps:
+            now = eng.scheduler.now
+            # ---- admission: fill free slots from the backlog ----------
+            newly = []
+            for i in range(b):
+                if slot[i] is not None:
+                    continue
+                r = queue.pop(now, lambda rq: self._est_service(rq, est_step_s))
+                if r is None:
+                    break
+                r.state = RUNNING
+                r.admitted_s = now
+                r.cursor = 1
+                slot[i] = r
+                pos[i] = 0
+                tok[i] = int(r.prompt[0])
+                newly.append(i)
+            if newly:
+                caches = eng.reset_rows(caches, newly)
+            active = np.array([s is not None for s in slot], bool)
+            if not active.any():
+                nxt = queue.next_arrival()
+                if nxt is None:
+                    break                       # drained: all work done
+                eng.scheduler.advance(max(now, nxt))
+                continue
+
+            # ---- one fused step: prefill + decode rows together -------
+            t0 = now
+            logits, caches = eng.step(jnp.asarray(tok, jnp.int32), caches,
+                                      pos.copy(), active=active)
+            t1 = eng.scheduler.now
+            est_step_s = 0.9 * est_step_s + 0.1 * max(t1 - t0, 1e-12)
+            self.steps += 1
+            self.occupancy.append(int(active.sum()))
+
+            sampled = eng.sample_tokens(logits, self.greedy, self.temperature)
+            for i in range(b):
+                r = slot[i]
+                if r is None:
+                    continue
+                pos[i] += 1
+                if r.cursor < len(r.prompt):    # still prefilling this row
+                    tok[i] = int(r.prompt[r.cursor])
+                    r.cursor += 1
+                    continue
+                nxt = int(sampled[i])
+                r.tokens.append(nxt)
+                r.token_times.append(t1)
+                if r.first_token_s < 0:
+                    r.first_token_s = t1
+                tok[i] = nxt
+                if len(r.tokens) >= r.max_new_tokens:   # mid-step retirement
+                    r.state = FINISHED
+                    r.finished_s = t1
+                    self.completed.append(r)
+                    slot[i] = None
+
+            # ---- feedback: resize the prefetch budget -----------------
+            if self.controller is not None:
+                self.controller.observe_step(eng.stall_breakdown(),
+                                             queue.depth(eng.scheduler.now))
+                self.controller.apply(eng)
+
+        return self.summary(queue, t_start)
+
+    def summary(self, queue: RequestQueue, t_start: float = 0.0) -> dict:
+        elapsed = self.engine.scheduler.now - t_start
+        extra = {
+            "steps": self.steps,
+            "slots": self.slots,
+            "mean_occupancy": float(np.mean(self.occupancy))
+            if self.occupancy else 0.0,
+            "queue_peak_depth": queue.peak_depth,
+        }
+        if self.controller is not None:
+            extra["budget"] = dataclasses.asdict(self.controller.budget)
+            extra["budget_trace"] = list(self.controller.trace)
+        return _summarize("continuous", self.completed, queue.rejected,
+                          elapsed, self.engine, extra, total=queue.total)
+
+
+# ===========================================================================
+# Static-batching baseline on the same clock
+# ===========================================================================
+class StaticServer:
+    """The llama.cpp-style harness: batches form in arrival order (a batch
+    waits for its LAST member to arrive), prompts are left-padded to a common
+    length, all rows decode in lockstep for the batch-max token budget, and
+    the next batch cannot start until every straggler finishes."""
+
+    def __init__(self, engine, batch_size: int, *, greedy: bool = True,
+                 temperature: float = 1.0):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.greedy = greedy
+        self.temperature = temperature
+        self.completed: List[ServeRequest] = []
+
+    def run(self, requests: Sequence[ServeRequest]) -> dict:
+        from repro.serving.requests import Request, StaticBatcher
+        eng = self.engine
+        reqs = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        by_rid = {r.rid: r for r in reqs}
+        # StaticBatcher owns the llama.cpp-harness padding semantics
+        # (rid=-1 pad copies, left-pad to common length, row mask)
+        shadow = [Request(rid=r.rid, prompt=r.prompt,
+                          max_new_tokens=r.max_new_tokens) for r in reqs]
+        t_start = eng.scheduler.now
+        for bchunk, mat, mask in StaticBatcher(self.batch_size).batches(
+                shadow):
+            chunk = [by_rid[q.rid] for q in bchunk if q.rid >= 0]
+            # batch-formation barrier: wait for the last member
+            form_t = max(r.arrival_s for r in chunk)
+            eng.scheduler.advance(max(eng.scheduler.now, form_t))
+
+            plen = mat.shape[1]
+            max_new = max(q.max_new_tokens for q in bchunk)
+            total = plen + max_new
+            caches = eng.init_caches(self.batch_size, total)
+
+            tok = jnp.asarray(mat[:, 0], jnp.int32)
+            live = mask.copy()      # rows whose budget is not yet exhausted
+            for p in range(total - 1):
+                logits, caches = eng.step(tok, caches, p, active=live)
+                t1 = eng.scheduler.now
+                if p + 1 < plen:
+                    tok = jnp.asarray(mat[:, p + 1], jnp.int32)
+                    continue
+                nxt = eng.sample_tokens(logits, self.greedy, self.temperature)
+                for i, r in enumerate(chunk):
+                    if len(r.tokens) >= r.max_new_tokens:
+                        continue                     # straggler row idles
+                    r.tokens.append(int(nxt[i]))
+                    r.token_times.append(t1)
+                    if r.first_token_s < 0:
+                        r.first_token_s = t1
+                        r.admitted_s = form_t
+                    if len(r.tokens) >= r.max_new_tokens:
+                        live[i] = False      # done: stop counting its tokens
+                if not live.any():           # every real row has finished
+                    break
+                tok = jnp.asarray(nxt, jnp.int32)
+            for r in chunk:
+                r.state = FINISHED
+                r.finished_s = r.token_times[-1] if r.token_times \
+                    else eng.scheduler.now
+                self.completed.append(r)
+        elapsed = eng.scheduler.now - t_start
+        return _summarize("static", self.completed, [], elapsed, eng,
+                          {"batch_size": self.batch_size})

@@ -1,0 +1,282 @@
+"""Continuous-batching scheduler: arrivals, SLO-aware admission, mid-step
+retirement, percentile/goodput math, and the adaptive prefetch-budget
+feedback loop (serving/scheduler.py + runtime/prefetch.py)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.prefetch import AdaptiveBudgetController, PrevStepPredictor
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import (FINISHED, REJECTED, BurstyArrivals,
+                                     ContinuousScheduler, PoissonArrivals,
+                                     ReplayArrivals, RequestQueue, SLOConfig,
+                                     ServeRequest, StaticServer,
+                                     make_requests, percentiles)
+from repro.training.data import MarkovLM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    rng = np.random.default_rng(0)
+    e = cfg.moe.num_experts
+    q = rng.random((cfg.num_layers, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    return cfg, params, lm, tables
+
+
+def _engine(cfg, params, tables, seed=0, prefetch_k=2):
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    return ServeEngine(cfg, params, tables=tables,
+                       policy=BuddyPolicy(tau=0.1, beta=0.9, rho=3),
+                       cache=ExpertCache(l, e, 0.5, seed=seed),
+                       predictor=PrevStepPredictor(l, e),
+                       prefetch_k=prefetch_k, seed=seed)
+
+
+def _prompts(lm, n, rng):
+    return [lm.sample(1, int(rng.integers(4, 8)))[0] for _ in range(n)]
+
+
+# ===========================================================================
+# Arrival processes
+# ===========================================================================
+def test_poisson_arrivals_rate_and_determinism():
+    p = PoissonArrivals(rate=100.0, seed=3)
+    t1, t2 = p.times(2000), p.times(2000)
+    np.testing.assert_array_equal(t1, t2)          # seeded -> reproducible
+    assert np.all(np.diff(t1) > 0) or np.all(np.diff(t1) >= 0)
+    mean_gap = float(np.diff(t1).mean())
+    assert 0.8 / 100.0 < mean_gap < 1.25 / 100.0   # ~1/rate
+
+
+def test_bursty_arrivals_burstier_than_poisson():
+    rate = 50.0
+    b = BurstyArrivals(rate=rate, burst_size=5, burstiness=10.0, seed=0)
+    t = b.times(1000)
+    assert np.all(np.diff(t) >= 0)
+    gaps = np.diff(t)
+    # long-run rate roughly preserved, but gap dispersion far above Poisson
+    assert 0.5 / rate < gaps.mean() < 2.0 / rate
+    assert gaps.std() > 1.5 * gaps.mean()          # CV >> 1 (Poisson CV = 1)
+
+
+def test_replay_arrivals():
+    r = ReplayArrivals([0.3, 0.1, 0.2])
+    np.testing.assert_allclose(r.times(3), [0.1, 0.2, 0.3])
+    with pytest.raises(AssertionError):
+        r.times(4)
+
+
+# ===========================================================================
+# SLO state + percentile math
+# ===========================================================================
+def test_percentile_math():
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0,
+                               "mean": 0.0}
+    p = percentiles([1.0, 2.0, 3.0, 4.0])
+    assert p["p50"] == pytest.approx(2.5)
+    assert p["mean"] == pytest.approx(2.5)
+    xs = list(range(1, 101))
+    p = percentiles(xs)
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p95"] == pytest.approx(95.05)
+    assert p["p99"] == pytest.approx(99.01)
+
+
+def test_request_slo_accounting():
+    r = ServeRequest(rid=0, prompt=np.arange(4), max_new_tokens=3,
+                     arrival_s=1.0,
+                     slo=SLOConfig(ttft_s=0.5, tpot_s=0.2, deadline_s=2.0))
+    r.state = FINISHED
+    r.first_token_s = 1.4
+    r.token_times = [1.4, 1.5, 1.7]
+    r.tokens = [7, 8, 9]
+    r.finished_s = 1.7
+    assert r.ttft() == pytest.approx(0.4)
+    assert r.tpot() == pytest.approx(0.15)         # (1.7-1.4)/2
+    assert r.e2e() == pytest.approx(0.7)
+    assert r.token_gaps() == pytest.approx([0.4, 0.1, 0.2])
+    assert r.slo_ok()
+    r.first_token_s = 1.6                          # TTFT 0.6 > 0.5
+    assert not r.slo_ok()
+
+
+# ===========================================================================
+# RequestQueue: backlog + SLO-aware admission
+# ===========================================================================
+def _mk(rid, arrival, deadline=None):
+    return ServeRequest(rid=rid, prompt=np.arange(4), max_new_tokens=4,
+                        arrival_s=arrival,
+                        slo=SLOConfig(deadline_s=deadline))
+
+
+def test_queue_release_order_and_depth():
+    reqs = [_mk(0, 0.5), _mk(1, 0.1), _mk(2, 0.3), _mk(3, 9.0)]
+    q = RequestQueue(reqs)
+    assert q.depth(0.0) == 0
+    assert q.depth(0.4) == 2                       # rid 1, 2 arrived
+    assert q.next_arrival() == pytest.approx(0.5)
+    got = [q.pop(0.6).rid for _ in range(3)]
+    assert got == [1, 2, 0]                        # FCFS by arrival time
+    assert q.pop(0.6) is None                      # rid 3 still in the future
+    assert not q.exhausted
+    assert q.peak_depth >= 2
+
+
+def test_slo_admission_sheds_doomed_requests():
+    # rid 0's deadline has no chance given the service estimate; rid 1's does
+    q = RequestQueue([_mk(0, 0.0, deadline=0.1), _mk(1, 0.0, deadline=10.0)],
+                     admission="slo")
+    r = q.pop(5.0, est_service_fn=lambda rq: 1.0)
+    assert r.rid == 1
+    assert [x.rid for x in q.rejected] == [0]
+    assert q.rejected[0].state == REJECTED
+    # fcfs mode never sheds
+    q2 = RequestQueue([_mk(0, 0.0, deadline=0.1)], admission="fcfs")
+    assert q2.pop(5.0, est_service_fn=lambda rq: 1.0).rid == 0
+
+
+# ===========================================================================
+# Adaptive prefetch budget (regression: shrink on late-prefetch dominance)
+# ===========================================================================
+def test_budget_shrinks_when_late_prefetch_dominates():
+    c = AdaptiveBudgetController(prefetch_k=4, lookahead=1, min_k=1, max_k=8,
+                                 window=1)
+    late = {"demand_stall_s": 0.0, "late_prefetch_stall_s": 0.0,
+            "overlapped_s": 0.0}
+    for i in range(1, 4):
+        late = {"demand_stall_s": 0.001 * i,
+                "late_prefetch_stall_s": 0.050 * i, "overlapped_s": 0.0}
+        c.update(late, queue_depth=8)
+    assert c.budget.prefetch_k == 1                # 4 -> 3 -> 2 -> 1
+    assert c.budget.lookahead > 1                  # issue earlier instead
+    assert c.budget.max_inflight == c.budget.prefetch_k
+    assert len(c.trace) == 3
+
+
+def test_budget_grows_on_demand_stalls_capped_by_queue():
+    c = AdaptiveBudgetController(prefetch_k=2, lookahead=1, min_k=1, max_k=8,
+                                 window=1, deep_queue=4)
+    demand = {"demand_stall_s": 0.05, "late_prefetch_stall_s": 0.0,
+              "overlapped_s": 0.0}
+    c.update(demand, queue_depth=8)                # deep queue: may grow
+    assert c.budget.prefetch_k == 3
+    # shallow queue caps the budget at max_k // 2
+    for i in range(2, 10):
+        c.update({"demand_stall_s": 0.05 * i, "late_prefetch_stall_s": 0.0,
+                  "overlapped_s": 0.0}, queue_depth=0)
+    assert c.budget.prefetch_k == 4                # max_k // 2
+
+
+def test_budget_apply_actuates_engine_knobs():
+    class _Sched:
+        max_inflight_prefetch = 4
+
+        def set_prefetch_cap(self, n):
+            self.max_inflight_prefetch = n
+
+    class _Eng:
+        prefetch_k, lookahead, scheduler = 8, 1, _Sched()
+
+    c = AdaptiveBudgetController(prefetch_k=3, lookahead=2, max_k=8)
+    eng = _Eng()
+    c.apply(eng)
+    assert (eng.prefetch_k, eng.lookahead) == (3, 2)
+    assert eng.scheduler.max_inflight_prefetch == 3
+
+
+# ===========================================================================
+# Continuous batching end-to-end (the engine-driven paths)
+# ===========================================================================
+def test_admission_backlog_midstep_retirement_slot_reuse(setup):
+    cfg, params, lm, tables = setup
+    rng = np.random.default_rng(1)
+    n = 6
+    reqs = make_requests(_prompts(lm, n, rng), ReplayArrivals([0.0] * n),
+                         max_new_tokens=list(rng.integers(2, 7, n)))
+    eng = _engine(cfg, params, tables)
+    queue = RequestQueue(reqs)
+    sched = ContinuousScheduler(eng, slots=2)
+    s = sched.run(queue)
+
+    assert s["completed"] == n and queue.exhausted
+    assert queue.peak_depth >= n - 2               # backlog: only 2 slots
+    done = sched.completed
+    by_rid = sorted(done, key=lambda r: r.rid)
+    # FCFS: same-arrival requests admitted in rid order
+    admits = [r.admitted_s for r in by_rid]
+    assert admits == sorted(admits)
+    for r in done:
+        assert r.state == FINISHED
+        assert len(r.tokens) == r.max_new_tokens
+        assert r.first_token_s <= r.finished_s
+        assert all(b >= a for a, b in zip(r.token_times, r.token_times[1:]))
+    # mid-step retirement: budgets differ, so finish times differ...
+    finishes = sorted(r.finished_s for r in done)
+    assert finishes[0] < finishes[-1]
+    # ...and a freed slot is reused: someone is admitted only after (or at)
+    # the first retirement, while the engine kept stepping
+    assert max(admits) >= finishes[0]
+    assert s["mean_occupancy"] > 1.0
+
+
+def test_continuous_beats_static_under_backlog(setup):
+    """The acceptance regime: same arrival trace, same engine config —
+    continuous batching retires rows early and back-fills, static pays the
+    formation + straggler barriers."""
+    cfg, params, lm, tables = setup
+    rng = np.random.default_rng(2)
+    n, slots = 8, 4
+    new_toks = list(rng.integers(2, 11, n))
+    arrivals = ReplayArrivals([0.0] * n)           # all queued at t=0
+    prompts = _prompts(lm, n, rng)
+
+    st_eng = _engine(cfg, params, tables, seed=0)
+    s_static = StaticServer(st_eng, batch_size=slots).run(
+        make_requests(prompts, arrivals, new_toks))
+
+    ct_eng = _engine(cfg, params, tables, seed=0)
+    sched = ContinuousScheduler(ct_eng, slots=slots)
+    s_cont = sched.run(RequestQueue(
+        make_requests(prompts, arrivals, new_toks)))
+
+    assert s_cont["completed"] == s_static["completed"] == n
+    assert s_cont["elapsed_s"] < s_static["elapsed_s"]
+    assert s_cont["e2e_s"]["p99"] < s_static["e2e_s"]["p99"]
+    assert s_cont["goodput_rps"] > s_static["goodput_rps"]
+    # stall attribution flows through both summaries
+    for s in (s_cont, s_static):
+        bd = s["engine"]["stall_breakdown"]
+        assert set(bd) == {"demand_stall_s", "late_prefetch_stall_s",
+                           "overlapped_s"}
+
+
+def test_adaptive_budget_in_the_loop(setup):
+    """Wired end-to-end: the controller observes real stall deltas and its
+    budget lands on the engine's prefetch knobs."""
+    cfg, params, lm, tables = setup
+    rng = np.random.default_rng(3)
+    eng = _engine(cfg, params, tables, prefetch_k=3)
+    ctrl = AdaptiveBudgetController(prefetch_k=3, lookahead=1, max_k=4,
+                                    window=2)
+    reqs = make_requests(_prompts(lm, 4, rng), ReplayArrivals([0.0] * 4), 4)
+    sched = ContinuousScheduler(eng, slots=2, controller=ctrl)
+    s = sched.run(RequestQueue(reqs))
+    assert s["completed"] == 4
+    assert len(ctrl.trace) > 0                     # feedback happened
+    assert eng.prefetch_k == ctrl.budget.prefetch_k
+    assert eng.lookahead == ctrl.budget.lookahead
+    assert eng.scheduler.max_inflight_prefetch == ctrl.budget.max_inflight
+    assert s["budget"]["prefetch_k"] == ctrl.budget.prefetch_k
+    # summary carries the SLO/goodput block the bench reports
+    for key in ("ttft_s", "tpot_s", "e2e_s", "token_latency_s"):
+        assert set(s[key]) == {"p50", "p95", "p99", "mean"}
+    import json
+    json.dumps(s, default=str)

@@ -101,6 +101,61 @@ def test_prefetch_reduces_misses(setup):
     assert pred.ledger.bytes_by_cause.get("prefetch", 0) > 0
 
 
+def test_static_batcher_masks_pad_rows(setup):
+    """Pad rows (rid=-1 copies) must not count toward throughput or NLL."""
+    from repro.serving.requests import Request, StaticBatcher
+    cfg, params, lm, tables = setup
+    reqs = [Request(rid=i, prompt=lm.sample(1, 4)[0], max_new_tokens=3)
+            for i in range(3)]
+    chunks = list(StaticBatcher(4).batches(reqs))
+    assert len(chunks) == 1
+    chunk, mat, mask = chunks[0]
+    assert mat.shape[0] == 4 and mask.tolist() == [True] * 3 + [False]
+
+    eng = _engine(cfg, params, tables, BuddyPolicy(mode="none"))
+    out = eng.generate(mat, max_new_tokens=3, row_mask=mask)
+    assert out.shape[0] == 4
+    # 3 real rows x (4 + 3 - 1) steps — the pad row's tokens are excluded
+    assert eng.stats.tokens == 3 * (mat.shape[1] + 3 - 1)
+    assert eng.stats.steps == mat.shape[1] + 3 - 1
+
+    # NLL: masked mean over a batch with a duplicated pad row equals the
+    # mean over the real rows alone (pad rows don't skew accuracy metrics)
+    data = lm.sample(2, 6)
+    padded = np.concatenate([data, data[:1]], axis=0)      # row 2 = pad copy
+    m = np.array([True, True, False])
+    eng2 = _engine(cfg, params, tables, BuddyPolicy(mode="none"), rate=1.0)
+    nll_masked = eng2.teacher_forced_nll(padded, row_mask=m)
+    eng3 = _engine(cfg, params, tables, BuddyPolicy(mode="none"), rate=1.0)
+    nll_real = eng3.teacher_forced_nll(data)
+    assert nll_masked == pytest.approx(nll_real, rel=1e-4)
+
+
+def test_generate_sampling_flag(setup):
+    """greedy=False draws from the engine's seeded PRNG: reproducible for a
+    given seed, and (at high temperature) different from the argmax path."""
+    cfg, params, lm, tables = setup
+    prompts = lm.sample(2, 4)
+    pol = BuddyPolicy(mode="none")
+
+    g1 = _engine(cfg, params, tables, pol, rate=1.0, seed=0).generate(
+        prompts, max_new_tokens=6, greedy=True)
+    g2 = _engine(cfg, params, tables, pol, rate=1.0, seed=0).generate(
+        prompts, max_new_tokens=6, greedy=True)
+    np.testing.assert_array_equal(g1, g2)          # greedy is deterministic
+
+    s1 = _engine(cfg, params, tables, pol, rate=1.0, seed=0).generate(
+        prompts, max_new_tokens=6, greedy=False, temperature=3.0)
+    s2 = _engine(cfg, params, tables, pol, rate=1.0, seed=0).generate(
+        prompts, max_new_tokens=6, greedy=False, temperature=3.0)
+    np.testing.assert_array_equal(s1, s2)          # same seed -> same draws
+    assert (s1 >= 0).all() and (s1 < cfg.vocab_size).all()
+    assert not np.array_equal(s1, g1)              # hot sampling != argmax
+    s3 = _engine(cfg, params, tables, pol, rate=1.0, seed=7).generate(
+        prompts, max_new_tokens=6, greedy=False, temperature=3.0)
+    assert not np.array_equal(s1, s3)              # different seed -> differs
+
+
 def test_summary_roundtrips(setup):
     cfg, params, lm, tables = setup
     eng = _engine(cfg, params, tables, BuddyPolicy())
