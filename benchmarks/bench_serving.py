@@ -9,11 +9,14 @@ queue depth + stall attribution).
 
 Reported per (arrival rate x cache rate): p50/p95/p99 TTFT, p99 token
 latency (arrival->token gaps), goodput (SLO-satisfying requests/s), modeled
-tokens/s, and the engine's stall attribution.
+tokens/s, and the engine's stall attribution. A third arm runs the
+continuous scheduler with CHUNKED prefill (--prefill-chunk > 1: joining
+prompts ingested C tokens per fused step instead of token-by-token), and
+the TTFT column compares chunked vs token-by-token at equal arrival rates.
 
   PYTHONPATH=src python -m benchmarks.bench_serving --smoke
   PYTHONPATH=src python -m benchmarks.bench_serving --rates 0.5,0.8 \
-      --cache-rates 0.5,0.75 --num-requests 32
+      --cache-rates 0.5,0.75 --num-requests 32 --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -69,12 +72,18 @@ def _engine(cfg, params, tables, cache_rate: float, prefetch_k: int,
         prefetch_k=prefetch_k, seed=seed)
 
 
+PROMPT_LO, PROMPT_HI = 12, 25       # prompt-length range (rng.integers)
+
+
 def _workload(lm, n: int, rate: float, max_new: int, slo: SLOConfig,
-              seed: int = 1):
+              seed: int = 1, prompt_lo: int = PROMPT_LO,
+              prompt_hi: int = PROMPT_HI):
     """Poisson arrivals, varied prompt/output lengths (output-length spread
-    is what makes lockstep batches pay the straggler barrier)."""
+    is what makes lockstep batches pay the straggler barrier; prompts long
+    enough that prefill ingestion dominates TTFT under load)."""
     rng = np.random.default_rng(seed)
-    prompts = [lm.sample(1, int(rng.integers(4, 9)))[0] for _ in range(n)]
+    prompts = [lm.sample(1, int(rng.integers(prompt_lo, prompt_hi)))[0]
+               for _ in range(n)]
     new_toks = rng.integers(2, 2 * max_new + 1, n)
     return make_requests(prompts, PoissonArrivals(rate, seed=seed + 1),
                          new_toks, slo)
@@ -91,39 +100,49 @@ def _probe_step_s(eng: ServeEngine, lm, slots: int) -> float:
 
 def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
         cache_rates=(0.5,), num_requests: int = 24, slots: int = 4,
-        max_new: int = 8, prefetch_k: int = 2) -> dict:
+        max_new: int = 8, prefetch_k: int = 2,
+        prefill_chunk: int = 8) -> dict:
     t0 = time.time()
     cfg, params, lm, tables = _setup(smoke)
     results = {}
     for cache_rate in cache_rates:
         probe = _engine(cfg, params, tables, cache_rate, prefetch_k)
         step_s = _probe_step_s(probe, lm, slots)
-        req_tokens = 6 + max_new
+        req_tokens = (PROMPT_LO + PROMPT_HI - 1) // 2 + max_new
         capacity = slots / (req_tokens * step_s)
         for load in loads:
             rate = load * capacity
             # SLO anchored to the measured unloaded step: first token within
             # ~a prompt's worth of steps + slack, deadline 3x ideal service
-            slo = SLOConfig(ttft_s=12 * step_s, tpot_s=2 * step_s,
+            slo = SLOConfig(ttft_s=2 * PROMPT_HI * step_s, tpot_s=2 * step_s,
                             deadline_s=3 * req_tokens * step_s)
 
             st_eng = _engine(cfg, params, tables, cache_rate, prefetch_k)
             st = StaticServer(st_eng, batch_size=slots)
             s_static = st.run(_workload(lm, num_requests, rate, max_new, slo))
 
-            ct_eng = _engine(cfg, params, tables, cache_rate, prefetch_k)
-            ctrl = AdaptiveBudgetController(
-                prefetch_k=prefetch_k, lookahead=1,
-                max_k=max(4, 2 * prefetch_k))
-            cs = ContinuousScheduler(ct_eng, slots=slots, controller=ctrl)
-            s_cont = cs.run(RequestQueue(
-                _workload(lm, num_requests, rate, max_new, slo)))
+            def _continuous(chunk):
+                eng = _engine(cfg, params, tables, cache_rate, prefetch_k)
+                ctrl = AdaptiveBudgetController(
+                    prefetch_k=prefetch_k, lookahead=1,
+                    max_k=max(4, 2 * prefetch_k))
+                cs = ContinuousScheduler(eng, slots=slots, controller=ctrl,
+                                         prefill_chunk=chunk)
+                return cs.run(RequestQueue(
+                    _workload(lm, num_requests, rate, max_new, slo)))
+
+            s_cont = _continuous(1)             # token-by-token prefill
+            s_chunk = _continuous(prefill_chunk)
 
             key = f"c{cache_rate}_load{load}"
             results[key] = {"arrival_rate_rps": rate,
-                            "static": s_static, "continuous": s_cont}
-            for tag, s in (("static", s_static), ("continuous", s_cont)):
-                print(f"  [{key}] {tag:11s} p99 TTFT "
+                            "prefill_chunk": prefill_chunk,
+                            "static": s_static, "continuous": s_cont,
+                            "continuous_chunked": s_chunk}
+            for tag, s in (("static", s_static), ("cont/tok", s_cont),
+                           (f"cont/C={prefill_chunk}", s_chunk)):
+                print(f"  [{key}] {tag:11s} TTFT mean "
+                      f"{s['ttft_s']['mean']*1e3:7.2f}ms  p99 "
                       f"{s['ttft_s']['p99']*1e3:7.2f}ms  p99 tok "
                       f"{s['token_latency_s']['p99']*1e3:7.2f}ms  goodput "
                       f"{s['goodput_rps']:7.1f} req/s  SLO-met "
@@ -131,8 +150,11 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
             better_p99 = (s_cont["token_latency_s"]["p99"]
                           <= s_static["token_latency_s"]["p99"])
             better_good = (s_cont["goodput_rps"] >= s_static["goodput_rps"])
+            better_ttft = (s_chunk["ttft_s"]["mean"]
+                           < s_cont["ttft_s"]["mean"])
             print(f"  [{key}] continuous better: p99 token latency "
-                  f"{better_p99}, goodput {better_good}")
+                  f"{better_p99}, goodput {better_good}; chunked prefill "
+                  f"lowers mean TTFT: {better_ttft}")
             out_rows.append((
                 f"serving.{key}.p99_tok_ms_cont",
                 s_cont["token_latency_s"]["p99"] * 1e3,
@@ -140,6 +162,10 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
             out_rows.append((
                 f"serving.{key}.goodput_rps_cont", s_cont["goodput_rps"],
                 f"static={s_static['goodput_rps']:.1f}"))
+            out_rows.append((
+                f"serving.{key}.ttft_mean_ms_chunk{prefill_chunk}",
+                s_chunk["ttft_s"]["mean"] * 1e3,
+                f"chunk1={s_cont['ttft_s']['mean']*1e3:.2f}"))
 
     os.makedirs(common.CACHE_DIR, exist_ok=True)
     with open(os.path.join(common.CACHE_DIR, "serving.json"), "w") as f:
@@ -158,17 +184,20 @@ if __name__ == "__main__":
     ap.add_argument("--num-requests", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="chunk size for the chunked-prefill arm (compared "
+                         "against token-by-token at equal arrival rates)")
     args = ap.parse_args()
     rows = []
     if args.smoke:
         run(rows, smoke=True, loads=(1.0,), cache_rates=(0.5,),
-            num_requests=16, max_new=6)
+            num_requests=16, max_new=6, prefill_chunk=args.prefill_chunk)
     else:
         run(rows,
             loads=tuple(float(x) for x in args.rates.split(",")),
             cache_rates=tuple(float(x) for x in args.cache_rates.split(",")),
             num_requests=args.num_requests, slots=args.slots,
-            max_new=args.max_new)
+            max_new=args.max_new, prefill_chunk=args.prefill_chunk)
     print("\nname,value,derived")
     for name, v, derived in rows:
         print(f"{name},{v:.2f},{derived}")

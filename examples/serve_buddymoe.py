@@ -3,7 +3,7 @@ configurable cache rate, with the full request/batcher plumbing.
 
 Run:  PYTHONPATH=src python examples/serve_buddymoe.py --cache-rate 0.5
       PYTHONPATH=src python examples/serve_buddymoe.py --continuous \
-          --arrival-rate 400
+          --arrival-rate 400 --prefill-chunk 8
 """
 import argparse
 import os
@@ -55,6 +55,9 @@ def main():
                          "batching instead of static batches")
     ap.add_argument("--arrival-rate", type=float, default=300.0,
                     help="requests per simulated second (--continuous)")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens per fused step when a request joins "
+                         "(--continuous; 1 = token-by-token)")
     args = ap.parse_args()
 
     cfg, lm, eng = build_engine(args)
@@ -74,11 +77,12 @@ def main():
                 max_k=2 * args.prefetch,
                 max_lookahead=max(4, args.lookahead))
         sched = ContinuousScheduler(eng, slots=args.batch_size,
-                                    controller=ctrl)
+                                    controller=ctrl,
+                                    prefill_chunk=args.prefill_chunk)
         s = sched.run(RequestQueue(reqs))
         print(f"\ncontinuous: {s['completed']}/{s['num_requests']} done, "
-              f"{s['steps']} steps, mean occupancy "
-              f"{s['mean_occupancy']:.2f}/{args.batch_size}")
+              f"{s['steps']} steps (prefill chunk {args.prefill_chunk}), "
+              f"mean occupancy {s['mean_occupancy']:.2f}/{args.batch_size}")
         print(f"TTFT p50/p95/p99: {s['ttft_s']['p50']*1e3:.2f}/"
               f"{s['ttft_s']['p95']*1e3:.2f}/{s['ttft_s']['p99']*1e3:.2f}ms")
         print(f"goodput {s['goodput_rps']:.1f} req/s "

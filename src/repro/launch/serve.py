@@ -8,6 +8,10 @@
     PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
         --num-requests 16 --arrival-rate 500 --slots 4 \
         --slo-ttft-ms 5 --slo-tpot-ms 1 --adaptive-prefetch
+
+    # chunked prefill: joining prompts ingested 8 tokens per fused step
+    PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
+        --num-requests 16 --arrival-rate 500 --slots 4 --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -95,12 +99,17 @@ def main():
                     help="end-to-end deadline; with --admission slo, doomed "
                          "requests are shed instead of admitted")
     ap.add_argument("--admission", choices=["fcfs", "slo"], default="fcfs")
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens ingested per fused step when a "
+                         "request joins (1: token-by-token through decode)")
     ap.add_argument("--adaptive-prefetch", action="store_true",
                     help="resize prefetch budget from queue depth + stall "
                          "attribution instead of the fixed --prefetch-k")
     args = ap.parse_args()
     if args.lookahead < 1:
         ap.error("--lookahead must be >= 1 (layers ahead to prefetch)")
+    if args.prefill_chunk < 1:
+        ap.error("--prefill-chunk must be >= 1 (prompt tokens per fused step)")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     assert cfg.is_moe, "serving engine targets MoE archs"
@@ -170,7 +179,8 @@ def _serve_continuous(args, cfg, eng, lm, prefetch_k):
             prefetch_k=prefetch_k, lookahead=args.lookahead,
             max_k=max(2 * prefetch_k, 4),
             max_lookahead=max(4, args.lookahead))
-    sched = ContinuousScheduler(eng, slots=args.slots, controller=ctrl)
+    sched = ContinuousScheduler(eng, slots=args.slots, controller=ctrl,
+                                prefill_chunk=args.prefill_chunk)
     s = sched.run(queue)
     print(json.dumps(s, indent=1, default=str))
     print(f"completed {s['completed']}/{s['num_requests']} "

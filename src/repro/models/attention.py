@@ -203,6 +203,84 @@ def attn_decode(params, x_tok, cache, pos, *, num_heads, num_kv_heads, head_dim,
     return y, {"k": k_cache, "v": v_cache}
 
 
+def attn_prefill_chunk(params, x_chunk, cache, base_pos, tok_valid, *,
+                       num_heads, num_kv_heads, head_dim, rope_theta,
+                       window: int = 0):
+    """Chunked prefill step: C tokens per row written into the decode cache
+    in one fused call. x_chunk [B, C, D]; cache k/v [B, Cap, KV, hd];
+    base_pos [B] absolute position of each row's first chunk token;
+    tok_valid [B, C] PREFIX validity mask (token j live iff j < count(row)).
+    Invalid tokens flow through the fixed-shape graph but write nothing and
+    their outputs are garbage the caller discards.
+
+    Ring-buffer caveat: the whole chunk is scattered into the cache before
+    any query attends, so a chunk that wraps the ring (base_pos + C > Cap)
+    would let early queries see slots already overwritten by later chunk
+    tokens. Callers must keep prompts inside the cache capacity during
+    chunked prefill (ServeEngine.prefill_rows guards this host-side).
+
+    Returns (y [B, C, D], new_cache). With C == 1 this computes bit-for-bit
+    what attn_decode's per-row path computes.
+    """
+    b, c, _ = x_chunk.shape
+    cap = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(params, x_chunk, x_chunk, num_heads,
+                                   num_kv_heads, head_dim)
+    base = jnp.asarray(base_pos, jnp.int32)
+    pos = base[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]    # [B, C]
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+    k_new = shard(k_new, "batch", None, "cache_heads", "cache_hd")
+    v_new = shard(v_new, "batch", None, "cache_heads", "cache_hd")
+    # batched scatter of the whole chunk; invalid tokens aim out of range
+    # and are dropped (inactive rows leave their cache untouched)
+    rows = jnp.arange(b)[:, None]
+    slots = jnp.where(tok_valid, pos % cap, cap)
+    k_cache = cache["k"].at[rows, slots].set(k_new, mode="drop")
+    v_cache = cache["v"].at[rows, slots].set(v_new, mode="drop")
+
+    # Slot-content positions from each row's LAST write (the chunk is fully
+    # written): content <= query position masks out both unwritten slots and
+    # the row's own future chunk tokens — per-query causality inside the
+    # chunk comes for free.
+    count = tok_valid.astype(jnp.int32).sum(axis=1)
+    m = (base + jnp.maximum(count, 1) - 1)[:, None]                  # [B, 1]
+    idx = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    content = m - ((m - idx) % cap)                                  # [B, Cap]
+    valid = (content >= 0)[:, None, :] & \
+        (content[:, None, :] <= pos[:, :, None])                     # [B, C, Cap]
+    if window:
+        valid = valid & (content[:, None, :] > pos[:, :, None] - window)
+
+    out = _attend_chunk(q, k_cache, v_cache, valid)
+    g = num_heads // num_kv_heads
+    d_model = params["wo"].shape[1]
+    wo4 = params["wo"].reshape(num_kv_heads, g, head_dim, d_model)
+    wo4 = shard(wo4, "cache_heads", None, "cache_hd", None)
+    out4 = out.reshape(b, c, num_kv_heads, g, head_dim)
+    y = jnp.einsum("bqkgh,kghd->bqd", out4, wo4,
+                   preferred_element_type=jnp.float32).astype(x_chunk.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def _attend_chunk(q, k, v, valid):
+    """q [B, C, H, hd] vs full cache k, v [B, Cap, KV, hd]; valid [B, C, Cap]
+    per-(row, query) slot mask. The C == 1 case reduces elementwise to
+    _attend_single (same einsum contractions, one extra unit axis)."""
+    b, c_q, h, hd = q.shape
+    kv_h = k.shape[2]
+    g = h // kv_h
+    qg = q.reshape(b, c_q, kv_h, g, hd)
+    qg = shard(qg, "batch", None, "cache_heads", None, "cache_hd")
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    s = shard(s, "batch", None, "cache_heads", None, "cache_seq")
+    s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqkgc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return out.reshape(b, c_q, h, hd).astype(q.dtype)
+
+
 def _attend_single(q, k, v, valid, _unused, num_kv_heads, head_dim):
     """q [B,1,H,hd] vs full cache k,v [B,C,KV,hd] (single einsum, no chunking).
     valid: [B, C] (per-row positions) or [1, C] (lockstep) slot-validity mask."""

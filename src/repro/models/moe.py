@@ -106,8 +106,14 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
                 buddy: Optional[BuddyState] = None,
                 capacity_factor: float = 1.25,
                 jitter_key=None,
-                use_kernel: bool = False) -> tuple:
-    """x: [B, S, D] (or [T, D]). Returns (y, MoEAux)."""
+                use_kernel: bool = False,
+                dropless: bool = False) -> tuple:
+    """x: [B, S, D] (or [T, D]). Returns (y, MoEAux).
+
+    ``dropless``: force the capacity-based dispatch path with capacity
+    S*K (no token ever dropped, no tiny-batch gather shortcut) — chunked
+    prefill needs per-token outputs independent of which other tokens share
+    the chunk, so C=1 and C=8 chunks produce identical per-token results."""
     orig_shape = x.shape
     d = x.shape[-1]
     x_flat = x.reshape(-1, d)
@@ -143,7 +149,7 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
     # (long-context decode, B*K < E), gathering the selected experts' weight
     # rows reads only the ACTIVE experts from HBM — the dense dispatch path
     # below streams all E experts' weights every step. §Perf iteration 6.
-    if x.ndim == 3 and x.shape[1] == 1 and t_n * k_n < e_n:
+    if not dropless and x.ndim == 3 and x.shape[1] == 1 and t_n * k_n < e_n:
         e_flat = new_idx.reshape(-1)                               # [T*K]
         w1s = params["w1"][e_flat]                                 # [T*K, D, F]
         w3s = params["w3"][e_flat]
@@ -182,8 +188,11 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
     row_e = new_idx.reshape(rows, s_n * k_n)                        # [B, S*K]
     onehot = jax.nn.one_hot(row_e, e_n, dtype=jnp.float32)          # [B, S*K, E]
     pos = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1).astype(jnp.int32) - 1
-    cap = int(max(k_n, s_n * k_n / e_n * capacity_factor))
-    cap = min(s_n * k_n, -(-cap // 8) * 8)
+    if dropless:
+        cap = s_n * k_n
+    else:
+        cap = int(max(k_n, s_n * k_n / e_n * capacity_factor))
+        cap = min(s_n * k_n, -(-cap // 8) * 8)
     kept = pos < cap
     n_dropped = (~kept).sum()
     pos_safe = jnp.where(kept, pos, cap)                            # cap -> dropped

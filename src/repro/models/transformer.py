@@ -114,13 +114,15 @@ def init_params(cfg: ModelConfig, key) -> dict:
 # ===========================================================================
 class StepCtx(NamedTuple):
     cfg: ModelConfig
-    mode: str                      # "full" | "step"
+    mode: str                      # "full" | "step" | "chunk"
     window: int                    # effective attention window (0 = full)
     policy: Optional[BuddyPolicy]
-    positions: Any                 # [B, S] (full) or scalar pos (step)
+    positions: Any                 # [B, S] (full), scalar/[B] pos (step),
+    #                                or [B] per-row base positions (chunk)
     rng: Any                       # router jitter key or None
     record: bool
     remat: bool = False            # checkpoint each scanned block (training)
+    tok_valid: Any = None          # [B, C] prefix validity mask (chunk mode)
 
 
 def _attn_kwargs(cfg: ModelConfig):
@@ -133,6 +135,10 @@ def _self_attn(p, x, cache, ctx: StepCtx):
         y = attn.attn_forward(p, x, ctx.positions, window=ctx.window,
                               **_attn_kwargs(ctx.cfg))
         return y, cache
+    if ctx.mode == "chunk":
+        return attn.attn_prefill_chunk(p, x, cache, ctx.positions,
+                                       ctx.tok_valid, window=ctx.window,
+                                       **_attn_kwargs(ctx.cfg))
     y, cache = attn.attn_decode(p, x, cache, ctx.positions,
                                 window=ctx.window, **_attn_kwargs(ctx.cfg))
     return y, cache
@@ -174,7 +180,8 @@ def block_forward(kind: str, p, x, cache, ctx: StepCtx, buddy=None,
             y, moe_aux = moe_mod.moe_forward(
                 p["moe"], xn, cfg.moe, policy=ctx.policy, buddy=buddy,
                 jitter_key=ctx.rng,
-                capacity_factor=2.0 if ctx.mode == "step" else 1.25)
+                capacity_factor=2.0 if ctx.mode == "step" else 1.25,
+                dropless=ctx.mode == "chunk")
             aux = _moe_aux_dict(cfg, moe_aux, ctx.record)
         else:
             y = swiglu(xn, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
@@ -490,6 +497,53 @@ def decode_step(params, cfg: ModelConfig, token, caches, pos, *,
             if record and aux.get("per_layer"):
                 rec.append(aux["per_layer"])
     logits = _logits(params, cfg, x[:, 0])
+    if record:
+        total_aux["recorded"] = rec
+    return logits, tuple(new_caches), total_aux
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, caches, base_pos,
+                  tok_valid, *, policy: Optional[BuddyPolicy] = None,
+                  buddies=None, rng=None, window: int = -1,
+                  record: bool = False):
+    """Fused multi-token step for chunked prefill (continuous batching).
+
+    tokens [B, C] int32; base_pos [B] int32 — absolute position of each
+    row's first chunk token; tok_valid [B, C] bool PREFIX mask — row b's
+    tokens j < count(b) are live, the rest ride the fixed-shape graph and
+    write nothing. A decode row joins the step as a 1-valid-token chunk, so
+    one launch serves prefill and decode rows together (no barrier).
+
+    Returns (logits [B, C, V], new_caches, aux). aux token axes are the
+    flattened [B*C] chunk (row-major) — mask host-side with tok_valid.
+    MoE dispatch is dropless in this mode, so per-token outputs (and the
+    cache entries derived from them) are independent of chunk size.
+    """
+    assert all(k in (ATTN_DENSE, ATTN_MOE) for k, _ in cfg.stack()), \
+        "chunked prefill supports attention stacks only (KV caches; " \
+        f"SSM/hybrid/VLM states are sequential), got {cfg.stack()}"
+    if window < 0:
+        window = cfg.sliding_window
+    x = params["embed"][tokens]                       # [B, C, D]
+    x = shard(x, "batch", None, None)
+    base_pos = jnp.asarray(base_pos, jnp.int32)
+    if cfg.family == "audio" and cfg.num_cond_tokens:
+        base_pos = base_pos + cfg.num_cond_tokens
+    ctx = StepCtx(cfg, "chunk", window, policy, base_pos, rng, record,
+                  tok_valid=tok_valid)
+
+    total_aux = _zero_moe_aux(cfg)
+    rec = []
+    new_caches = []
+    for kind, gp, gc, gb in _iter_groups(params, cfg, caches, buddies):
+        x, nc, aux = _run_group(kind, gp, x, gc, ctx, gbuddy=gb)
+        new_caches.append(nc)
+        if aux:
+            for k in total_aux:
+                total_aux[k] = total_aux[k] + aux.get(k, 0)
+            if record and aux.get("per_layer"):
+                rec.append(aux["per_layer"])
+    logits = _logits(params, cfg, x)                  # [B, C, V]
     if record:
         total_aux["recorded"] = rec
     return logits, tuple(new_caches), total_aux

@@ -33,7 +33,10 @@ class ExpertCache:
         assert policy in ("lru", "lfu")
         self.num_layers = num_layers
         self.num_experts = num_experts
-        self.capacity = max(1, int(round(cache_rate * num_experts)))
+        # clamp to [1, E]: cache_rate > 1 just means "everything fits" (the
+        # unclamped capacity made rng.choice(E, capacity, replace=False) throw)
+        self.capacity = min(num_experts,
+                            max(1, int(round(cache_rate * num_experts))))
         self.policy = policy
         self.num_partitions = num_partitions
         self.resident = np.zeros((num_layers, num_experts), bool)

@@ -39,6 +39,10 @@ class TopFreqPredictor(LookaheadMixin):
         self.freq = np.ones((num_layers, num_experts), np.float64)
         self.decay = decay
 
+    def clone_fresh(self) -> "TopFreqPredictor":
+        """Same configuration, no learned state (benchmark-run resets)."""
+        return TopFreqPredictor(*self.freq.shape, decay=self.decay)
+
     def observe(self, layer: int, experts) -> None:
         self.freq[layer] *= self.decay
         np.add.at(self.freq[layer], np.asarray(experts, np.int64).reshape(-1), 1.0)
@@ -51,6 +55,9 @@ class PrevStepPredictor(LookaheadMixin):
     def __init__(self, num_layers: int, num_experts: int):
         self.prev = [np.array([], np.int64) for _ in range(num_layers)]
         self.freq = TopFreqPredictor(num_layers, num_experts)
+
+    def clone_fresh(self) -> "PrevStepPredictor":
+        return PrevStepPredictor(*self.freq.freq.shape)
 
     def observe(self, layer: int, experts) -> None:
         self.prev[layer] = np.unique(np.asarray(experts, np.int64).reshape(-1))
@@ -68,9 +75,14 @@ class CrossLayerPredictor(LookaheadMixin):
     """P(expert j at layer l | expert i at layer l-1), profiled offline."""
 
     def __init__(self, num_layers: int, num_experts: int, eps: float = 1e-3):
+        self.eps = eps
         self.C = np.full((num_layers, num_experts, num_experts), eps, np.float64)
         self.prev_set: Optional[np.ndarray] = None
         self.freq = TopFreqPredictor(num_layers, num_experts)
+
+    def clone_fresh(self) -> "CrossLayerPredictor":
+        return CrossLayerPredictor(self.C.shape[0], self.C.shape[1],
+                                   eps=self.eps)
 
     def observe_transition(self, layer: int, prev_experts, cur_experts) -> None:
         prev_experts = np.unique(np.asarray(prev_experts, np.int64).reshape(-1))
@@ -223,8 +235,13 @@ class NoisyOraclePredictor(LookaheadMixin):
                  seed: int = 0):
         self.num_experts = num_experts
         self.accuracy = accuracy
+        self.seed = seed
         self.truth = [np.array([], np.int64) for _ in range(num_layers)]
         self.rng = np.random.default_rng(seed)
+
+    def clone_fresh(self) -> "NoisyOraclePredictor":
+        return NoisyOraclePredictor(len(self.truth), self.num_experts,
+                                    accuracy=self.accuracy, seed=self.seed)
 
     def set_truth(self, layer: int, experts) -> None:
         self.truth[layer] = np.unique(np.asarray(experts, np.int64).reshape(-1))
@@ -235,14 +252,24 @@ class NoisyOraclePredictor(LookaheadMixin):
     def predict(self, layer: int, k: int, rng=None) -> np.ndarray:
         rng = rng or self.rng
         t = self.truth[layer][:k]
-        out = []
+        out, seen, corrupted = [], set(), []
+        # corrupted draws can collide with an already-emitted expert; dedup
+        # them like the back-fill loop so the prediction stays a k-set
+        # (duplicates silently shrank the effective prefetch set below k).
+        # Accurate truth draws land first — a colliding corrupted draw must
+        # displace ITSELF, not a truth expert, or the realised accuracy
+        # drifts below the configured knob.
         for e in t:
             if rng.random() < self.accuracy:
                 out.append(int(e))
+                seen.add(int(e))          # truth is unique: never collides
             else:
-                out.append(int(rng.integers(0, self.num_experts)))
-        seen = set(out)
-        while len(out) < k:
+                corrupted.append(int(rng.integers(0, self.num_experts)))
+        for e in corrupted:
+            if e not in seen:
+                out.append(e)
+                seen.add(e)
+        while len(out) < min(k, self.num_experts):
             e = int(rng.integers(0, self.num_experts))
             if e not in seen:
                 out.append(e)

@@ -278,12 +278,20 @@ class TransferScheduler:
         return self.now
 
     # -- introspection --------------------------------------------------
+    # escalate() re-pushes a QUEUED transfer at its new priority and leaves
+    # the stale heap entry behind (skipped on pop by the state/priority
+    # check), so heap walks must dedup by tid or escalated transfers are
+    # counted twice.
     @property
     def n_in_flight(self) -> int:
-        return len(self._active) + sum(
-            1 for _, _, t in self._queued if t.state == QUEUED)
+        return len(self._active) + len(
+            {t.tid for _, _, t in self._queued if t.state == QUEUED})
 
     def pending(self) -> List[Transfer]:
         out = list(self._active)
-        out.extend(t for _, _, t in sorted(self._queued) if t.state == QUEUED)
+        seen = {t.tid for t in out}
+        for _, _, t in sorted(self._queued):
+            if t.state == QUEUED and t.tid not in seen:
+                seen.add(t.tid)
+                out.append(t)
         return out

@@ -117,6 +117,11 @@ class ServeEngine:
                               policy=self.policy, record=True,
                               window=self.window),
             static_argnames=())
+        self._chunk_fn = jax.jit(
+            functools.partial(transformer.prefill_chunk, cfg=self.cfg,
+                              policy=self.policy, record=True,
+                              window=self.window),
+            static_argnames=())
 
     # ------------------------------------------------------------------
     def _buddy_state(self) -> BuddyState:
@@ -151,12 +156,64 @@ class ServeEngine:
         self._account(aux, active=np.asarray(active, bool))
         return logits, caches
 
+    def prefill_rows(self, tokens, rows, caches, base_pos, tok_valid=None):
+        """Fused chunked-prefill step: ingest up to C tokens per row in ONE
+        jitted launch and ONE timeline replay (vs C decode steps).
+
+        tokens [B, C] int32; ``rows`` bool [B] marks live slots (others ride
+        the fixed-shape graph masked out of all accounting); base_pos [B] is
+        each row's absolute position of chunk token 0; tok_valid [B, C] is a
+        PREFIX validity mask (default: every token of a live row). A decode
+        row joins as a 1-valid-token chunk, so decode rows keep stepping
+        while a neighbour slot prefills.
+
+        The chunk is compute-dense on the simulated clock — all its tokens
+        share one weight-streaming pass in ``hw.decode_compute_time`` — so
+        per-layer compute slices are ~C× longer and hide proportionally more
+        PCIe transfer time. The chunk's dense expert activations feed the
+        predictor/cache (``_observe_layer``) as a high-confidence warm-up
+        for the request's first decode steps.
+
+        Returns (logits [B, C, V], new_caches); row i's next-token logits
+        sit at index ``tok_valid[i].sum() - 1``."""
+        tokens = jnp.asarray(tokens, jnp.int32)
+        b, c = tokens.shape
+        rows = np.asarray(rows, bool)
+        if tok_valid is None:
+            tok_valid = np.repeat(rows[:, None], c, axis=1)
+        tok_valid = np.asarray(tok_valid, bool) & rows[:, None]
+        base = np.asarray(base_pos, np.int32)
+        counts = tok_valid.sum(axis=1)
+        # ring-wrap guard: a multi-token chunk is scattered into the KV cache
+        # before its queries attend, so it must not wrap the ring buffer
+        # (attn_prefill_chunk); single-token rows are plain decode writes
+        cap = jax.tree.leaves(caches)[0].shape[2]
+        multi = counts > 1
+        assert not multi.any() or int((base[multi] + counts[multi]).max()) <= cap, \
+            "chunked prefill would wrap the KV ring buffer: size caches to " \
+            "the full prompt (prompt end %d > capacity %d)" % (
+                int((base[multi] + counts[multi]).max()), cap)
+
+        buddies = self._buddy_state()
+        self._key, sub = jax.random.split(self._key)
+        logits, caches, aux = self._chunk_fn(
+            params=self.params, tokens=tokens, caches=caches,
+            base_pos=jnp.asarray(base, jnp.int32),
+            tok_valid=jnp.asarray(tok_valid), buddies=buddies, rng=sub)
+        self._account(aux, active=tok_valid.reshape(-1))
+        return logits, caches
+
     # -- per-layer step timeline ---------------------------------------
     def _account(self, aux, active: np.ndarray) -> None:
         """Replay the step on the transfer timeline, layer by layer.
-        ``active`` [B] masks which batch rows carry live requests — pad rows
-        (StaticBatcher) and empty decode slots (continuous batching) must not
-        generate expert traffic or count as served tokens."""
+        ``active`` is a flat [T] TOKEN mask (T = B for decode steps, B*C
+        row-major for chunk steps) — pad rows (StaticBatcher), empty decode
+        slots, and invalid chunk tokens must not generate expert traffic or
+        count as served tokens. Per-step compute is
+        ``hw.decode_compute_time(active_params, n_valid_tokens)``: every
+        valid token pays the FLOPs term but the weight-streaming memory term
+        is paid once per step — which is exactly why a fused prefill chunk
+        beats C single-token steps on the clock."""
         n_active = int(active.sum())
         if n_active == 0:
             return
@@ -285,7 +342,13 @@ class ServeEngine:
                                 buddy_candidates=old.buddy_candidates)
         self.cache = cache
         if predictor is None and self.predictor is not None:
-            predictor = type(self.predictor)(self.num_moe_layers, e)
+            # carry the predictor's configuration (accuracy/seed/decay/...)
+            # into the fresh instance — a bare type(...)(L, E) silently reset
+            # every knob to its default between benchmark runs
+            if hasattr(self.predictor, "clone_fresh"):
+                predictor = self.predictor.clone_fresh()
+            else:
+                predictor = type(self.predictor)(self.num_moe_layers, e)
         self.predictor = predictor
         self.ledger = TransferLedger(self.hw)
         self.scheduler = TransferScheduler(self.hw)

@@ -312,29 +312,99 @@ class ContinuousScheduler:
     interleave with decode tokens of the others, no global barrier. A row
     retires the step its budget completes and the slot is re-admitted from
     the queue before the next step.
+
+    ``prefill_chunk`` > 1 switches admission to CHUNKED prefill: a joining
+    prompt is ingested in ⌈P/C⌉ fused multi-token steps
+    (``ServeEngine.prefill_rows``) instead of P token-by-token decode steps.
+    Decode rows ride the same fused step as 1-valid-token chunks, so they
+    keep emitting while a neighbour slot prefills (each fused step is one
+    step on the clock — the chunked-prefill interference trade-off: slightly
+    longer steps for everyone vs a far shorter prefill phase and TTFT).
     """
 
     def __init__(self, engine, slots: int, *,
                  greedy: bool = True, temperature: float = 1.0,
                  controller: Optional[AdaptiveBudgetController] = None,
-                 max_steps: int = 1_000_000):
+                 max_steps: int = 1_000_000, prefill_chunk: int = 1):
         assert slots >= 1
+        assert prefill_chunk >= 1
         self.engine = engine
         self.slots = slots
         self.greedy = greedy
         self.temperature = temperature
         self.controller = controller
         self.max_steps = max_steps
+        self.prefill_chunk = prefill_chunk
         self.completed: List[ServeRequest] = []
         self.occupancy: List[int] = []
         self.steps = 0
 
     # -- service-time estimate for SLO-aware admission ------------------
     def _est_service(self, r: ServeRequest, est_step_s: float) -> float:
-        return (len(r.prompt) + r.max_new_tokens) * est_step_s
+        prefill_steps = -(-len(r.prompt) // self.prefill_chunk)
+        return (prefill_steps + r.max_new_tokens) * est_step_s
+
+    # -- scaffolding shared by the token-by-token and chunked loops -----
+    def _admit(self, queue: RequestQueue, slot, pos, tok, caches):
+        """Fill free slots from the backlog at the current clock; reset the
+        decode caches of reused rows. Returns (caches, active mask)."""
+        eng = self.engine
+        now = eng.scheduler.now
+        newly = []
+        for i in range(self.slots):
+            if slot[i] is not None:
+                continue
+            r = queue.pop(now,
+                          lambda rq: self._est_service(rq, self._est_step_s))
+            if r is None:
+                break
+            r.state = RUNNING
+            r.admitted_s = now
+            r.cursor = 1
+            slot[i] = r
+            pos[i] = 0
+            tok[i] = int(r.prompt[0])
+            newly.append(i)
+        if newly:
+            caches = eng.reset_rows(caches, newly)
+        return caches, np.array([s is not None for s in slot], bool)
+
+    def _tick(self, t0: float, n_active: int) -> float:
+        """Post-step bookkeeping: refine the EWMA step estimate, count the
+        step and its occupancy. Returns the step's completion time."""
+        t1 = self.engine.scheduler.now
+        self._est_step_s = 0.9 * self._est_step_s + 0.1 * max(t1 - t0, 1e-12)
+        self.steps += 1
+        self.occupancy.append(n_active)
+        return t1
+
+    def _emit(self, slot, i: int, nxt: int, t1: float, tok) -> None:
+        """Record a sampled token for slot ``i``; mid-step retirement frees
+        the slot the step its budget completes."""
+        r = slot[i]
+        r.tokens.append(nxt)
+        r.token_times.append(t1)
+        if r.first_token_s < 0:
+            r.first_token_s = t1
+        tok[i] = nxt
+        if len(r.tokens) >= r.max_new_tokens:
+            r.state = FINISHED
+            r.finished_s = t1
+            self.completed.append(r)
+            slot[i] = None
+
+    def _feedback(self, queue: RequestQueue) -> None:
+        """Resize the prefetch budget from stall attribution + queue depth."""
+        if self.controller is not None:
+            self.controller.observe_step(
+                self.engine.stall_breakdown(),
+                queue.depth(self.engine.scheduler.now))
+            self.controller.apply(self.engine)
 
     def run(self, queue: RequestQueue,
             max_context: Optional[int] = None) -> dict:
+        if self.prefill_chunk > 1:
+            return self._run_chunked(queue, max_context)
         eng = self.engine
         b = self.slots
         ctx = max_context or queue.max_context()
@@ -344,43 +414,22 @@ class ContinuousScheduler:
         tok = np.zeros(b, np.int64)
         t_start = eng.scheduler.now
         # seed the step-time estimate from the hardware model (refined online)
-        est_step_s = eng.hw.decode_compute_time(eng._active_params, b)
+        self._est_step_s = eng.hw.decode_compute_time(eng._active_params, b)
 
         while self.steps < self.max_steps:
-            now = eng.scheduler.now
-            # ---- admission: fill free slots from the backlog ----------
-            newly = []
-            for i in range(b):
-                if slot[i] is not None:
-                    continue
-                r = queue.pop(now, lambda rq: self._est_service(rq, est_step_s))
-                if r is None:
-                    break
-                r.state = RUNNING
-                r.admitted_s = now
-                r.cursor = 1
-                slot[i] = r
-                pos[i] = 0
-                tok[i] = int(r.prompt[0])
-                newly.append(i)
-            if newly:
-                caches = eng.reset_rows(caches, newly)
-            active = np.array([s is not None for s in slot], bool)
+            caches, active = self._admit(queue, slot, pos, tok, caches)
             if not active.any():
                 nxt = queue.next_arrival()
                 if nxt is None:
                     break                       # drained: all work done
-                eng.scheduler.advance(max(now, nxt))
+                eng.scheduler.advance(max(eng.scheduler.now, nxt))
                 continue
 
             # ---- one fused step: prefill + decode rows together -------
-            t0 = now
+            t0 = eng.scheduler.now
             logits, caches = eng.step(jnp.asarray(tok, jnp.int32), caches,
                                       pos.copy(), active=active)
-            t1 = eng.scheduler.now
-            est_step_s = 0.9 * est_step_s + 0.1 * max(t1 - t0, 1e-12)
-            self.steps += 1
-            self.occupancy.append(int(active.sum()))
+            t1 = self._tick(t0, int(active.sum()))
 
             sampled = eng.sample_tokens(logits, self.greedy, self.temperature)
             for i in range(b):
@@ -392,23 +441,81 @@ class ContinuousScheduler:
                     tok[i] = int(r.prompt[r.cursor])
                     r.cursor += 1
                     continue
-                nxt = int(sampled[i])
-                r.tokens.append(nxt)
-                r.token_times.append(t1)
-                if r.first_token_s < 0:
-                    r.first_token_s = t1
-                tok[i] = nxt
-                if len(r.tokens) >= r.max_new_tokens:   # mid-step retirement
-                    r.state = FINISHED
-                    r.finished_s = t1
-                    self.completed.append(r)
-                    slot[i] = None
+                self._emit(slot, i, int(sampled[i]), t1, tok)
+            self._feedback(queue)
 
-            # ---- feedback: resize the prefetch budget -----------------
-            if self.controller is not None:
-                self.controller.observe_step(eng.stall_breakdown(),
-                                             queue.depth(eng.scheduler.now))
-                self.controller.apply(eng)
+        return self.summary(queue, t_start)
+
+    def _run_chunked(self, queue: RequestQueue,
+                     max_context: Optional[int] = None) -> dict:
+        """Chunked-prefill serving loop. Per-row state is just ``pos`` (next
+        position to feed): pos < len(prompt) means the row is prefilling and
+        the step feeds prompt[pos : pos+C]; otherwise it feeds the last
+        sampled token. A fused step only launches while some row prefills —
+        pure-decode steps use the cheaper single-token graph."""
+        eng = self.engine
+        b, chunk = self.slots, self.prefill_chunk
+        ctx = max_context or queue.max_context()
+        caches = eng.init_caches(b, ctx)
+        slot: List[Optional[ServeRequest]] = [None] * b
+        pos = np.zeros(b, np.int32)
+        tok = np.zeros(b, np.int64)
+        t_start = eng.scheduler.now
+        self._est_step_s = eng.hw.decode_compute_time(eng._active_params, b)
+
+        while self.steps < self.max_steps:
+            caches, active = self._admit(queue, slot, pos, tok, caches)
+            if not active.any():
+                nxt = queue.next_arrival()
+                if nxt is None:
+                    break                       # drained: all work done
+                eng.scheduler.advance(max(eng.scheduler.now, nxt))
+                continue
+
+            # ---- one fused step: prefill chunks + decode rows ---------
+            t0 = eng.scheduler.now
+            n_feed = np.zeros(b, np.int32)
+            prefilling = any(slot[i] is not None
+                             and pos[i] < len(slot[i].prompt)
+                             for i in range(b))
+            if prefilling:
+                tokens = np.zeros((b, chunk), np.int64)
+                valid = np.zeros((b, chunk), bool)
+                for i in range(b):
+                    r = slot[i]
+                    if r is None:
+                        continue
+                    if pos[i] < len(r.prompt):
+                        n = min(chunk, len(r.prompt) - pos[i])
+                        tokens[i, :n] = r.prompt[pos[i]:pos[i] + n]
+                    else:
+                        n = 1
+                        tokens[i, 0] = tok[i]
+                    valid[i, :n] = True
+                    n_feed[i] = n
+                logits, caches = eng.prefill_rows(
+                    jnp.asarray(tokens, jnp.int32), active, caches,
+                    base_pos=pos.copy(), tok_valid=valid)
+                step_logits = logits[jnp.arange(b),
+                                     jnp.maximum(n_feed - 1, 0)]
+            else:
+                n_feed[active] = 1
+                step_logits, caches = eng.step(
+                    jnp.asarray(tok, jnp.int32), caches, pos.copy(),
+                    active=active)
+            t1 = self._tick(t0, int(active.sum()))
+
+            sampled = eng.sample_tokens(step_logits, self.greedy,
+                                        self.temperature)
+            for i in range(b):
+                r = slot[i]
+                if r is None:
+                    continue
+                pos[i] += n_feed[i]
+                if pos[i] < len(r.prompt):      # still prefilling this row
+                    continue
+                self._emit(slot, i, int(sampled[i]), t1, tok)
+            self._feedback(queue)
 
         return self.summary(queue, t_start)
 

@@ -114,6 +114,30 @@ def test_crosslayer_predictor():
     assert set(got) == {4, 5}
 
 
+def test_cache_rate_above_one_clamps_to_full():
+    """Regression: cache_rate > 1 crashed __init__ (rng.choice of capacity >
+    E without replacement); it just means the whole expert set fits."""
+    c = ExpertCache(2, 8, 1.5, seed=0)
+    assert c.capacity == 8
+    assert c.resident.all()
+    assert c.insert(0, 3) == -1           # already resident, nothing evicted
+    assert c.resident[0].sum() == 8
+    # boundary: exactly full keeps every expert resident too
+    assert ExpertCache(1, 8, 1.0, seed=0).capacity == 8
+
+
+def test_noisy_oracle_dedups_corrupted_draws():
+    """Regression: a corrupted draw colliding with an already-emitted expert
+    silently shrank the prediction below k; collisions must be deduped and
+    back-filled like the top-up loop."""
+    p = NoisyOraclePredictor(1, 8, accuracy=0.5, seed=3)
+    p.set_truth(0, [0, 1, 2, 3, 4, 5])
+    for _ in range(200):
+        got = p.predict(0, 6)
+        assert len(got) == 6
+        assert len(set(got.tolist())) == 6, "duplicate expert in prediction"
+
+
 def test_noisy_oracle_accuracy_extremes():
     p = NoisyOraclePredictor(1, 16, accuracy=1.0, seed=0)
     p.set_truth(0, [2, 9, 11])

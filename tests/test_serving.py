@@ -156,6 +156,34 @@ def test_generate_sampling_flag(setup):
     assert not np.array_equal(s1, s3)              # different seed -> differs
 
 
+def test_reset_runtime_preserves_predictor_config(setup):
+    """Regression: reset_runtime rebuilt the predictor as type(...)(L, E),
+    silently resetting accuracy/seed/decay to defaults between benchmark
+    runs — clone_fresh() must carry the configuration over."""
+    from repro.runtime.prefetch import NoisyOraclePredictor, TopFreqPredictor
+    cfg, params, lm, tables = setup
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    eng = ServeEngine(cfg, params, tables=tables,
+                      cache=ExpertCache(l, e, 0.5, seed=0),
+                      predictor=NoisyOraclePredictor(l, e, accuracy=0.3,
+                                                     seed=7),
+                      prefetch_k=2, seed=0)
+    eng.generate(lm.sample(1, 3), max_new_tokens=2)
+    assert any(len(t) for t in eng.predictor.truth)    # learned state
+    eng.reset_runtime()
+    assert isinstance(eng.predictor, NoisyOraclePredictor)
+    assert eng.predictor.accuracy == 0.3, "accuracy must survive a reset"
+    assert eng.predictor.seed == 7
+    assert all(len(t) == 0 for t in eng.predictor.truth)   # state IS fresh
+
+    eng.predictor = TopFreqPredictor(l, e, decay=0.5)
+    eng.reset_runtime()
+    assert eng.predictor.decay == 0.5
+    # an explicit replacement still wins
+    eng.reset_runtime(predictor=TopFreqPredictor(l, e, decay=0.9))
+    assert eng.predictor.decay == 0.9
+
+
 def test_summary_roundtrips(setup):
     cfg, params, lm, tables = setup
     eng = _engine(cfg, params, tables, BuddyPolicy())

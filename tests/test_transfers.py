@@ -63,6 +63,23 @@ def test_duplicate_demand_escalates_inflight_prefetch():
     assert abs(s.run_until_done(pf) - 1.0) < 1e-9
 
 
+def test_escalate_queued_prefetch_leaves_counts_unchanged():
+    """Regression: escalate() re-pushes a QUEUED transfer at demand priority
+    and leaves the stale heap entry behind — n_in_flight and pending() must
+    dedup by tid instead of counting the escalated transfer twice."""
+    s = TransferScheduler(HW0, max_inflight_prefetch=1)
+    a = s.submit(0, 1, GB, "prefetch")
+    b = s.submit(0, 2, GB, "prefetch")
+    assert s.n_in_flight == 2
+    s.escalate(b)                         # still queued -> re-pushed
+    assert b.priority == PRIO_DEMAND
+    assert s.n_in_flight == 2, "escalation must not double-count"
+    tids = sorted(t.tid for t in s.pending())
+    assert tids == sorted([a.tid, b.tid])
+    s.flush()
+    assert s.n_in_flight == 0 and s.pending() == []
+
+
 def test_cancel_stale_prefetches_refunds_unstarted_bytes():
     s = TransferScheduler(HW0, max_inflight_prefetch=1)
     led = TransferLedger(HW0)
