@@ -18,6 +18,7 @@ from benchmarks import common
 from repro.core import BuddyPolicy
 from repro.runtime.cache import ExpertCache
 from repro.runtime.prefetch import AdaptiveBudgetController, PrevStepPredictor
+from repro.runtime.tiers import TIER_BITS, TieredExpertStore
 from repro.serving.engine import ServeEngine
 from repro.serving.requests import Request, StaticBatcher
 from repro.serving.scheduler import (ContinuousScheduler, PoissonArrivals,
@@ -29,12 +30,24 @@ def build_engine(args):
     rec, q = common.get_profile(cfg, params, lm)
     tables = common.get_tables(cfg, q, rec, 0.95, 16)
 
-    policy = (BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8)
-              if args.policy == "buddy" else BuddyPolicy(mode="none"))
+    policy = (BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8,
+                          quant_tier=args.quant_tier)
+              if args.policy == "buddy"
+              else BuddyPolicy(mode="none", quant_tier=args.quant_tier))
+    tier = None
+    cache = None
+    if args.quant_tier != "off":
+        # split the HBM budget: int8/int4 replicas of every expert stay
+        # resident; leftover budget becomes full-precision cache slots
+        tier = TieredExpertStore(
+            cfg.num_layers, cfg.moe.num_experts, args.cache_rate,
+            bits=TIER_BITS[args.quant_tier], d_model=cfg.d_model,
+            d_ff=cfg.moe.d_ff, seed=0)
+    else:
+        cache = ExpertCache(cfg.num_layers, cfg.moe.num_experts,
+                            args.cache_rate, seed=0)
     eng = ServeEngine(
-        cfg, params, tables=tables, policy=policy,
-        cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts,
-                          args.cache_rate, seed=0),
+        cfg, params, tables=tables, policy=policy, cache=cache, tier=tier,
         predictor=PrevStepPredictor(cfg.num_layers, cfg.moe.num_experts),
         prefetch_k=args.prefetch, lookahead=args.lookahead, seed=0)
     return cfg, lm, eng
@@ -58,6 +71,12 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens per fused step when a request joins "
                          "(--continuous; 1 = token-by-token)")
+    ap.add_argument("--quant-tier", choices=["off", "int8", "int4"],
+                    default="off",
+                    help="resident compressed replicas of every expert: a "
+                         "buddy-less miss computes degraded instead of "
+                         "stalling on PCIe (displaces cache slots from the "
+                         "--cache-rate budget)")
     args = ap.parse_args()
 
     cfg, lm, eng = build_engine(args)
@@ -109,7 +128,9 @@ def main():
               f"{s['tokens_per_s']:.1f}")
         print(f"substitutions: {s['stats']['n_sub']}  "
               f"sync fetches: {s['stats']['n_miss_fetch']}  "
-              f"late prefetches: {s['stats']['n_late_prefetch']}")
+              f"late prefetches: {s['stats']['n_late_prefetch']}"
+              + (f"  degraded: {s['tier']['degraded_tokens']}"
+                 if "tier" in s else ""))
         print(f"PCIe bytes: {s['ledger']['total_bytes']/1e6:.1f}MB  "
               f"stall: {s['ledger']['sync_stall_s']*1e3:.1f}ms")
         bd = s["stall_breakdown"]

@@ -12,5 +12,8 @@ from repro.core.gates import (calibrate_tau, distribution_delta,
                               distribution_gate, prob_margin, tae_from_logits,
                               tae_from_probs, token_gate)
 from repro.core.policy import DROP, ORIGINAL, BuddyPolicy
+from repro.core.quantize import (TIER_BITS, attach_quant_tier, dequantize,
+                                 expert_fidelity, quantize_expert_ffn,
+                                 quantize_per_channel)
 from repro.core.substitute import (SubstituteResult, make_random_table,
                                    substitute)

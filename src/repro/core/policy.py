@@ -22,6 +22,12 @@ class BuddyPolicy:
               expert and renormalize (baseline MoE drop policy).
     mode:   'buddy' (the paper), 'random' (random-resident baseline),
             'none' (no substitution — Original baseline).
+    quant_tier: precision of the always-resident compressed replica tier
+            ('off' | 'int8' | 'int4', runtime/tiers.py). When on, a missed
+            slot whose per-step quant_ok mask allows it is computed from the
+            low-precision replica ('degraded') INSTEAD of falling back — the
+            four-way miss decision becomes buddy / degraded / fetch / drop.
+            Static under jit: 'off' compiles the exact pre-tier graph.
     """
     tau: float = 0.2
     beta: float = 0.6
@@ -33,10 +39,12 @@ class BuddyPolicy:
     margin_gamma: float = 1.0
     fallback: str = "fetch"
     mode: str = "buddy"
+    quant_tier: str = "off"
 
     def __post_init__(self):
         assert self.fallback in ("fetch", "drop")
         assert self.mode in ("buddy", "random", "none")
+        assert self.quant_tier in ("off", "int8", "int4")
         assert self.rho >= 0 and self.H >= 1
 
 

@@ -1,0 +1,112 @@
+"""Per-channel symmetric quantization for the resident expert replica tier.
+
+The tiered expert store (runtime/tiers.py) keeps a low-precision replica of
+EVERY expert resident in HBM so a prefetch miss can be computed immediately
+at degraded fidelity (MELINOE-style compressed experts / MoBiLE-style
+big-little experts) instead of stalling on PCIe or rerouting to a buddy.
+This module owns the numerics:
+
+  * per-output-channel symmetric quantization (int8 or int4 value range) of
+    the SwiGLU expert matrices — scale s_c = max|W[:, c]| / qmax, stored f32,
+  * dequantization (the jnp fallback path; the fused Pallas kernel in
+    kernels/quant_ffn.py applies scales post-matmul instead), and
+  * calibrated per-expert fidelity scores — the relative round-trip weight
+    error that the runtime trades against expected transfer stall when it
+    decides buddy vs degraded-replica vs demand-fetch.
+
+int4 values are STORED as int8 in [-7, 7] (no bit-packing — packing needs no
+new dependency but adds nothing to the simulation); byte ACCOUNTING uses the
+true 4-bit payload via runtime.memory.quant_expert_nbytes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+TIER_BITS = {"int8": 8, "int4": 4}
+
+
+def qmax_for_bits(bits: int) -> int:
+    """Symmetric signed range: int8 -> 127, int4 -> 7."""
+    assert bits in (4, 8), f"supported tier precisions: int4/int8, got {bits}"
+    return 2 ** (bits - 1) - 1
+
+
+def quantize_per_channel(w, bits: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """w [..., D, C]: symmetric per-channel quant over the contraction axis.
+
+    Returns (q int8 [..., D, C], scale f32 [..., C]) with
+    dequant = q * scale[..., None, :]. Scales are per OUTPUT channel so the
+    fused kernel can apply them after the matmul: (x @ q) * scale."""
+    qm = qmax_for_bits(bits)
+    w32 = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=-2)                       # [..., C]
+    scale = jnp.where(amax > 0, amax / qm, 1.0)
+    q = jnp.clip(jnp.round(w32 / scale[..., None, :]), -qm, qm)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q, scale) -> jnp.ndarray:
+    """Inverse of quantize_per_channel: [..., D, C] f32."""
+    return q.astype(jnp.float32) * scale[..., None, :]
+
+
+def quantize_expert_ffn(w1, w3, w2, bits: int) -> dict:
+    """Quantize a (stacked) SwiGLU expert FFN: w1/w3 [..., D, F], w2 [..., F, D].
+
+    Returns the quant-tier parameter dict consumed by models.moe (keys
+    ``w1_q``/``w1_s``/... mirroring the full-precision names)."""
+    w1_q, w1_s = quantize_per_channel(w1, bits)
+    w3_q, w3_s = quantize_per_channel(w3, bits)
+    w2_q, w2_s = quantize_per_channel(w2, bits)
+    return {"w1_q": w1_q, "w1_s": w1_s, "w3_q": w3_q, "w3_s": w3_s,
+            "w2_q": w2_q, "w2_s": w2_s}
+
+
+def expert_fidelity(w1, w3, w2, quant: dict) -> np.ndarray:
+    """Per-expert relative round-trip error (the calibrated fidelity score).
+
+    fid[e] = ||W_e - deq(Q_e)||_F / ||W_e||_F pooled over {w1, w3, w2}.
+    Lower is better; the runtime degrades a miss only when the expected
+    transfer stall outweighs this loss (TieredExpertStore.degraded_ok)."""
+    err2 = 0.0
+    norm2 = 0.0
+    for w, q, s in ((w1, quant["w1_q"], quant["w1_s"]),
+                    (w3, quant["w3_q"], quant["w3_s"]),
+                    (w2, quant["w2_q"], quant["w2_s"])):
+        w32 = jnp.asarray(w, jnp.float32)
+        d = w32 - dequantize(q, s)
+        err2 = err2 + jnp.sum(d * d, axis=(-1, -2))
+        norm2 = norm2 + jnp.sum(w32 * w32, axis=(-1, -2))
+    fid = jnp.sqrt(err2 / jnp.maximum(norm2, 1e-30))
+    return np.asarray(fid)                                       # [..., E]
+
+
+def attach_quant_tier(cfg, params: dict, bits: int) -> Tuple[dict, np.ndarray]:
+    """Build the resident replica tier for every MoE layer of ``params``.
+
+    Returns (params', fidelity [L_moe, E]) where params' is a shallow copy
+    whose attn_moe groups carry a ``quant`` sub-dict (stacked [R, E, ...]
+    int8 weights + f32 scales) next to the full-precision weights — the
+    models.moe degraded path reads it in the same fused step. Shared experts
+    are always device-resident and are NOT quantized."""
+    groups = list(params["groups"])
+    fids = []
+    for gi, (kind, _repeat) in enumerate(cfg.stack()):
+        if kind != "attn_moe":
+            continue
+        moe_p = dict(groups[gi]["moe"])
+        quant = quantize_expert_ffn(moe_p["w1"], moe_p["w3"], moe_p["w2"],
+                                    bits)
+        fids.append(expert_fidelity(moe_p["w1"], moe_p["w3"], moe_p["w2"],
+                                    quant))
+        moe_p["quant"] = quant
+        g = dict(groups[gi])
+        g["moe"] = moe_p
+        groups[gi] = g
+    assert fids, "attach_quant_tier: config has no attn_moe groups"
+    out = dict(params)
+    out["groups"] = tuple(groups)
+    return out, np.concatenate(fids, axis=0)

@@ -12,8 +12,10 @@ paper exactly:
       Psi = q_{j|e} * (1 + eta * zhat_j(t)) * (1 - kappa * hop(j))   (Eq. 3)
       (with eta = kappa = 0 this is exactly "first resident unused buddy in
       table order", i.e. Algorithm 1.)
-    if no eligible buddy: fall back ('fetch' or 'drop' — recorded, decided
-    by the caller via the returned masks).
+    if no eligible buddy: serve from the resident quant-replica tier when
+    the caller's per-expert ``quant_ok`` mask allows it ('degraded'),
+    otherwise fall back ('fetch' or 'drop' — recorded, decided by the
+    caller via the returned masks).
 
 Uniqueness (b not in U_t) subsumes the paper's multiplicative reuse penalty:
 a buddy already claimed for token t can never be picked again for t.
@@ -34,6 +36,8 @@ class SubstituteResult(NamedTuple):
     missed: jax.Array       # [T, K] bool  — non-resident, no buddy found
     allowed: jax.Array      # [T]   bool  — token passed TAE gate
     dist_ok: jax.Array      # []    bool  — batch passed distribution gate
+    degraded: jax.Array = None  # [T, K] bool — miss served by the resident
+    #                             quant-replica tier (excluded from missed)
 
 
 def substitute(indices: jax.Array,
@@ -43,11 +47,17 @@ def substitute(indices: jax.Array,
                buddy_q: jax.Array,
                policy: BuddyPolicy,
                router_logits: Optional[jax.Array] = None,
-               hop: Optional[jax.Array] = None) -> SubstituteResult:
+               hop: Optional[jax.Array] = None,
+               quant_ok: Optional[jax.Array] = None) -> SubstituteResult:
     """indices [T, K] int32; topk_logits [T, K] f32 (for TAE);
     resident [E] bool; buddy_table [E, R] int32 (-1 padded, sorted by q desc);
     buddy_q [E, R] f32; router_logits [T, E] (optional, for eta term);
-    hop [E] int32 ICI hops to each expert's cache slot (optional)."""
+    hop [E] int32 ICI hops to each expert's cache slot (optional);
+    quant_ok [E] bool (optional) — experts whose miss the runtime decided to
+    serve from the resident quant-replica tier this step (the degraded
+    fallback sits between buddy substitution and fetch/drop, and unlike
+    substitution it is NOT subject to the TAE/distribution gates — it is a
+    miss-path fallback, not a rerouting decision)."""
     from repro.core import gates
 
     t_n, k_n = indices.shape
@@ -58,10 +68,18 @@ def substitute(indices: jax.Array,
                                policy.margin_gamma)                      # [T]
     dist_ok = gates.distribution_gate(indices, resident, policy.beta)    # []
 
+    def _split_degraded(miss, experts):
+        """(residual_miss, degraded): route quant_ok misses to the tier."""
+        if quant_ok is None:
+            return miss, jnp.zeros_like(miss)
+        deg = miss & quant_ok[experts]
+        return miss & ~deg, deg
+
     if policy.mode == "none":
         miss = ~resident[indices] & True
+        miss, deg = _split_degraded(miss, indices)
         return SubstituteResult(indices, jnp.zeros_like(miss), miss,
-                                allowed, dist_ok)
+                                allowed, dist_ok, deg)
 
     gate = allowed & dist_ok                                             # [T]
 
@@ -74,6 +92,7 @@ def substitute(indices: jax.Array,
     new_idx = indices
     substituted = jnp.zeros((t_n, k_n), bool)
     missed = jnp.zeros((t_n, k_n), bool)
+    degraded = jnp.zeros((t_n, k_n), bool)
     budget = jnp.where(gate, policy.rho, 0).astype(jnp.int32)            # [T]
 
     for k in range(k_n):
@@ -107,10 +126,14 @@ def substitute(indices: jax.Array,
         new_col = jnp.where(do_sub, buddy, e)
         new_idx = new_idx.at[:, k].set(new_col)
         substituted = substituted.at[:, k].set(do_sub)
-        missed = missed.at[:, k].set((~resident[new_col]) & ~do_sub)
+        res_miss = (~resident[new_col]) & ~do_sub
+        res_miss, deg_col = _split_degraded(res_miss, new_col)
+        missed = missed.at[:, k].set(res_miss)
+        degraded = degraded.at[:, k].set(deg_col)
         budget = budget - do_sub.astype(jnp.int32)
 
-    return SubstituteResult(new_idx, substituted, missed, allowed, dist_ok)
+    return SubstituteResult(new_idx, substituted, missed, allowed, dist_ok,
+                            degraded)
 
 
 def make_random_table(key, num_experts: int, r_max: int) -> tuple:

@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.buddy_substitute import buddy_substitute_pallas
 from repro.kernels.expert_ffn import expert_ffn_pallas
+from repro.kernels.quant_ffn import quant_ffn_pallas
 from repro.kernels.topk_gate import topk_gate_pallas
 from repro.kernels.wkv_chunk import wkv_chunk_pallas
 
@@ -30,6 +31,14 @@ def topk_gate(logits, tau, *, k: int):
 def expert_ffn(x, w1, w3, w2, *, block_c: int = 128, block_f: int = 256):
     return expert_ffn_pallas(x, w1, w3, w2, block_c=block_c, block_f=block_f,
                              interpret=_interpret())
+
+
+def quant_ffn(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s, *,
+              block_c: int = 128, block_f: int = 256):
+    """Fused dequant + grouped SwiGLU over int8/int4 tier replicas."""
+    return quant_ffn_pallas(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s,
+                            block_c=block_c, block_f=block_f,
+                            interpret=_interpret())
 
 
 def wkv_chunk(rt, kt, v, ke, lae, dg, s0):

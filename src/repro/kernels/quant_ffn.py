@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused dequant + grouped expert SwiGLU over the
+int8/int4 resident replica tier.
+
+Computes, per expert e (weights quantized per output channel, scales f32):
+
+  h   = silu((x[e] @ w1q[e]) * s1[e])        # dequant applied POST-matmul
+  g   = (x[e] @ w3q[e]) * s3[e]              # (scale depends only on the
+  out = ((h * g) @ w2q[e]) * s2[e]           #  output channel, so it
+                                             #  commutes with the matmul)
+
+This is the degraded-fallback compute path of the tiered expert store: a
+prefetch miss whose buddy search failed executes against the always-resident
+low-precision replica instead of stalling on PCIe. Reading int8 weights also
+halves (int8) or quarters (int4-payload) the HBM traffic of the miss path vs
+streaming bf16 — the tier is cheaper to COMPUTE from, not just to store.
+
+Tiling mirrors kernels/expert_ffn.py (MXU-aligned):
+
+  grid = (E, C/BC, F/BF)   — expert, token-chunk tile, hidden tile
+  x     block [1, BC, D]   — revisited across the F axis (stays in VMEM)
+  w1q/w3q blocks [1, D, BF] int8; s1/s3 blocks [1, 1, BF] f32
+  w2q   block [1, BF, D] int8;    s2 block [1, 1, D] f32
+  out   block [1, BC, D] accumulated in f32 across the F-tile axis
+
+VMEM @ (BC, BF, D) = (128, 256, 4096): int8 w1/w3/w2 halve the 6 MiB the
+bf16 kernel streams per tile — the quant tier's whole point on-chip too.
+
+int4 replicas arrive as int8 values in [-7, 7] (core/quantize.py stores them
+unpacked); the kernel is precision-agnostic past the value range.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w1_ref, s1_ref, w3_ref, s3_ref, w2_ref, s2_ref, out_ref):
+    f_idx = pl.program_id(2)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[0].astype(jnp.float32)            # [BC, D]
+    w1 = w1_ref[0].astype(jnp.float32)          # [D, BF] dequant via s1
+    w3 = w3_ref[0].astype(jnp.float32)
+    w2 = w2_ref[0].astype(jnp.float32)          # [BF, D] dequant via s2
+    s1 = s1_ref[0]                              # [1, BF]
+    s3 = s3_ref[0]
+    s2 = s2_ref[0]                              # [1, D]
+    h = jax.nn.silu(jnp.dot(x, w1, preferred_element_type=jnp.float32) * s1)
+    g = jnp.dot(x, w3, preferred_element_type=jnp.float32) * s3
+    out_ref[0] += jnp.dot(h * g, w2, preferred_element_type=jnp.float32) * s2
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "interpret"))
+def quant_ffn_pallas(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s, *,
+                     block_c: int = 128, block_f: int = 256,
+                     interpret: bool = False):
+    """x [E, C, D] (f32/bf16); w1_q/w3_q [E, D, F] int8 with scales [E, F];
+    w2_q [E, F, D] int8 with scales [E, D]. Returns [E, C, D] in x.dtype."""
+    e_n, c_n, d_n = x.shape
+    f_n = w1_q.shape[2]
+    bc = min(block_c, c_n)
+    bf = min(block_f, f_n)
+    pad_c = (-c_n) % bc
+    pad_f = (-f_n) % bf
+    xp = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    w1p = jnp.pad(w1_q, ((0, 0), (0, 0), (0, pad_f)))
+    w3p = jnp.pad(w3_q, ((0, 0), (0, 0), (0, pad_f)))
+    w2p = jnp.pad(w2_q, ((0, 0), (0, pad_f), (0, 0)))
+    # padded hidden channels have zero weights -> zero contribution; pad the
+    # scales with ones so the dequant multiply stays finite
+    s1p = jnp.pad(w1_s, ((0, 0), (0, pad_f)), constant_values=1.0)[:, None, :]
+    s3p = jnp.pad(w3_s, ((0, 0), (0, pad_f)), constant_values=1.0)[:, None, :]
+    s2p = w2_s[:, None, :]                                       # [E, 1, D]
+    n_c, n_f = xp.shape[1] // bc, w1p.shape[2] // bf
+    grid = (e_n, n_c, n_f)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d_n), lambda e, c, f: (e, c, 0)),
+            pl.BlockSpec((1, d_n, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, 1, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, d_n, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, 1, bf), lambda e, c, f: (e, 0, f)),
+            pl.BlockSpec((1, bf, d_n), lambda e, c, f: (e, f, 0)),
+            pl.BlockSpec((1, 1, d_n), lambda e, c, f: (e, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d_n), lambda e, c, f: (e, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((e_n, xp.shape[1], d_n), jnp.float32),
+        interpret=interpret,
+    )(xp, w1p, s1p, w3p, s3p, w2p, s2p)
+    return out[:, :c_n].astype(x.dtype)

@@ -79,6 +79,19 @@ def ref_expert_ffn(x, w1, w3, w2):
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def ref_quant_ffn(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s):
+    """Oracle for kernels.quant_ffn: dequantize per output channel, then the
+    grouped SwiGLU in f32 (same post-matmul scale placement as the kernel)."""
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xf,
+                               w1_q.astype(jnp.float32)) * w1_s[:, None, :])
+    g = jnp.einsum("ecd,edf->ecf", xf,
+                   w3_q.astype(jnp.float32)) * w3_s[:, None, :]
+    out = jnp.einsum("ecf,efd->ecd", h * g,
+                     w2_q.astype(jnp.float32)) * w2_s[:, None, :]
+    return out.astype(x.dtype)
+
+
 def ref_wkv_chunk(rt, kt, v, ke, lae, dg, s0):
     """Oracle for kernels.wkv_chunk: sequential chunk loop in jnp.
     rt/kt/v/ke [BH, N, C, D]; lae [BH, N, D]; dg [BH, N, C]; s0 [BH, D, D].

@@ -12,6 +12,16 @@
     # chunked prefill: joining prompts ingested 8 tokens per fused step
     PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
         --num-requests 16 --arrival-rate 500 --slots 4 --prefill-chunk 8
+
+    # tiered expert store: int8 replicas of every expert stay resident, so a
+    # buddy-less miss computes degraded instead of stalling on PCIe
+    PYTHONPATH=src python -m repro.launch.serve --reduced --cache-rate 0.5 \
+        --quant-tier int8 --steps 64
+
+    # workload replay: arrivals + per-request token budgets from a JSONL
+    # trace of {t_arrival, prompt_len, max_new_tokens} rows
+    PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
+        --trace trace.jsonl --slots 4
 """
 from __future__ import annotations
 
@@ -28,10 +38,11 @@ from repro.runtime.cache import ExpertCache
 from repro.runtime.prefetch import (AdaptiveBudgetController,
                                     CrossLayerPredictor, PrevStepPredictor,
                                     TopFreqPredictor)
+from repro.runtime.tiers import TIER_BITS, TieredExpertStore
 from repro.serving.engine import ServeEngine
 from repro.serving.scheduler import (BurstyArrivals, ContinuousScheduler,
                                      PoissonArrivals, RequestQueue, SLOConfig,
-                                     make_requests)
+                                     make_requests, requests_from_trace)
 from repro.training.data import MarkovLM
 
 PREDICTORS = {
@@ -105,11 +116,28 @@ def main():
     ap.add_argument("--adaptive-prefetch", action="store_true",
                     help="resize prefetch budget from queue depth + stall "
                          "attribution instead of the fixed --prefetch-k")
+    ap.add_argument("--trace", default=None,
+                    help="JSONL serving trace ({t_arrival, prompt_len, "
+                         "max_new_tokens} rows) replayed with per-request "
+                         "token budgets (--mode continuous)")
+    # -- tiered expert store (compressed resident replicas) -------------
+    ap.add_argument("--quant-tier", choices=["off", "int8", "int4"],
+                    default="off",
+                    help="keep a low-precision replica of EVERY expert "
+                         "resident so a buddy-less miss computes degraded "
+                         "instead of stalling; the tier displaces full-"
+                         "precision cache slots from the --cache-rate budget")
+    ap.add_argument("--tier-stall-per-fidelity", type=float, default=0.05,
+                    help="seconds of expected stall that justify one unit "
+                         "of relative quantization error when deciding "
+                         "degrade-vs-wait on a miss")
     args = ap.parse_args()
     if args.lookahead < 1:
         ap.error("--lookahead must be >= 1 (layers ahead to prefetch)")
     if args.prefill_chunk < 1:
         ap.error("--prefill-chunk must be >= 1 (prompt tokens per fused step)")
+    if args.trace and args.mode != "continuous":
+        ap.error("--trace replays a request stream: use --mode continuous")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     assert cfg.is_moe, "serving engine targets MoE archs"
@@ -122,13 +150,25 @@ def main():
     lm = MarkovLM(cfg.vocab_size, seed=0)
     tables, _ = profile_buddies(cfg, params, lm, alpha=args.alpha)
     n_moe = sum(r for k, r in cfg.stack() if k == "attn_moe")
-    cache = ExpertCache(n_moe, cfg.moe.num_experts, args.cache_rate)
     policy = BuddyPolicy(tau=args.tau, beta=args.beta, rho=args.rho,
-                         mode=args.policy)
+                         mode=args.policy, quant_tier=args.quant_tier)
+    tier = None
+    if args.quant_tier != "off":
+        tier = TieredExpertStore(
+            n_moe, cfg.moe.num_experts, args.cache_rate,
+            bits=TIER_BITS[args.quant_tier], d_model=cfg.d_model,
+            d_ff=cfg.moe.d_ff,
+            stall_per_fidelity=args.tier_stall_per_fidelity)
+        cache = tier.cache
+        print(f"[serve] quant tier {args.quant_tier}: "
+              f"{tier.budget_split()}")
+    else:
+        cache = ExpertCache(n_moe, cfg.moe.num_experts, args.cache_rate)
     prefetch_k = (max(1, cache.capacity // 2) if args.prefetch_k < 0
                   else args.prefetch_k)
     predictor = PREDICTORS[args.predictor](n_moe, cfg.moe.num_experts)
-    eng = ServeEngine(cfg, params, tables=tables, policy=policy, cache=cache,
+    eng = ServeEngine(cfg, params, tables=tables, policy=policy,
+                      cache=None if tier is not None else cache, tier=tier,
                       predictor=predictor, prefetch_k=prefetch_k,
                       lookahead=args.lookahead)
 
@@ -144,35 +184,47 @@ def main():
     print(f"stalls: demand {bd['demand_stall_s']*1e3:.2f}ms  "
           f"late-prefetch {bd['late_prefetch_stall_s']*1e3:.2f}ms  "
           f"overlapped {bd['overlapped_s']*1e3:.2f}ms")
+    if "tier" in s:
+        t = s["tier"]
+        print(f"tier: {t['degraded_tokens']} degraded slots at "
+              f"{t['bits']}-bit, {t['quant_bytes']/1e6:.1f}MB resident, "
+              f"{t['tier_budget_split']['cache_slots_per_layer']} full "
+              f"slots/layer left")
     print("sample output tokens:", out[0, -16:].tolist())
 
 
 def _serve_continuous(args, cfg, eng, lm, prefetch_k):
     """Drive the engine with continuously arriving requests + SLOs."""
-    rng = np.random.default_rng(1)
-    prompts = [lm.sample(1, int(rng.integers(4, 9)))[0]
-               for _ in range(args.num_requests)]
-    rate = args.arrival_rate
-    if rate <= 0:
-        # ~70% of MEASURED capacity: probe an unloaded generate so the step
-        # time includes transfer stalls (the compute-only estimate is far
-        # too optimistic in the transfer-bound regime), then reset the
-        # engine's runtime state for the real run
-        eng.generate(lm.sample(args.slots, 4), max_new_tokens=8)
-        step_s = eng.stats.sim_time_s / max(1, eng.stats.steps)
-        eng.reset_runtime()
-        per_req = (8 + args.steps) * step_s
-        rate = 0.7 * args.slots / per_req
-        print(f"[serve] auto arrival rate: {rate:.1f} req/s "
-              f"(measured step {step_s*1e3:.3f}ms)")
-    proc = (PoissonArrivals(rate, seed=2) if args.arrivals == "poisson"
-            else BurstyArrivals(rate, seed=2))
     slo = SLOConfig(
         ttft_s=args.slo_ttft_ms * 1e-3 if args.slo_ttft_ms > 0 else None,
         tpot_s=args.slo_tpot_ms * 1e-3 if args.slo_tpot_ms > 0 else None,
         deadline_s=args.deadline_ms * 1e-3 if args.deadline_ms > 0 else None)
-    queue = RequestQueue(make_requests(prompts, proc, args.steps, slo),
-                         admission=args.admission)
+    if args.trace:
+        # workload replay: recorded arrivals + per-request token budgets
+        reqs = requests_from_trace(args.trace,
+                                   lambda n: lm.sample(1, max(1, n))[0], slo)
+        print(f"[serve] replaying {len(reqs)} requests from {args.trace}")
+    else:
+        rng = np.random.default_rng(1)
+        prompts = [lm.sample(1, int(rng.integers(4, 9)))[0]
+                   for _ in range(args.num_requests)]
+        rate = args.arrival_rate
+        if rate <= 0:
+            # ~70% of MEASURED capacity: probe an unloaded generate so the
+            # step time includes transfer stalls (the compute-only estimate
+            # is far too optimistic in the transfer-bound regime), then
+            # reset the engine's runtime state for the real run
+            eng.generate(lm.sample(args.slots, 4), max_new_tokens=8)
+            step_s = eng.stats.sim_time_s / max(1, eng.stats.steps)
+            eng.reset_runtime()
+            per_req = (8 + args.steps) * step_s
+            rate = 0.7 * args.slots / per_req
+            print(f"[serve] auto arrival rate: {rate:.1f} req/s "
+                  f"(measured step {step_s*1e3:.3f}ms)")
+        proc = (PoissonArrivals(rate, seed=2) if args.arrivals == "poisson"
+                else BurstyArrivals(rate, seed=2))
+        reqs = make_requests(prompts, proc, args.steps, slo)
+    queue = RequestQueue(reqs, admission=args.admission)
     ctrl = None
     if args.adaptive_prefetch and prefetch_k > 0:
         ctrl = AdaptiveBudgetController(

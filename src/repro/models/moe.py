@@ -9,7 +9,7 @@ each data shard — no all-to-all on the baseline path.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,9 @@ class BuddyState(NamedTuple):
     table: jax.Array      # [E, R] int32 — buddy profile B (rank-ordered, -1 pad)
     q: jax.Array          # [E, R] f32 — q_{j|i} per entry
     hop: jax.Array        # [E] int32 — ICI hops to each expert's cache slot
+    quant_ok: Any = None  # [E] bool — misses the runtime routed to the
+    #                       resident quant-replica tier this step (None when
+    #                       no tier is attached; see runtime/tiers.py)
 
 
 def full_residency(num_experts: int, r_max: int = 8) -> BuddyState:
@@ -88,6 +91,8 @@ class MoEAux(NamedTuple):
     sub_slots: jax.Array      # [T, K] bool — per-slot substitution mask (lets
     miss_slots: jax.Array     # [T, K] bool — the serving engine mask out
     #                           inactive batch rows under continuous batching)
+    n_degraded: jax.Array     # [] slots served from the quant-replica tier
+    deg_slots: jax.Array      # [T, K] bool — per-slot degraded mask
 
 
 def router_topk(router_w, x_flat, top_k: int, jitter_key=None, jitter=0.0):
@@ -99,6 +104,27 @@ def router_topk(router_w, x_flat, top_k: int, jitter_key=None, jitter=0.0):
     topk_logits, topk_idx = jax.lax.top_k(logits, top_k)
     probs = jax.nn.softmax(topk_logits, axis=-1)       # renormalized over S
     return logits, topk_idx.astype(jnp.int32), topk_logits, probs
+
+
+def _degraded_outputs(quant: dict, x_flat: jax.Array, e_flat: jax.Array):
+    """Per-slot SwiGLU against the resident quant-replica tier: [T*K, D] f32.
+
+    Gathers each slot's TRUE expert from the int8/int4 tier (dequant applied
+    post-matmul — scales are per output channel) so a miss is computed
+    immediately at degraded fidelity instead of stalling on PCIe. The jnp
+    reference path; kernels/quant_ffn.py is the fused TPU version over
+    dispatch buffers."""
+    xr = jnp.repeat(x_flat.astype(jnp.float32),
+                    e_flat.shape[0] // x_flat.shape[0], axis=0)  # [T*K, D]
+    h = jax.nn.silu(jnp.einsum("td,tdf->tf", xr,
+                               quant["w1_q"][e_flat].astype(jnp.float32))
+                    * quant["w1_s"][e_flat])
+    g = jnp.einsum("td,tdf->tf", xr,
+                   quant["w3_q"][e_flat].astype(jnp.float32)) \
+        * quant["w3_s"][e_flat]
+    return jnp.einsum("tf,tfd->td", h * g,
+                      quant["w2_q"][e_flat].astype(jnp.float32)) \
+        * quant["w2_s"][e_flat]
 
 
 def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
@@ -113,30 +139,48 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
     ``dropless``: force the capacity-based dispatch path with capacity
     S*K (no token ever dropped, no tiny-batch gather shortcut) — chunked
     prefill needs per-token outputs independent of which other tokens share
-    the chunk, so C=1 and C=8 chunks produce identical per-token results."""
+    the chunk, so C=1 and C=8 chunks produce identical per-token results.
+
+    Tiered degraded fallback: when ``policy.quant_tier`` is on, the params
+    carry a ``quant`` sub-dict, and ``buddy.quant_ok`` marks an expert, a
+    missed slot computes against the resident low-precision replica in the
+    SAME fused step (mixed-precision dispatch) — zero transfer, bounded
+    fidelity loss. With quant_tier='off' this path is compiled out entirely
+    and the graph is bit-identical to the pre-tier engine."""
     orig_shape = x.shape
     d = x.shape[-1]
     x_flat = x.reshape(-1, d)
     t_n = x_flat.shape[0]
     e_n, k_n = cfg.num_experts, cfg.top_k
 
+    use_tier = (policy is not None and policy.quant_tier != "off"
+                and "quant" in params)
+    quant_ok = buddy.quant_ok if (use_tier and buddy is not None) else None
+
     logits, idx, topk_logits, probs = router_topk(
         params["router"], x_flat, k_n, jitter_key, cfg.router_jitter)
 
     # ---------------- BuddyMoE substitution (Alg. 1) ----------------
-    if policy is not None and buddy is not None and policy.mode != "none":
+    if policy is not None and buddy is not None:
+        # substitute() owns the four-way miss split for EVERY mode,
+        # including mode='none' (no rerouting, but misses still route to
+        # the degraded tier before the fetch/drop fallback)
         res: SubstituteResult = substitute(
             idx, topk_logits, buddy.resident, buddy.table, buddy.q, policy,
-            router_logits=logits, hop=buddy.hop)
+            router_logits=logits, hop=buddy.hop, quant_ok=quant_ok)
         new_idx, substituted, missed = res.indices, res.substituted, res.missed
-    elif buddy is not None:
+        degraded = res.degraded
+    elif buddy is not None:         # no policy: raw residency miss count
         missed = ~buddy.resident[idx]
         new_idx = idx
         substituted = jnp.zeros_like(missed)
+        degraded = jnp.zeros_like(missed)
     else:
         new_idx = idx
         substituted = jnp.zeros(idx.shape, bool)
         missed = jnp.zeros(idx.shape, bool)
+        degraded = jnp.zeros(idx.shape, bool)
+    run_degraded = use_tier and quant_ok is not None
 
     weights = probs
     if policy is not None and policy.fallback == "drop":
@@ -163,6 +207,10 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         hg = shard(hg, None, "dff")
         y_rep = jnp.einsum("tf,tfd->td", hg, w2s,
                            preferred_element_type=jnp.float32).astype(x.dtype)
+        if run_degraded:
+            y_deg = _degraded_outputs(params["quant"], x_flat, e_flat)
+            y_rep = jnp.where(degraded.reshape(-1)[:, None],
+                              y_deg.astype(x.dtype), y_rep)
         y = (y_rep.reshape(t_n, k_n, d)
              * weights[..., None].astype(x.dtype)).sum(1)
         if cfg.num_shared_experts and "shared" in params:
@@ -176,7 +224,7 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
             missed.reshape(-1).astype(jnp.int32))
         aux = MoEAux(lb, new_idx, idx, probs, substituted.sum(), missed.sum(),
                      jnp.zeros((), jnp.int32), miss_per_expert,
-                     substituted, missed)
+                     substituted, missed, degraded.sum(), degraded)
         return y.reshape(orig_shape), aux
 
     # ---------------- capacity-based dispatch (row-local) ----------------
@@ -225,7 +273,13 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         return ob.at[er, pr].get(mode="fill", fill_value=0)
 
     y_rep = jax.vmap(_row_gather)(out_buf, row_e, pos_safe)         # [B, S*K, D]
-    y = (y_rep.reshape(t_n, k_n, d) * weights[..., None].astype(x.dtype)).sum(1)
+    yk = y_rep.reshape(t_n, k_n, d)                                 # [T, K, D]
+    if run_degraded:
+        y_deg = _degraded_outputs(params["quant"], x_flat,
+                                  new_idx.reshape(-1))
+        yk = jnp.where(degraded[..., None],
+                       y_deg.reshape(t_n, k_n, d).astype(x.dtype), yk)
+    y = (yk * weights[..., None].astype(x.dtype)).sum(1)
 
     if cfg.num_shared_experts and "shared" in params:
         y = y + swiglu(x_flat, params["shared"]["w1"], params["shared"]["w3"],
@@ -241,5 +295,5 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
 
     aux = MoEAux(lb, new_idx, idx, probs,
                  substituted.sum(), missed.sum(), n_dropped, miss_per_expert,
-                 substituted, missed)
+                 substituted, missed, degraded.sum(), degraded)
     return y.reshape(orig_shape), aux

@@ -150,6 +150,7 @@ def _zero_moe_aux(cfg: ModelConfig):
             "n_sub": jnp.zeros((), jnp.int32),
             "n_miss": jnp.zeros((), jnp.int32),
             "n_drop": jnp.zeros((), jnp.int32),
+            "n_degraded": jnp.zeros((), jnp.int32),
             "miss_per_expert": jnp.zeros((e,), jnp.int32)}
 
 
@@ -157,12 +158,14 @@ def _moe_aux_dict(cfg, aux: moe_mod.MoEAux, record: bool):
     d = {"lb": aux.lb_loss, "n_sub": aux.n_substituted.astype(jnp.int32),
          "n_miss": aux.n_missed.astype(jnp.int32),
          "n_drop": aux.n_dropped.astype(jnp.int32),
+         "n_degraded": aux.n_degraded.astype(jnp.int32),
          "miss_per_expert": aux.miss_per_expert}
     if record:
         d["indices"] = aux.orig_indices
         d["probs"] = aux.topk_probs
         d["substituted"] = aux.sub_slots
         d["missed"] = aux.miss_slots
+        d["degraded"] = aux.deg_slots
     return d
 
 
@@ -309,12 +312,13 @@ def _run_group(kind: str, gparams, x, gcache, ctx: StepCtx, gbuddy=None,
         body, (x, ctx.rng), (gparams, gcache, gbuddy, li))
     # reduce aux over layers; keep per-layer stacks when recording
     red = {k: auxs[k].sum(0) for k in
-           ("lb", "n_sub", "n_miss", "n_drop", "miss_per_expert")}
+           ("lb", "n_sub", "n_miss", "n_drop", "n_degraded",
+            "miss_per_expert")}
     if ctx.record:
         red["per_layer"] = {k: v for k, v in auxs.items()
                             if k in ("indices", "probs", "n_sub", "n_miss",
                                      "miss_per_expert", "substituted",
-                                     "missed")}
+                                     "missed", "degraded")}
     return x, new_caches, red
 
 

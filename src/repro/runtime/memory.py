@@ -123,6 +123,17 @@ class TransferLedger:
     def drop(self, n_events: int = 1) -> None:
         self.events_by_cause["drop"] += n_events
 
+    def degraded(self, n_events: int = 1) -> None:
+        """Miss served from the resident quant-replica tier — zero transfer,
+        zero stall, bounded fidelity loss (runtime/tiers.py)."""
+        self.events_by_cause["degraded"] += n_events
+
+    def tier_upload(self, nbytes: int) -> None:
+        """One-time host->device upload of the compressed replica tier (paid
+        at engine init / runtime reset, amortized over the whole run)."""
+        self.bytes_by_cause["tier_upload"] += int(nbytes)
+        self.events_by_cause["tier_upload"] += 1
+
     # -- reporting ------------------------------------------------------
     @property
     def total_bytes(self) -> int:
@@ -146,3 +157,15 @@ class TransferLedger:
 def expert_nbytes(d_model: int, d_ff: int, dtype_bytes: int = 2) -> int:
     """SwiGLU expert: w1 + w3 + w2."""
     return 3 * d_model * d_ff * dtype_bytes
+
+
+def quant_expert_nbytes(d_model: int, d_ff: int, bits: int,
+                        scale_bytes: int = 4) -> int:
+    """HBM footprint of one compressed expert replica (runtime/tiers.py):
+    the int8/int4 payload of w1+w3+w2 plus f32 per-output-channel scales
+    (F each for w1/w3, D for w2). int4 is accounted at its true 4-bit
+    payload even though core/quantize.py stores values unpacked."""
+    assert bits in (4, 8)
+    weights = 3 * d_model * d_ff * bits // 8
+    scales = (2 * d_ff + d_model) * scale_bytes
+    return weights + scales

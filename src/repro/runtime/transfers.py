@@ -250,6 +250,18 @@ class TransferScheduler:
                 self.now = to_time
                 return
 
+    def eta_s(self, t: Transfer) -> float:
+        """Optimistic remaining-service estimate for an in-flight transfer:
+        the fixed-cost tail plus its bytes at FULL link bandwidth (queued
+        demands ahead of it and bandwidth sharing are ignored). The tiered
+        store's degrade-vs-wait decision wants a cheap lower bound — if even
+        the optimistic ETA exceeds the fidelity-justified stall, computing
+        from the resident replica wins for sure."""
+        if t.state == DONE:
+            return 0.0
+        return max(0.0, t.remaining_fixed_s) \
+            + t.remaining_bytes / self.hw.pcie_bw
+
     def run_until_done(self, t: Transfer) -> float:
         """Advance the clock until ``t`` completes; returns its finish time.
         This is the synchronous-stall primitive: the caller's layer is

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import quantize
 from repro.core.buddies import BuddyTables
 from repro.core.policy import BuddyPolicy
 from repro.models import transformer
@@ -37,6 +38,7 @@ from repro.models.moe import BuddyState
 from repro.runtime.cache import ExpertCache
 from repro.runtime.memory import (DEFAULT_HW, HardwareModel, TransferLedger,
                                   expert_nbytes)
+from repro.runtime.tiers import TIER_BITS, TieredExpertStore
 from repro.runtime.transfers import TransferScheduler
 
 
@@ -70,18 +72,40 @@ class ServeEngine:
                  hw: HardwareModel = DEFAULT_HW,
                  window: int = -1,
                  seed: int = 0,
-                 latency_cfg: Optional[ModelConfig] = None):
+                 latency_cfg: Optional[ModelConfig] = None,
+                 tier: Optional[TieredExpertStore] = None):
         """latency_cfg: full-scale config whose expert sizes / active params
         drive the transfer + compute latency model (the accuracy testbed can
         be a reduced model while latencies reflect the deployment target —
-        e.g. the real DeepSeek-V2-Lite). Defaults to cfg itself."""
+        e.g. the real DeepSeek-V2-Lite). Defaults to cfg itself.
+
+        tier: a TieredExpertStore enabling the degraded miss fallback. The
+        engine quantizes every MoE expert into the tier's precision (the
+        replicas ride the params pytree as a ``quant`` sub-dict), calibrates
+        the per-expert fidelity scores, and uses the tier's displaced-budget
+        cache. ``policy.quant_tier`` must name the same precision (it is the
+        static jit switch for the mixed-precision dispatch)."""
         assert cfg.is_moe, "ServeEngine's expert cache applies to MoE archs"
         assert lookahead >= 1, "lookahead: layers ahead to prefetch (>= 1)"
         self.cfg = cfg
-        self.params = params
         self.policy = policy
         self.num_moe_layers = sum(r for k, r in cfg.stack() if k == "attn_moe")
         e = cfg.moe.num_experts
+        self.tier = tier
+        if tier is not None:
+            assert policy.quant_tier != "off", \
+                "a TieredExpertStore needs policy.quant_tier='int8'/'int4'"
+            assert TIER_BITS[policy.quant_tier] == tier.bits, \
+                f"policy tier {policy.quant_tier} != store bits {tier.bits}"
+            assert cache is None or cache is tier.cache, \
+                "pass the cache through the tier (it owns the budget split)"
+            params, fid = quantize.attach_quant_tier(cfg, params, tier.bits)
+            tier.attach_fidelity(fid)
+            cache = tier.cache
+        else:
+            assert policy.quant_tier == "off", \
+                "policy.quant_tier is on but no TieredExpertStore was given"
+        self.params = params
         self.cache = cache or ExpertCache(self.num_moe_layers, e, 1.0)
         self.predictor = predictor
         self.prefetch_k = prefetch_k
@@ -92,6 +116,8 @@ class ServeEngine:
         # residency commits and byte counts are driven by the same timeline
         self.scheduler.add_listener(self.cache.on_transfer_event)
         self.ledger.attach(self.scheduler)
+        if tier is not None:
+            self.ledger.tier_upload(tier.quant_bytes)
         self.stats = EngineStats()
         self.window = window
         ref_cfg = latency_cfg or cfg
@@ -124,14 +150,30 @@ class ServeEngine:
             static_argnames=())
 
     # ------------------------------------------------------------------
+    def _miss_eta(self) -> np.ndarray:
+        """[L, E] expected stall of fetching each expert on a miss THIS step:
+        a cold miss pays the full modeled transfer; an in-flight prefetch
+        only its optimistic remaining tail (TransferScheduler.eta_s)."""
+        eta = np.full((self.num_moe_layers, self.cfg.moe.num_experts),
+                      self.hw.transfer_time(self._expert_bytes))
+        for t in self.scheduler.pending():
+            if t.layer < self.num_moe_layers:
+                eta[t.layer, t.expert] = self.scheduler.eta_s(t)
+        return eta
+
     def _buddy_state(self) -> BuddyState:
         res = self.cache.residency_mask()
         hop = np.stack([self.cache.hop_vector(l)
                         for l in range(self.num_moe_layers)])
+        quant_ok = None
+        if self.tier is not None:
+            quant_ok = jnp.asarray(
+                self.tier.degraded_ok(res, self._miss_eta()))
         return BuddyState(resident=jnp.asarray(res),
                           table=jnp.asarray(self._table),
                           q=jnp.asarray(self._q),
-                          hop=jnp.asarray(hop))
+                          hop=jnp.asarray(hop),
+                          quant_ok=quant_ok)
 
     def init_caches(self, batch: int, seq_len: int):
         return transformer.init_caches(
@@ -232,6 +274,8 @@ class ServeEngine:
             idx = np.asarray(rec["indices"])                  # [L, T, K]
             sub_sl = np.asarray(rec["substituted"])           # [L, T, K]
             miss_sl = np.asarray(rec["missed"])               # [L, T, K]
+            deg_sl = (np.asarray(rec["degraded"])             # [L, T, K]
+                      if "degraded" in rec else None)
             for li in range(idx.shape[0]):
                 layer = layer_off + li
                 # transfers in flight overlap all earlier layers' compute
@@ -246,6 +290,14 @@ class ServeEngine:
                 n_sub = int(sub_sl[li][active].sum())
                 self.stats.n_sub += n_sub
                 self.ledger.buddy_hit(n_sub)
+                if deg_sl is not None:
+                    # misses served by the resident quant tier: no transfer,
+                    # no stall — only the degraded-token accounting
+                    n_deg = int(deg_sl[li][active].sum())
+                    if n_deg:
+                        self.ledger.degraded(n_deg)
+                        if self.tier is not None:
+                            self.tier.note_degraded(n_deg)
                 miss_row = np.bincount(rows[miss_sl[li][active]],
                                        minlength=e_n)
                 cursor, stall = self._resolve_misses(layer, miss_row,
@@ -341,6 +393,11 @@ class ServeEngine:
                                 buddy_table=old.buddy_table,
                                 buddy_candidates=old.buddy_candidates)
         self.cache = cache
+        if self.tier is not None:
+            # the tier's replicas are static; repoint its cache at the fresh
+            # one (same displaced capacity) and re-pay the one-time upload
+            self.tier.cache = cache
+            self.tier.reset_counters()
         if predictor is None and self.predictor is not None:
             # carry the predictor's configuration (accuracy/seed/decay/...)
             # into the fresh instance — a bare type(...)(L, E) silently reset
@@ -354,6 +411,8 @@ class ServeEngine:
         self.scheduler = TransferScheduler(self.hw)
         self.scheduler.add_listener(self.cache.on_transfer_event)
         self.ledger.attach(self.scheduler)
+        if self.tier is not None:
+            self.ledger.tier_upload(self.tier.quant_bytes)
         self.stats = EngineStats()
         self._last_used = {}
 
@@ -433,7 +492,7 @@ class ServeEngine:
         }
 
     def summary(self) -> dict:
-        return {
+        s = {
             "policy": dataclasses.asdict(self.policy),
             "cache_rate": self.cache.capacity / self.cfg.moe.num_experts,
             "stats": dataclasses.asdict(self.stats),
@@ -441,3 +500,8 @@ class ServeEngine:
             "stall_breakdown": self.stall_breakdown(),
             "ledger": self.ledger.summary(),
         }
+        if self.tier is not None:
+            # only present with a tier attached: with quant_tier off the
+            # summary stays bit-identical to the pre-tier engine
+            s["tier"] = self.tier.summary()
+        return s

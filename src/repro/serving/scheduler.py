@@ -34,6 +34,7 @@ for the serving-load experiments.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Callable, List, Optional, Sequence
 
 import jax.numpy as jnp
@@ -111,6 +112,51 @@ class ReplayArrivals(ArrivalProcess):
     def times(self, n: int) -> np.ndarray:
         assert n <= len(self._times), "trace shorter than request count"
         return self._times[:n].copy()
+
+
+def load_trace(path: str) -> List[dict]:
+    """Load a serving trace: JSONL rows of
+    ``{"t_arrival": <simulated s>, "prompt_len": P, "max_new_tokens": M}``
+    (blank lines and ``#`` comments skipped). Rows are returned sorted by
+    arrival time — the ReplayArrivals contract."""
+    rows = []
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            try:
+                d = json.loads(line)
+                rows.append({"t_arrival": float(d["t_arrival"]),
+                             "prompt_len": int(d["prompt_len"]),
+                             "max_new_tokens": int(d["max_new_tokens"])})
+            except (KeyError, TypeError, ValueError) as e:
+                # TypeError covers valid-JSON non-object rows ('[0.1, 5, 3]')
+                raise ValueError(f"{path}:{ln}: bad trace row {line!r}") from e
+    assert rows, f"empty trace file: {path}"
+    assert all(r["prompt_len"] >= 1 and r["max_new_tokens"] >= 1
+               for r in rows), "trace rows need prompt_len/max_new_tokens >= 1"
+    rows.sort(key=lambda r: r["t_arrival"])
+    return rows
+
+
+def requests_from_trace(path: str, sample_prompt: Callable[[int], np.ndarray],
+                        slo: Optional[SLOConfig] = None,
+                        limit: Optional[int] = None) -> List[ServeRequest]:
+    """Workload replay from a recorded trace file (ROADMAP follow-up):
+    arrivals are replayed verbatim and every request carries its OWN token
+    budget from the trace row. ``sample_prompt(P)`` supplies prompt tokens of
+    the recorded length (real traces record lengths, not content)."""
+    rows = load_trace(path)
+    if limit is not None:
+        rows = rows[:limit]
+    prompts = [np.asarray(sample_prompt(r["prompt_len"])) for r in rows]
+    for p, r in zip(prompts, rows):
+        assert p.ndim == 1 and len(p) == r["prompt_len"], \
+            f"sample_prompt returned {p.shape} for prompt_len {r['prompt_len']}"
+    return make_requests(prompts,
+                         ReplayArrivals([r["t_arrival"] for r in rows]),
+                         [r["max_new_tokens"] for r in rows], slo)
 
 
 # ===========================================================================

@@ -280,3 +280,53 @@ def test_adaptive_budget_in_the_loop(setup):
         assert set(s[key]) == {"p50", "p95", "p99", "mean"}
     import json
     json.dumps(s, default=str)
+
+
+def test_trace_loader_roundtrip(tmp_path):
+    """JSONL trace -> ReplayArrivals + per-request token budgets (satellite
+    of the tiered-store PR; ROADMAP workload-replay follow-up)."""
+    from repro.serving.scheduler import load_trace, requests_from_trace
+    p = tmp_path / "trace.jsonl"
+    p.write_text(
+        "# recorded serving trace\n"
+        '{"t_arrival": 0.02, "prompt_len": 3, "max_new_tokens": 5}\n'
+        "\n"
+        '{"t_arrival": 0.00, "prompt_len": 6, "max_new_tokens": 2}\n'
+        '{"t_arrival": 0.01, "prompt_len": 4, "max_new_tokens": 9}\n')
+    rows = load_trace(str(p))
+    assert [r["t_arrival"] for r in rows] == [0.00, 0.01, 0.02]  # sorted
+    assert [r["prompt_len"] for r in rows] == [6, 4, 3]
+
+    rng = np.random.default_rng(0)
+    reqs = requests_from_trace(
+        str(p), lambda n: rng.integers(0, 100, n), limit=3)
+    assert [len(r.prompt) for r in reqs] == [6, 4, 3]
+    assert [r.max_new_tokens for r in reqs] == [2, 9, 5]   # per-request
+    assert [r.arrival_s for r in reqs] == [0.00, 0.01, 0.02]
+
+
+def test_trace_loader_rejects_bad_rows(tmp_path):
+    from repro.serving.scheduler import load_trace
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"t_arrival": 0.0, "prompt_len": 3}\n')
+    with pytest.raises(ValueError, match="bad trace row"):
+        load_trace(str(p))
+    p.write_text("")
+    with pytest.raises(AssertionError, match="empty trace"):
+        load_trace(str(p))
+
+
+def test_trace_drives_continuous_scheduler(setup, tmp_path):
+    """A replayed trace serves end-to-end with each request's own budget."""
+    cfg, params, lm, tables = setup
+    p = tmp_path / "t.jsonl"
+    p.write_text("".join(
+        '{"t_arrival": %g, "prompt_len": %d, "max_new_tokens": %d}\n'
+        % (i * 0.001, 3 + i, 2 + i) for i in range(3)))
+    from repro.serving.scheduler import requests_from_trace
+    reqs = requests_from_trace(str(p), lambda n: lm.sample(1, n)[0])
+    eng = _engine(cfg, params, tables)
+    s = ContinuousScheduler(eng, slots=2).run(RequestQueue(reqs))
+    assert s["completed"] == 3
+    by_rid = sorted(reqs, key=lambda r: r.rid)
+    assert [len(r.tokens) for r in by_rid] == [2, 3, 4]

@@ -1,0 +1,244 @@
+"""Tiered expert store: budget split, the degrade-vs-wait decision, the
+degraded substitution mask, and the serving engine's four-way miss path
+(buddy / degraded / fetch / drop)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.core.substitute import substitute
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.memory import expert_nbytes, quant_expert_nbytes
+from repro.runtime.tiers import TieredExpertStore
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    e = cfg.moe.num_experts
+    rng = np.random.default_rng(0)
+    q = rng.random((cfg.num_layers, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    return cfg, params, lm, tables
+
+
+def _tier(cfg, rate=0.5, bits=8, **kw):
+    return TieredExpertStore(cfg.num_layers, cfg.moe.num_experts, rate,
+                             bits=bits, d_model=cfg.d_model,
+                             d_ff=cfg.moe.d_ff, **kw)
+
+
+# ---------------------------------------------------------------------------
+# budget split
+# ---------------------------------------------------------------------------
+def test_budget_split_displaces_slots(setup):
+    cfg, *_ = setup
+    e = cfg.moe.num_experts
+    full = expert_nbytes(cfg.d_model, cfg.moe.d_ff)
+    rep4 = quant_expert_nbytes(cfg.d_model, cfg.moe.d_ff, 4)
+    t4 = _tier(cfg, rate=1.0, bits=4)
+    want = int((1.0 * e * full - e * rep4) // full)
+    assert t4.cache.capacity == want
+    assert not t4.clamped
+    split = t4.budget_split()
+    assert split["cache_slots_per_layer"] == want
+    assert split["quant_bytes_per_layer"] == e * rep4
+    # int8 replicas + scale overhead exceed a 0.5 budget entirely: the store
+    # keeps one mandatory full slot and reports the split as clamped
+    t8 = _tier(cfg, rate=0.5, bits=8)
+    assert t8.cache.capacity == 1 and t8.clamped
+    # quant replicas are strictly smaller than full experts
+    assert rep4 < quant_expert_nbytes(cfg.d_model, cfg.moe.d_ff, 8) < full
+
+
+# ---------------------------------------------------------------------------
+# degrade-vs-wait decision
+# ---------------------------------------------------------------------------
+def test_degraded_ok_trades_stall_for_fidelity(setup):
+    cfg, *_ = setup
+    t = _tier(cfg, stall_per_fidelity=0.1)
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    resident = np.zeros((l, e), bool)
+    resident[0, 0] = True
+    fid = np.full((l, e), 0.01)
+    fid[1, 1] = np.inf                       # uncalibrated -> never degrade
+    t.attach_fidelity(fid)
+    eta = np.full((l, e), 0.01)              # 10ms expected stall
+    ok = t.degraded_ok(resident, eta)
+    assert not ok[0, 0], "resident experts never degrade"
+    assert not ok[1, 1], "unknown fidelity never degrades"
+    assert ok[0, 1] and ok[1, 0], "10ms stall >= 0.01 * 0.1s threshold"
+    # a nearly-landed in-flight prefetch (tiny ETA) is waited for instead
+    eta[0, 1] = 1e-5
+    assert not t.degraded_ok(resident, eta)[0, 1]
+
+
+def test_default_fidelity_is_conservative(setup):
+    cfg, *_ = setup
+    t = _tier(cfg)
+    ok = t.degraded_ok(np.zeros((cfg.num_layers, cfg.moe.num_experts), bool),
+                       np.full((cfg.num_layers, cfg.moe.num_experts), 1.0))
+    assert not ok.any(), "no calibration -> no degradation"
+
+
+# ---------------------------------------------------------------------------
+# substitute: degraded sits between buddy and fetch/drop
+# ---------------------------------------------------------------------------
+def test_substitute_degraded_mask():
+    # experts 0/2 resident; 1 has no buddy; quant tier allows 1 and 3
+    idx = jnp.asarray([[1, 3], [0, 2]], jnp.int32)
+    logits = jnp.zeros((2, 2), jnp.float32)
+    resident = jnp.asarray([True, False, True, False])
+    table = jnp.full((4, 2), -1, jnp.int32)
+    q = jnp.zeros((4, 2), jnp.float32)
+    quant_ok = jnp.asarray([False, True, False, True])
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=2, quant_tier="int8")
+    res = substitute(idx, logits, resident, table, q, pol,
+                     quant_ok=quant_ok)
+    np.testing.assert_array_equal(np.asarray(res.degraded),
+                                  [[True, True], [False, False]])
+    assert not np.asarray(res.missed).any(), \
+        "tier-served slots must leave the missed mask"
+    # without the tier the same slots are plain misses
+    res0 = substitute(idx, logits, resident, table, q,
+                      BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=2))
+    np.testing.assert_array_equal(np.asarray(res0.missed),
+                                  [[True, True], [False, False]])
+    assert not np.asarray(res0.degraded).any()
+
+
+def test_substitute_buddy_wins_over_degraded():
+    """An eligible resident buddy is preferred (zero fidelity cost); the
+    tier only catches slots the buddy search could not serve."""
+    idx = jnp.asarray([[1, 2]], jnp.int32)
+    logits = jnp.zeros((1, 2), jnp.float32)
+    resident = jnp.asarray([True, False, True, False])
+    table = jnp.asarray([[2], [0], [1], [-1]], jnp.int32)
+    q = jnp.full((4, 1), 0.5, jnp.float32)
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=1, quant_tier="int8")
+    res = substitute(idx, logits, resident, table, q, pol,
+                     quant_ok=jnp.asarray([True, True, True, True]))
+    assert bool(res.substituted[0, 0]) and not bool(res.degraded[0, 0])
+    assert int(res.indices[0, 0]) == 0
+    assert not np.asarray(res.degraded).any()
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+def test_engine_tier_absorbs_stalls(setup):
+    """Same HBM budget: the tiered engine converts residual-miss stalls into
+    degraded computes — zero demand transfers for tier-served slots."""
+    cfg, params, lm, tables = setup
+    prompts = lm.sample(2, 4)
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=3)
+
+    base = ServeEngine(cfg, params, tables=tables, policy=pol,
+                       cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts,
+                                         0.5, seed=0), seed=0)
+    base.generate(prompts, max_new_tokens=6)
+
+    tier = _tier(cfg, rate=0.5, bits=8)
+    eng = ServeEngine(cfg, params, tables=tables,
+                      policy=BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=3,
+                                         quant_tier="int8"),
+                      tier=tier, seed=0)
+    eng.generate(prompts, max_new_tokens=6)
+
+    s = eng.summary()
+    assert s["tier"]["degraded_tokens"] > 0
+    assert s["tier"]["quant_bytes"] == tier.quant_bytes
+    assert s["tier"]["tier_budget_split"]["cache_slots_per_layer"] >= 1
+    assert s["ledger"]["events"]["degraded"] == s["tier"]["degraded_tokens"]
+    # every degraded slot is a transfer (and stall) that never happened
+    assert eng.stats.n_miss_fetch <= base.stats.n_miss_fetch
+    assert s["stall_breakdown"]["demand_stall_s"] \
+        <= base.summary()["stall_breakdown"]["demand_stall_s"]
+    # outputs are finite at degraded fidelity
+    nll = ServeEngine(cfg, params, tables=tables,
+                      policy=BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=3,
+                                         quant_tier="int8"),
+                      tier=_tier(cfg, rate=0.5, bits=8),
+                      seed=0).teacher_forced_nll(lm.sample(2, 6))
+    assert np.isfinite(nll)
+
+
+def test_engine_tier_off_is_strictly_additive(setup):
+    """quant_tier='off' (the default) must not change the engine: no tier
+    key in summary(), no quant params attached, identical outputs."""
+    cfg, params, lm, tables = setup
+    prompts = lm.sample(2, 4)
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=3)
+
+    def mk():
+        return ServeEngine(cfg, params, tables=tables, policy=pol,
+                           cache=ExpertCache(cfg.num_layers,
+                                             cfg.moe.num_experts, 0.5,
+                                             seed=0), seed=0)
+    eng = mk()
+    out = eng.generate(prompts, max_new_tokens=4)
+    s = eng.summary()
+    assert "tier" not in s
+    assert "degraded" not in s["ledger"]["events"]
+    assert "quant" not in eng.params["groups"][0]["moe"]
+    np.testing.assert_array_equal(out, mk().generate(prompts,
+                                                     max_new_tokens=4))
+    # mismatched policy/tier wiring is rejected loudly
+    with pytest.raises(AssertionError):
+        ServeEngine(cfg, params, tables=tables,
+                    policy=BuddyPolicy(quant_tier="int8"), seed=0)
+    with pytest.raises(AssertionError):
+        ServeEngine(cfg, params, tables=tables, policy=pol,
+                    tier=_tier(cfg), seed=0)
+
+
+def test_engine_tier_reset_runtime(setup):
+    """reset_runtime keeps the tier wired: counters cleared, upload re-paid,
+    the fresh cache repointed."""
+    cfg, params, lm, tables = setup
+    tier = _tier(cfg, rate=0.5, bits=8)
+    eng = ServeEngine(cfg, params, tables=tables,
+                      policy=BuddyPolicy(tau=0.0, beta=1.1, rho=2, H=3,
+                                         quant_tier="int8"),
+                      tier=tier, seed=0)
+    eng.generate(lm.sample(1, 3), max_new_tokens=3)
+    assert tier.degraded_tokens > 0
+    eng.reset_runtime()
+    assert tier.degraded_tokens == 0
+    assert eng.cache is tier.cache
+    assert eng.ledger.bytes_by_cause["tier_upload"] == tier.quant_bytes
+    eng.generate(lm.sample(1, 3), max_new_tokens=3)
+    assert tier.degraded_tokens > 0
+
+
+def test_degraded_output_close_to_full_precision(setup):
+    """The degraded path computes the TRUE expert at int8 fidelity: its NLL
+    probe sits near the full-residency reference (it is not a drop)."""
+    cfg, params, lm, tables = setup
+    data = lm.sample(2, 8)
+    nll_full = ServeEngine(
+        cfg, params, tables=tables, policy=BuddyPolicy(mode="none"),
+        cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts, 1.0, seed=0),
+        seed=0).teacher_forced_nll(data)
+    # tier with no buddies: every miss degrades (mode none + quant tier)
+    eng = ServeEngine(cfg, params, tables=tables,
+                      policy=BuddyPolicy(mode="none", quant_tier="int8"),
+                      tier=_tier(cfg, rate=0.5, bits=8), seed=0)
+    nll_tier = eng.teacher_forced_nll(data)
+    nll_drop = ServeEngine(
+        cfg, params, tables=tables,
+        policy=BuddyPolicy(mode="none", fallback="drop"),
+        cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts, 0.5, seed=0),
+        seed=0).teacher_forced_nll(data)
+    assert eng.tier.degraded_tokens > 0
+    assert np.isfinite(nll_tier)
+    # degraded compute tracks the true expert far better than dropping it
+    assert abs(nll_tier - nll_full) < abs(nll_drop - nll_full) + 0.05
+    assert abs(nll_tier - nll_full) < 0.1
