@@ -24,6 +24,17 @@ fetch baseline gets the same extra bytes, so the comparison never hands the
 tier free HBM), and a teacher-forced NLL probe vs full residency compared
 against the drop-on-miss accuracy cliff.
 
+--cost-policy (with a --quant-tier) adds the COST-POLICY arm: the same
+four-way tier config run twice — once with the fixed precedence chain
+(buddy before degraded before fetch), once with the unified expected-cost
+argmin (runtime/costs.py) — differing ONLY in policy.miss_policy
+(degraded-then-upgrade pinned off in BOTH arms so the scorer alone is
+measured). The cost arm must hold p99 token latency and tighten
+the |NLL delta| against the full-residency reference (recorded as
+cost_no_worse_both / cost_strictly_better_one in serving.json; the CI
+regression gate in benchmarks/check_regression.py tracks the raw metrics
+against a committed baseline).
+
 --seed makes sweeps reproducible run-to-run: it drives the workload draw,
 the cache placement, and every engine PRNG, and is recorded per arm in
 results/bench/serving.json.
@@ -91,10 +102,16 @@ def _engine(cfg, params, tables, cache_rate: float, prefetch_k: int,
 
 
 def _tier_engine(cfg, params, tables, cache_rate: float, prefetch_k: int,
-                 quant_tier: str, seed: int = 0,
-                 mode: str = "buddy") -> ServeEngine:
+                 quant_tier: str, seed: int = 0, mode: str = "buddy",
+                 miss_policy: str = "precedence") -> ServeEngine:
     """Tiered arm at EQUAL total HBM budget: the resident replica tier
-    displaces full-precision cache slots from the same cache_rate budget."""
+    displaces full-precision cache slots from the same cache_rate budget.
+    ``miss_policy='cost'`` swaps the fixed buddy->degraded->fetch chain for
+    the unified expected-cost argmin (runtime/costs.py). Degraded-then-
+    upgrade is pinned OFF in both arms so the cost-vs-precedence pair
+    differs in the SCORER alone — the engine would otherwise auto-enable
+    upgrades exactly in the cost arm and confound the A/B (upgrades are
+    exercised by the serve launcher and tests/test_costs.py)."""
     l, e = cfg.num_layers, cfg.moe.num_experts
     tier = TieredExpertStore(l, e, cache_rate, bits=TIER_BITS[quant_tier],
                              d_model=cfg.d_model, d_ff=cfg.moe.d_ff,
@@ -102,9 +119,9 @@ def _tier_engine(cfg, params, tables, cache_rate: float, prefetch_k: int,
     return ServeEngine(
         cfg, params, tables=tables,
         policy=BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8, mode=mode,
-                           quant_tier=quant_tier),
+                           quant_tier=quant_tier, miss_policy=miss_policy),
         tier=tier, predictor=PrevStepPredictor(l, e),
-        prefetch_k=prefetch_k, seed=seed)
+        prefetch_k=prefetch_k, seed=seed, upgrade_degraded=False)
 
 
 PROMPT_LO, PROMPT_HI = 12, 25       # prompt-length range (rng.integers)
@@ -137,8 +154,10 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
         cache_rates=(0.5,), num_requests: int = 24, slots: int = 4,
         max_new: int = 8, prefetch_k: int = 2,
         prefill_chunk: int = 8, seed: int = 0,
-        quant_tier: str = "off") -> dict:
+        quant_tier: str = "off", cost_policy: bool = False) -> dict:
     t0 = time.time()
+    assert not cost_policy or quant_tier != "off", \
+        "--cost-policy compares the four-way miss tree: pick a --quant-tier"
     cfg, params, lm, tables = _setup(smoke)
     results = {"seed": seed}
     for cache_rate in cache_rates:
@@ -245,6 +264,41 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
                     "fetch_equal_footprint": s_fetch_eq,
                     "nll": {"full_residency": nll_full, "tier": nll_tier,
                             "drop": nll_drop}}
+
+            if cost_policy:
+                # -- unified cost-policy arm: argmin scorer vs the fixed
+                # precedence chain. The pair shares the EXACT tier config
+                # (buddies on, prefetch-free, same seeds) and differs only
+                # in policy.miss_policy, so any gap is the scorer's: the
+                # cost arm must hold p99 token latency (both resolve misses
+                # transfer-free) and tighten |NLL delta| by preferring the
+                # calibrated replica over mediocre buddies — and high-q
+                # buddies over low-fidelity replicas — per slot.
+                s_prec = _continuous(
+                    _tier_engine(cfg, params, tables, cache_rate, 0,
+                                 quant_tier, seed=seed), 1, adaptive=False)
+                s_cost = _continuous(
+                    _tier_engine(cfg, params, tables, cache_rate, 0,
+                                 quant_tier, seed=seed,
+                                 miss_policy="cost"), 1, adaptive=False)
+                arms.append(("prec/4way", s_prec))
+                arms.append(("cost/4way", s_cost))
+                # NLL probe: reuse the tiered arm's tokens and full-residency
+                # reference (drawing fresh ones would advance the shared
+                # MarkovLM RNG and silently change every later sweep key's
+                # workload at the same --seed)
+                nll_prec = _tier_engine(
+                    cfg, params, tables, cache_rate, 0, quant_tier,
+                    seed=seed).teacher_forced_nll(probe_toks)
+                nll_cost = _tier_engine(
+                    cfg, params, tables, cache_rate, 0, quant_tier,
+                    seed=seed, miss_policy="cost").teacher_forced_nll(
+                        probe_toks)
+                results[key]["cost_policy"] = {
+                    "quant_tier": quant_tier,
+                    "precedence": s_prec, "cost": s_cost,
+                    "nll": {"full_residency": nll_full,
+                            "precedence": nll_prec, "cost": nll_cost}}
             for tag, s in arms:
                 print(f"  [{key}] {tag:11s} TTFT mean "
                       f"{s['ttft_s']['mean']*1e3:7.2f}ms  p99 "
@@ -314,6 +368,42 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
                 out_rows.append((
                     f"serving.{key}.nll_absdelta_tier_{quant_tier}",
                     d_tier, f"drop={d_drop:.4f}"))
+            if cost_policy:
+                cp = results[key]["cost_policy"]
+                p99_prec = cp["precedence"]["token_latency_s"]["p99"]
+                p99_cost = cp["cost"]["token_latency_s"]["p99"]
+                d_prec = abs(cp["nll"]["precedence"]
+                             - cp["nll"]["full_residency"])
+                d_cost = abs(cp["nll"]["cost"] - cp["nll"]["full_residency"])
+                # acceptance: no worse on BOTH axes, strictly better on one
+                # (tiny float tolerance on the latency tie — the arms share
+                # the deterministic modeled timeline)
+                tol = 1e-12
+                no_worse = (p99_cost <= p99_prec + tol
+                            and d_cost <= d_prec + tol)
+                strictly = (p99_cost < p99_prec - tol
+                            or d_cost < d_prec - tol)
+                cp["p99_token_latency_s"] = {"precedence": p99_prec,
+                                             "cost": p99_cost}
+                cp["nll_absdelta"] = {"precedence": d_prec, "cost": d_cost}
+                cp["cost_no_worse_both"] = bool(no_worse)
+                cp["cost_strictly_better_one"] = bool(strictly)
+                print(f"  [{key}] cost-policy vs precedence (scorer only, "
+                      f"upgrades off): p99 tok "
+                      f"{p99_cost*1e3:.3f}/{p99_prec*1e3:.3f}ms; "
+                      f"|NLL delta| {d_cost:.4f} vs {d_prec:.4f}; "
+                      f"no-worse-both {no_worse}, strictly-better "
+                      f"{strictly}")
+                out_rows.append((
+                    f"serving.{key}.p99_tok_ms_costpolicy",
+                    p99_cost * 1e3, f"precedence={p99_prec*1e3:.3f}"))
+                out_rows.append((
+                    f"serving.{key}.goodput_rps_costpolicy",
+                    cp["cost"]["goodput_rps"],
+                    f"precedence={cp['precedence']['goodput_rps']:.1f}"))
+                out_rows.append((
+                    f"serving.{key}.nll_absdelta_costpolicy",
+                    d_cost, f"precedence={d_prec:.4f}"))
 
     os.makedirs(common.CACHE_DIR, exist_ok=True)
     with open(os.path.join(common.CACHE_DIR, "serving.json"), "w") as f:
@@ -342,19 +432,29 @@ if __name__ == "__main__":
     ap.add_argument("--seed", type=int, default=0,
                     help="workload + engine + cache-placement seed, recorded "
                          "per arm in results/bench/serving.json")
+    ap.add_argument("--cost-policy", action="store_true",
+                    help="adds the unified cost-policy arm: the expected-"
+                         "cost argmin (runtime/costs.py) vs the fixed "
+                         "precedence chain on the same tiered config "
+                         "(requires --quant-tier)")
     args = ap.parse_args()
+    if args.cost_policy and args.quant_tier == "off":
+        ap.error("--cost-policy compares the four-way miss tree: "
+                 "pick a --quant-tier (int8/int4)")
     rows = []
     if args.smoke:
         run(rows, smoke=True, loads=(1.0,), cache_rates=(0.5,),
             num_requests=16, max_new=6, prefill_chunk=args.prefill_chunk,
-            seed=args.seed, quant_tier=args.quant_tier)
+            seed=args.seed, quant_tier=args.quant_tier,
+            cost_policy=args.cost_policy)
     else:
         run(rows,
             loads=tuple(float(x) for x in args.rates.split(",")),
             cache_rates=tuple(float(x) for x in args.cache_rates.split(",")),
             num_requests=args.num_requests, slots=args.slots,
             max_new=args.max_new, prefill_chunk=args.prefill_chunk,
-            seed=args.seed, quant_tier=args.quant_tier)
+            seed=args.seed, quant_tier=args.quant_tier,
+            cost_policy=args.cost_policy)
     print("\nname,value,derived")
     for name, v, derived in rows:
         print(f"{name},{v:.2f},{derived}")

@@ -1,0 +1,203 @@
+"""Benchmark-regression gate for the serving smoke run (CI).
+
+Compares the metrics of a fresh ``results/bench/serving.json`` against a
+COMMITTED baseline (``benchmarks/baselines/serving_smoke.json``) and fails
+(exit 1) when any metric regresses by more than ``--threshold`` (default
+15%), printing a per-metric delta table either way.
+
+Tracked metrics (per sweep key, e.g. ``c0.5_load1.0``):
+
+  p99_token_latency_ms.*   continuous arm + tier / cost-policy arms (lower
+                           is better)
+  goodput_rps.*            continuous + cost-policy arms (higher is better)
+  nll_absdelta.*           |NLL - full-residency reference| of the tier and
+                           cost-policy arms (lower is better)
+
+The simulation is deterministic given ``--seed`` (modeled latencies, seeded
+workload/cache/PRNGs), so the baseline is tight run-to-run; small absolute
+floors (see ``FLOORS``) keep the RELATIVE threshold from tripping on
+float-level noise when a baseline value is near zero.
+
+Comparison rules:
+  * a metric present in the baseline but missing from the current run FAILS
+    (a silently dropped arm must not pass the gate);
+  * a metric new in the current run is reported and ignored (add it to the
+    baseline with --write-baseline when it should be gated).
+
+  # gate a fresh smoke run
+  PYTHONPATH=src python -m benchmarks.check_regression
+
+  # refresh the committed baseline after an intentional change
+  PYTHONPATH=src python -m benchmarks.check_regression --write-baseline
+
+  # prove the gate trips (CI does this): inflate latency/NLL 1.3x
+  PYTHONPATH=src python -m benchmarks.check_regression --inject-regression 1.3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_CURRENT = os.path.join(HERE, "..", "results", "bench", "serving.json")
+DEFAULT_BASELINE = os.path.join(HERE, "baselines", "serving_smoke.json")
+
+# direction: is a LARGER current value worse?
+LOWER_IS_BETTER = "lower"
+HIGHER_IS_BETTER = "higher"
+
+# absolute change floors per metric family — a relative regression smaller
+# than this in absolute terms is measurement noise, not a regression
+FLOORS = {
+    "p99_token_latency_ms": 0.01,    # modeled ms
+    "goodput_rps": 0.05,             # requests / simulated second
+    "nll_absdelta": 0.02,            # nats on the smoke NLL probe
+}
+
+
+def _family(metric: str) -> str:
+    for fam in FLOORS:
+        if f".{fam}." in metric or metric.endswith(fam):
+            return fam
+    return ""
+
+
+def _direction(metric: str) -> str:
+    return (HIGHER_IS_BETTER if _family(metric) == "goodput_rps"
+            else LOWER_IS_BETTER)
+
+
+def extract_metrics(results: dict) -> Dict[str, float]:
+    """Flatten a bench_serving results dict into {metric_name: value}."""
+    out: Dict[str, float] = {}
+    for key, row in results.items():
+        if not isinstance(row, dict) or "continuous" not in row:
+            continue
+        cont = row["continuous"]
+        out[f"{key}.p99_token_latency_ms.continuous"] = \
+            cont["token_latency_s"]["p99"] * 1e3
+        out[f"{key}.goodput_rps.continuous"] = cont["goodput_rps"]
+        if "tiered" in row:
+            td = row["tiered"]
+            out[f"{key}.p99_token_latency_ms.tier"] = \
+                td["summary"]["token_latency_s"]["p99"] * 1e3
+            out[f"{key}.nll_absdelta.tier"] = \
+                abs(td["nll"]["tier"] - td["nll"]["full_residency"])
+        if "cost_policy" in row:
+            cp = row["cost_policy"]
+            out[f"{key}.p99_token_latency_ms.cost_policy"] = \
+                cp["cost"]["token_latency_s"]["p99"] * 1e3
+            out[f"{key}.goodput_rps.cost_policy"] = \
+                cp["cost"]["goodput_rps"]
+            out[f"{key}.nll_absdelta.cost_policy"] = \
+                abs(cp["nll"]["cost"] - cp["nll"]["full_residency"])
+    return out
+
+
+def inject_regression(metrics: Dict[str, float],
+                      factor: float) -> Dict[str, float]:
+    """Synthetically worsen every metric by ``factor`` (latency/NLL up,
+    goodput down) — the gate's self-test."""
+    out = {}
+    for m, v in metrics.items():
+        if _direction(m) == HIGHER_IS_BETTER:
+            out[m] = v / factor
+        else:
+            out[m] = v * factor + FLOORS.get(_family(m), 0.0) * factor
+    return out
+
+
+def compare(baseline: Dict[str, float], current: Dict[str, float],
+            threshold: float = 0.15) -> Tuple[list, bool]:
+    """Returns ([(metric, base, cur, delta_frac, status)], any_regression).
+    delta_frac is SIGNED so that positive = worse regardless of direction."""
+    rows = []
+    bad = False
+    for m in sorted(set(baseline) | set(current)):
+        if m not in current:
+            rows.append((m, baseline[m], None, None, "MISSING"))
+            bad = True
+            continue
+        if m not in baseline:
+            rows.append((m, None, current[m], None, "new"))
+            continue
+        b, c = baseline[m], current[m]
+        worse = (b - c) if _direction(m) == HIGHER_IS_BETTER else (c - b)
+        frac = worse / max(abs(b), 1e-12)
+        floor = FLOORS.get(_family(m), 0.0)
+        if frac > threshold and abs(worse) > floor:
+            rows.append((m, b, c, frac, "REGRESSION"))
+            bad = True
+        elif frac < -threshold and abs(worse) > floor:
+            rows.append((m, b, c, frac, "improved"))
+        else:
+            rows.append((m, b, c, frac, "ok"))
+    return rows, bad
+
+
+def _fmt(v) -> str:
+    return "      --" if v is None else f"{v:12.4f}"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="serving.json of the run under test")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline metrics JSON")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated relative regression per metric")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="extract the current run's metrics into --baseline "
+                         "instead of comparing")
+    ap.add_argument("--inject-regression", type=float, default=0.0,
+                    metavar="FACTOR",
+                    help="self-test: worsen every current metric by FACTOR "
+                         "before comparing (the gate must then fail)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = extract_metrics(json.load(f))
+    if not current:
+        print(f"no gateable metrics found in {args.current}", file=sys.stderr)
+        return 1
+
+    if args.write_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+        print(f"wrote {len(current)} baseline metrics to {args.baseline}")
+        return 0
+
+    if args.inject_regression:
+        assert args.inject_regression > 1.0, \
+            "--inject-regression FACTOR must be > 1"
+        current = inject_regression(current, args.inject_regression)
+        print(f"[self-test] injected a {args.inject_regression:.2f}x "
+              f"regression into every metric")
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows, bad = compare(baseline, current, args.threshold)
+    w = max(len(m) for m, *_ in rows)
+    print(f"{'metric':<{w}}  {'baseline':>12}  {'current':>12}  "
+          f"{'delta':>8}  status")
+    for m, b, c, frac, status in rows:
+        d = "      --" if frac is None else f"{frac:+8.1%}"
+        print(f"{m:<{w}}  {_fmt(b)}  {_fmt(c)}  {d}  {status}")
+    n_reg = sum(1 for r in rows if r[4] in ("REGRESSION", "MISSING"))
+    if bad:
+        print(f"\nFAIL: {n_reg} metric(s) regressed beyond "
+              f"{args.threshold:.0%} (or went missing) vs {args.baseline}")
+        return 1
+    print(f"\nOK: {len(rows)} metric(s) within {args.threshold:.0%} "
+          f"of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,19 +30,23 @@ def build_engine(args):
     rec, q = common.get_profile(cfg, params, lm)
     tables = common.get_tables(cfg, q, rec, 0.95, 16)
 
-    policy = (BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8,
-                          quant_tier=args.quant_tier)
+    kw = dict(quant_tier=args.quant_tier, miss_policy=args.miss_policy,
+              stall_per_quality=args.stall_per_quality)
+    policy = (BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8, **kw)
               if args.policy == "buddy"
-              else BuddyPolicy(mode="none", quant_tier=args.quant_tier))
+              else BuddyPolicy(mode="none", **kw))
     tier = None
     cache = None
     if args.quant_tier != "off":
-        # split the HBM budget: int8/int4 replicas of every expert stay
-        # resident; leftover budget becomes full-precision cache slots
+        # split the HBM budget: int8/int4 replicas of the covered experts
+        # stay resident; leftover budget becomes full-precision cache slots
         tier = TieredExpertStore(
             cfg.num_layers, cfg.moe.num_experts, args.cache_rate,
             bits=TIER_BITS[args.quant_tier], d_model=cfg.d_model,
-            d_ff=cfg.moe.d_ff, seed=0)
+            d_ff=cfg.moe.d_ff, seed=0, coverage=args.tier_coverage)
+        if args.tier_coverage < 1.0:
+            # top-P(use) experts per layer from the profiling activity
+            tier.set_coverage(rec.A)
     else:
         cache = ExpertCache(cfg.num_layers, cfg.moe.num_experts,
                             args.cache_rate, seed=0)
@@ -77,6 +81,18 @@ def main():
                          "buddy-less miss computes degraded instead of "
                          "stalling on PCIe (displaces cache slots from the "
                          "--cache-rate budget)")
+    ap.add_argument("--tier-coverage", type=float, default=1.0,
+                    help="fraction of experts per layer with a resident "
+                         "replica (top-P(use) from profiling); freed bytes "
+                         "become full cache slots")
+    ap.add_argument("--miss-policy", choices=["precedence", "cost"],
+                    default="precedence",
+                    help="'cost': unified expected-cost argmin over buddy/"
+                         "degraded/fetch/drop (runtime/costs.py) instead of "
+                         "the fixed precedence chain")
+    ap.add_argument("--stall-per-quality", type=float, default=0.05,
+                    help="seconds of stall worth one unit of quality loss "
+                         "(the cost model's single exchange rate)")
     args = ap.parse_args()
 
     cfg, lm, eng = build_engine(args)

@@ -28,6 +28,22 @@ class BuddyPolicy:
             low-precision replica ('degraded') INSTEAD of falling back — the
             four-way miss decision becomes buddy / degraded / fetch / drop.
             Static under jit: 'off' compiles the exact pre-tier graph.
+    miss_policy: how the four miss outcomes are resolved.
+            'precedence' — the fixed chain (buddy, then degraded, then the
+            global ``fallback``), the pre-cost-model behavior.
+            'cost' — per-slot argmin of the unified expected-cost model
+            (runtime/costs.py): every outcome is scored in stall-seconds via
+            ``stall_per_quality`` and the cheapest wins, so a high-q buddy
+            can beat a low-fidelity replica and vice versa. The per-slot
+            scorer owns the fetch/drop choice, so ``fallback`` must stay at
+            its 'fetch' default (it is unused).
+    stall_per_quality: the single exchange rate (seconds of stall worth one
+            unit of quality loss) that puts buddy Psi loss, replica
+            fidelity error, and drop renormalization loss on the same scale
+            as fetch stall. Generalizes the tier's ``stall_per_fidelity``.
+    drop_loss: quality units lost by dropping a routed slot and
+            renormalizing (the whole slot's mixture contribution; 1.0 makes
+            drop the outcome of last resort).
     """
     tau: float = 0.2
     beta: float = 0.6
@@ -40,11 +56,20 @@ class BuddyPolicy:
     fallback: str = "fetch"
     mode: str = "buddy"
     quant_tier: str = "off"
+    miss_policy: str = "precedence"
+    stall_per_quality: float = 0.05
+    drop_loss: float = 1.0
 
     def __post_init__(self):
         assert self.fallback in ("fetch", "drop")
         assert self.mode in ("buddy", "random", "none")
         assert self.quant_tier in ("off", "int8", "int4")
+        assert self.miss_policy in ("precedence", "cost")
+        assert self.miss_policy == "precedence" or self.fallback == "fetch", \
+            "miss_policy='cost' scores fetch vs drop per slot — the global " \
+            "fallback knob is subsumed; leave it at 'fetch'"
+        assert self.stall_per_quality > 0.0
+        assert self.drop_loss >= 0.0
         assert self.rho >= 0 and self.H >= 1
 
 

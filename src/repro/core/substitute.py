@@ -19,6 +19,21 @@ paper exactly:
 
 Uniqueness (b not in U_t) subsumes the paper's multiplicative reuse penalty:
 a buddy already claimed for token t can never be picked again for t.
+
+Unified cost mode (policy.miss_policy='cost', runtime/costs.py): instead of
+the fixed precedence above, every missed slot picks the ARGMIN of the four
+outcome costs on one stall-seconds scale —
+
+  buddy     stall_per_quality * (1 - Psi_best)   (gates/budget still apply)
+  degraded  fid_cost[e]   caller-prepared stall_per_quality * fidelity
+  fetch     fetch_cost[e] caller-prepared expected stall (in-flight ETA or
+            modeled cold transfer)
+  drop      stall_per_quality * drop_loss
+
+so a high-q buddy beats a low-fidelity replica and vice versa, a
+nearly-landed prefetch beats both, and the fetch/drop choice is per-slot.
+Ties break toward the earlier outcome (buddy, then degraded): at equal cost
+the transfer-free reroute wins.
 """
 from __future__ import annotations
 
@@ -33,11 +48,24 @@ from repro.core.policy import BuddyPolicy
 class SubstituteResult(NamedTuple):
     indices: jax.Array      # [T, K] int32 — possibly rewritten expert ids
     substituted: jax.Array  # [T, K] bool  — slot was replaced by a buddy
-    missed: jax.Array       # [T, K] bool  — non-resident, no buddy found
+    missed: jax.Array       # [T, K] bool  — non-resident, resolved by fetch
+    #                         (or the global fallback in precedence mode)
     allowed: jax.Array      # [T]   bool  — token passed TAE gate
     dist_ok: jax.Array      # []    bool  — batch passed distribution gate
     degraded: jax.Array = None  # [T, K] bool — miss served by the resident
     #                             quant-replica tier (excluded from missed)
+    dropped: jax.Array = None   # [T, K] bool — miss dropped + renormalized
+    #                             by the cost argmin (cost mode only; the
+    #                             precedence drop path stays on ``missed``
+    #                             with policy.fallback='drop')
+
+
+def _outcome_argmin(cost_b, cost_d, cost_f, cost_r):
+    """Per-slot argmin over the four outcome costs, ties to the EARLIER
+    outcome (buddy, then degraded, then fetch, then drop) so an equally
+    priced transfer-free reroute always wins. Returns int codes [T]."""
+    costs = jnp.stack([cost_b, cost_d, cost_f, cost_r], axis=-1)
+    return jnp.argmin(costs, axis=-1).astype(jnp.int32)
 
 
 def substitute(indices: jax.Array,
@@ -48,21 +76,41 @@ def substitute(indices: jax.Array,
                policy: BuddyPolicy,
                router_logits: Optional[jax.Array] = None,
                hop: Optional[jax.Array] = None,
-               quant_ok: Optional[jax.Array] = None) -> SubstituteResult:
+               quant_ok: Optional[jax.Array] = None,
+               fid_cost: Optional[jax.Array] = None,
+               fetch_cost: Optional[jax.Array] = None) -> SubstituteResult:
     """indices [T, K] int32; topk_logits [T, K] f32 (for TAE);
     resident [E] bool; buddy_table [E, R] int32 (-1 padded, sorted by q desc);
     buddy_q [E, R] f32; router_logits [T, E] (optional, for eta term);
     hop [E] int32 ICI hops to each expert's cache slot (optional);
-    quant_ok [E] bool (optional) — experts whose miss the runtime decided to
-    serve from the resident quant-replica tier this step (the degraded
-    fallback sits between buddy substitution and fetch/drop, and unlike
-    substitution it is NOT subject to the TAE/distribution gates — it is a
-    miss-path fallback, not a rerouting decision)."""
+    quant_ok [E] bool (optional, precedence mode) — experts whose miss the
+    runtime decided to serve from the resident quant-replica tier this step
+    (the degraded fallback sits between buddy substitution and fetch/drop,
+    and unlike substitution it is NOT subject to the TAE/distribution gates
+    — it is a miss-path fallback, not a rerouting decision);
+    fid_cost [E] f32 (cost mode) — stall_per_quality * replica fidelity
+    error, inf where no replica is usable (runtime/costs.py);
+    fetch_cost [E] f32 (cost mode) — expected stall seconds of fetching
+    (in-flight ETA or modeled cold transfer), inf to forbid fetching."""
     from repro.core import gates
 
     t_n, k_n = indices.shape
     e_n, r_n = buddy_table.shape
     h_n = min(policy.H, r_n)
+    cost_mode = policy.miss_policy == "cost"
+    # fetching is always physically possible, so an absent fetch_cost must
+    # not default to +inf — the argmin would silently turn every residual
+    # miss into a lossy drop (drop cost is always finite)
+    assert not cost_mode or fetch_cost is not None, \
+        "miss_policy='cost' requires fetch_cost [E] (expected fetch stall " \
+        "per expert — runtime/costs.MissCostModel.fetch_eta)"
+    xr = policy.stall_per_quality
+    inf_e = jnp.full((e_n,), jnp.inf, jnp.float32)
+    d_cost = (fid_cost.astype(jnp.float32) if fid_cost is not None
+              else inf_e)
+    f_cost = (fetch_cost.astype(jnp.float32) if fetch_cost is not None
+              else inf_e)
+    r_cost = jnp.float32(xr * policy.drop_loss)
 
     allowed = gates.token_gate(topk_logits, policy.tau, policy.temperature,
                                policy.margin_gamma)                      # [T]
@@ -77,9 +125,20 @@ def substitute(indices: jax.Array,
 
     if policy.mode == "none":
         miss = ~resident[indices] & True
+        if cost_mode:
+            # no rerouting: argmin over degraded / fetch / drop per slot
+            out = _outcome_argmin(jnp.full(indices.shape, jnp.inf),
+                                  d_cost[indices], f_cost[indices],
+                                  jnp.full(indices.shape, r_cost))
+            deg = miss & (out == 1)
+            drp = miss & (out == 3)
+            return SubstituteResult(indices, jnp.zeros_like(miss),
+                                    miss & (out == 2), allowed, dist_ok,
+                                    deg, drp)
         miss, deg = _split_degraded(miss, indices)
         return SubstituteResult(indices, jnp.zeros_like(miss), miss,
-                                allowed, dist_ok, deg)
+                                allowed, dist_ok, deg,
+                                jnp.zeros_like(miss))
 
     gate = allowed & dist_ok                                             # [T]
 
@@ -93,11 +152,13 @@ def substitute(indices: jax.Array,
     substituted = jnp.zeros((t_n, k_n), bool)
     missed = jnp.zeros((t_n, k_n), bool)
     degraded = jnp.zeros((t_n, k_n), bool)
+    dropped = jnp.zeros((t_n, k_n), bool)
     budget = jnp.where(gate, policy.rho, 0).astype(jnp.int32)            # [T]
 
     for k in range(k_n):
         e = new_idx[:, k]                                                # [T]
-        need = ~resident[e] & gate & (budget > 0)                        # [T]
+        miss_k = ~resident[e]                                            # [T]
+        can_sub = gate & (budget > 0)                                    # [T]
 
         cand = buddy_table[e][:, :h_n]                                   # [T, H]
         q = buddy_q[e][:, :h_n].astype(jnp.float32)                      # [T, H]
@@ -121,19 +182,34 @@ def substitute(indices: jax.Array,
         best = jnp.argmax(psi, axis=-1)                                  # [T]
         found = jnp.take_along_axis(elig, best[:, None], 1)[:, 0]        # [T]
         buddy = jnp.take_along_axis(cand_safe, best[:, None], 1)[:, 0]   # [T]
+        psi_best = jnp.take_along_axis(psi, best[:, None], 1)[:, 0]      # [T]
 
-        do_sub = need & found
-        new_col = jnp.where(do_sub, buddy, e)
+        if cost_mode:
+            # unified argmin: the buddy option carries its Psi quality loss,
+            # the others the caller-prepared per-expert costs
+            cost_b = jnp.where(can_sub & found,
+                               xr * (1.0 - jnp.clip(psi_best, 0.0, 1.0)),
+                               jnp.inf)
+            out = _outcome_argmin(cost_b, d_cost[e], f_cost[e],
+                                  jnp.full((t_n,), r_cost))
+            do_sub = miss_k & (out == 0)
+            deg_col = miss_k & (out == 1)
+            res_miss = miss_k & (out == 2)
+            dropped = dropped.at[:, k].set(miss_k & (out == 3))
+            new_col = jnp.where(do_sub, buddy, e)
+        else:
+            do_sub = miss_k & can_sub & found
+            new_col = jnp.where(do_sub, buddy, e)
+            res_miss = (~resident[new_col]) & ~do_sub
+            res_miss, deg_col = _split_degraded(res_miss, new_col)
         new_idx = new_idx.at[:, k].set(new_col)
         substituted = substituted.at[:, k].set(do_sub)
-        res_miss = (~resident[new_col]) & ~do_sub
-        res_miss, deg_col = _split_degraded(res_miss, new_col)
         missed = missed.at[:, k].set(res_miss)
         degraded = degraded.at[:, k].set(deg_col)
         budget = budget - do_sub.astype(jnp.int32)
 
     return SubstituteResult(new_idx, substituted, missed, allowed, dist_ok,
-                            degraded)
+                            degraded, dropped)
 
 
 def make_random_table(key, num_experts: int, r_max: int) -> tuple:

@@ -130,7 +130,37 @@ def main():
     ap.add_argument("--tier-stall-per-fidelity", type=float, default=0.05,
                     help="seconds of expected stall that justify one unit "
                          "of relative quantization error when deciding "
-                         "degrade-vs-wait on a miss")
+                         "degrade-vs-wait on a miss (precedence mode)")
+    ap.add_argument("--tier-coverage", type=float, default=1.0,
+                    help="fraction of experts per layer holding a resident "
+                         "replica (top-P(use) from the profiling activity "
+                         "stats); the freed bytes become full cache slots")
+    # -- unified expected-cost miss policy (runtime/costs.py) -----------
+    ap.add_argument("--miss-policy", choices=["precedence", "cost"],
+                    default="precedence",
+                    help="'precedence': fixed buddy->degraded->fetch/drop "
+                         "chain; 'cost': per-slot argmin of the unified "
+                         "expected-cost model — buddy Psi loss, replica "
+                         "fidelity, fetch ETA, and drop loss scored on one "
+                         "stall-seconds scale")
+    ap.add_argument("--stall-per-quality", type=float, default=0.05,
+                    help="the single exchange rate: seconds of stall worth "
+                         "one unit of quality loss (generalizes "
+                         "--tier-stall-per-fidelity across all outcomes)")
+    ap.add_argument("--drop-loss", type=float, default=1.0,
+                    help="quality units lost by dropping a routed slot "
+                         "(cost mode's drop outcome)")
+    ap.add_argument("--upgrade-degraded", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="degraded-then-upgrade: background-fetch the true "
+                         "expert after serving its slot from the quant tier "
+                         "(auto: on exactly when --miss-policy cost and a "
+                         "tier is attached)")
+    ap.add_argument("--prefetch-min-saving", type=float, default=-1.0,
+                    help="cost-ranked prefetch: skip candidates whose "
+                         "expected stall saved (P(use) x miss cost) is at "
+                         "or below this many seconds (<0: auto = 1%% of a "
+                         "full expert transfer)")
     args = ap.parse_args()
     if args.lookahead < 1:
         ap.error("--lookahead must be >= 1 (layers ahead to prefetch)")
@@ -148,17 +178,25 @@ def main():
         params = load_pytree(args.checkpoint, params)
 
     lm = MarkovLM(cfg.vocab_size, seed=0)
-    tables, _ = profile_buddies(cfg, params, lm, alpha=args.alpha)
+    tables, rec = profile_buddies(cfg, params, lm, alpha=args.alpha)
     n_moe = sum(r for k, r in cfg.stack() if k == "attn_moe")
     policy = BuddyPolicy(tau=args.tau, beta=args.beta, rho=args.rho,
-                         mode=args.policy, quant_tier=args.quant_tier)
+                         mode=args.policy, quant_tier=args.quant_tier,
+                         miss_policy=args.miss_policy,
+                         stall_per_quality=args.stall_per_quality,
+                         drop_loss=args.drop_loss)
     tier = None
     if args.quant_tier != "off":
         tier = TieredExpertStore(
             n_moe, cfg.moe.num_experts, args.cache_rate,
             bits=TIER_BITS[args.quant_tier], d_model=cfg.d_model,
             d_ff=cfg.moe.d_ff,
-            stall_per_fidelity=args.tier_stall_per_fidelity)
+            stall_per_fidelity=args.tier_stall_per_fidelity,
+            coverage=args.tier_coverage)
+        if args.tier_coverage < 1.0:
+            # partial coverage: replicate the top-P(use) experts per layer,
+            # ranked by the profiling run's activation counts
+            tier.set_coverage(rec.A)
         cache = tier.cache
         print(f"[serve] quant tier {args.quant_tier}: "
               f"{tier.budget_split()}")
@@ -167,10 +205,13 @@ def main():
     prefetch_k = (max(1, cache.capacity // 2) if args.prefetch_k < 0
                   else args.prefetch_k)
     predictor = PREDICTORS[args.predictor](n_moe, cfg.moe.num_experts)
+    upgrade = {"auto": None, "on": True, "off": False}[args.upgrade_degraded]
     eng = ServeEngine(cfg, params, tables=tables, policy=policy,
                       cache=None if tier is not None else cache, tier=tier,
                       predictor=predictor, prefetch_k=prefetch_k,
-                      lookahead=args.lookahead)
+                      lookahead=args.lookahead, upgrade_degraded=upgrade,
+                      prefetch_min_saving=(None if args.prefetch_min_saving
+                                           < 0 else args.prefetch_min_saving))
 
     if args.mode == "continuous":
         _serve_continuous(args, cfg, eng, lm, prefetch_k)

@@ -29,6 +29,10 @@ class BuddyState(NamedTuple):
     quant_ok: Any = None  # [E] bool — misses the runtime routed to the
     #                       resident quant-replica tier this step (None when
     #                       no tier is attached; see runtime/tiers.py)
+    fid_cost: Any = None  # [E] f32 — stall-equivalent cost of the degraded
+    #                       outcome (runtime/costs.py; miss_policy='cost')
+    fetch_cost: Any = None  # [E] f32 — expected stall of fetching this step
+    #                         (in-flight ETA or modeled cold transfer)
 
 
 def full_residency(num_experts: int, r_max: int = 8) -> BuddyState:
@@ -93,6 +97,9 @@ class MoEAux(NamedTuple):
     #                           inactive batch rows under continuous batching)
     n_degraded: jax.Array     # [] slots served from the quant-replica tier
     deg_slots: jax.Array      # [T, K] bool — per-slot degraded mask
+    n_miss_drop: jax.Array    # [] misses the cost argmin dropped
+    drop_slots: jax.Array     # [T, K] bool — per-slot cost-drop mask
+    #                           (weights renormalized; no transfer, no stall)
 
 
 def router_topk(router_w, x_flat, top_k: int, jitter_key=None, jitter=0.0):
@@ -156,6 +163,8 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
     use_tier = (policy is not None and policy.quant_tier != "off"
                 and "quant" in params)
     quant_ok = buddy.quant_ok if (use_tier and buddy is not None) else None
+    tier_fid_cost = (buddy.fid_cost
+                     if (use_tier and buddy is not None) else None)
 
     logits, idx, topk_logits, probs = router_topk(
         params["router"], x_flat, k_n, jitter_key, cfg.router_jitter)
@@ -164,28 +173,44 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
     if policy is not None and buddy is not None:
         # substitute() owns the four-way miss split for EVERY mode,
         # including mode='none' (no rerouting, but misses still route to
-        # the degraded tier before the fetch/drop fallback)
+        # the degraded tier before the fetch/drop fallback). In cost mode
+        # the per-expert cost vectors replace the quant_ok precedence mask.
+        # tier_fid_cost (not raw buddy.fid_cost): the degraded COMPUTE path
+        # below is gated on use_tier, so the argmin's degraded option must
+        # be too — a finite fid_cost without quant params would mark slots
+        # degraded and then silently compute them at full precision
         res: SubstituteResult = substitute(
             idx, topk_logits, buddy.resident, buddy.table, buddy.q, policy,
-            router_logits=logits, hop=buddy.hop, quant_ok=quant_ok)
+            router_logits=logits, hop=buddy.hop, quant_ok=quant_ok,
+            fid_cost=tier_fid_cost, fetch_cost=buddy.fetch_cost)
         new_idx, substituted, missed = res.indices, res.substituted, res.missed
         degraded = res.degraded
+        dropped = (res.dropped if res.dropped is not None
+                   else jnp.zeros_like(missed))
     elif buddy is not None:         # no policy: raw residency miss count
         missed = ~buddy.resident[idx]
         new_idx = idx
         substituted = jnp.zeros_like(missed)
         degraded = jnp.zeros_like(missed)
+        dropped = jnp.zeros_like(missed)
     else:
         new_idx = idx
         substituted = jnp.zeros(idx.shape, bool)
         missed = jnp.zeros(idx.shape, bool)
         degraded = jnp.zeros(idx.shape, bool)
-    run_degraded = use_tier and quant_ok is not None
+        dropped = jnp.zeros(idx.shape, bool)
+    run_degraded = use_tier and (quant_ok is not None
+                                 or tier_fid_cost is not None)
 
     weights = probs
     if policy is not None and policy.fallback == "drop":
         # missed slots are skipped; renormalize over the surviving set
         weights = jnp.where(missed, 0.0, weights)
+        weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    if policy is not None and policy.miss_policy == "cost":
+        # slots the cost argmin chose to drop: skip + renormalize (per-slot
+        # counterpart of the global fallback='drop' above)
+        weights = jnp.where(dropped, 0.0, weights)
         weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
 
     # ---------------- active-expert gather (tiny-batch decode) -----------
@@ -224,7 +249,8 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
             missed.reshape(-1).astype(jnp.int32))
         aux = MoEAux(lb, new_idx, idx, probs, substituted.sum(), missed.sum(),
                      jnp.zeros((), jnp.int32), miss_per_expert,
-                     substituted, missed, degraded.sum(), degraded)
+                     substituted, missed, degraded.sum(), degraded,
+                     dropped.sum(), dropped)
         return y.reshape(orig_shape), aux
 
     # ---------------- capacity-based dispatch (row-local) ----------------
@@ -295,5 +321,6 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
 
     aux = MoEAux(lb, new_idx, idx, probs,
                  substituted.sum(), missed.sum(), n_dropped, miss_per_expert,
-                 substituted, missed, degraded.sum(), degraded)
+                 substituted, missed, degraded.sum(), degraded,
+                 dropped.sum(), dropped)
     return y.reshape(orig_shape), aux

@@ -151,6 +151,7 @@ def _zero_moe_aux(cfg: ModelConfig):
             "n_miss": jnp.zeros((), jnp.int32),
             "n_drop": jnp.zeros((), jnp.int32),
             "n_degraded": jnp.zeros((), jnp.int32),
+            "n_miss_drop": jnp.zeros((), jnp.int32),
             "miss_per_expert": jnp.zeros((e,), jnp.int32)}
 
 
@@ -159,6 +160,7 @@ def _moe_aux_dict(cfg, aux: moe_mod.MoEAux, record: bool):
          "n_miss": aux.n_missed.astype(jnp.int32),
          "n_drop": aux.n_dropped.astype(jnp.int32),
          "n_degraded": aux.n_degraded.astype(jnp.int32),
+         "n_miss_drop": aux.n_miss_drop.astype(jnp.int32),
          "miss_per_expert": aux.miss_per_expert}
     if record:
         d["indices"] = aux.orig_indices
@@ -166,6 +168,7 @@ def _moe_aux_dict(cfg, aux: moe_mod.MoEAux, record: bool):
         d["substituted"] = aux.sub_slots
         d["missed"] = aux.miss_slots
         d["degraded"] = aux.deg_slots
+        d["dropped"] = aux.drop_slots
     return d
 
 
@@ -312,13 +315,13 @@ def _run_group(kind: str, gparams, x, gcache, ctx: StepCtx, gbuddy=None,
         body, (x, ctx.rng), (gparams, gcache, gbuddy, li))
     # reduce aux over layers; keep per-layer stacks when recording
     red = {k: auxs[k].sum(0) for k in
-           ("lb", "n_sub", "n_miss", "n_drop", "n_degraded",
+           ("lb", "n_sub", "n_miss", "n_drop", "n_degraded", "n_miss_drop",
             "miss_per_expert")}
     if ctx.record:
         red["per_layer"] = {k: v for k, v in auxs.items()
                             if k in ("indices", "probs", "n_sub", "n_miss",
                                      "miss_per_expert", "substituted",
-                                     "missed", "degraded")}
+                                     "missed", "degraded", "dropped")}
     return x, new_caches, red
 
 

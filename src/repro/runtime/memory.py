@@ -68,7 +68,8 @@ class TransferLedger:
         self.overlapped_s = 0.0
 
     # -- scheduler event path -------------------------------------------
-    _CAUSE_KEY = {"prefetch": "prefetch", "demand": "sync_fetch"}
+    _CAUSE_KEY = {"prefetch": "prefetch", "demand": "sync_fetch",
+                  "upgrade": "upgrade"}
 
     def attach(self, scheduler) -> None:
         scheduler.add_listener(self.on_transfer_event)

@@ -17,6 +17,17 @@ transfer scheduler can overlap layer l+k prefetches with layer l compute.
 The default is the same-layer temporal prediction; CrossLayerPredictor
 chains its co-usage matrices ``lookahead`` hops so deeper lookahead has a
 real signal (Pre-gated/Fate-style pipelining).
+
+Probability API: ``predict_proba(layer, lookahead, context)`` returns [E]
+per-expert MARGINAL P(expert used at the target step) — each entry in
+[0, 1], NOT a distribution summing to 1 (a decode step uses many experts,
+so the marginals sum to roughly the used-set size). The scale matters:
+the serving engine multiplies by the unified miss cost (runtime/costs.py)
+to rank prefetch candidates by EXPECTED STALL SAVED, compares the product
+against an absolute seconds threshold, and counts worthwhile candidates
+for the budget controller — predictors must agree on units or the
+threshold filters them inconsistently (NoisyOraclePredictor's ``accuracy``
+is the reference: a certain-reuse expert scores ~1, not ~1/k).
 """
 from __future__ import annotations
 
@@ -27,32 +38,65 @@ import numpy as np
 
 
 class LookaheadMixin:
-    """Default lookahead: reuse the per-layer temporal prediction."""
+    """Default lookahead: reuse the per-layer temporal prediction. Default
+    probability: flat 0.5 marginal on the top-quarter prediction (any
+    predictor gets a usable — if crude — P(use) signal in marginal units;
+    concrete classes override with their real posterior)."""
 
     def predict_ahead(self, layer: int, k: int, lookahead: int = 1,
                       context=None, rng=None) -> np.ndarray:
         return self.predict(layer, k, rng=rng)
 
+    def predict_proba(self, layer: int, lookahead: int = 1,
+                      context=None) -> np.ndarray:
+        e_n = self.num_experts
+        k = max(1, e_n // 4)
+        top = np.asarray(self.predict_ahead(layer, k, lookahead=lookahead,
+                                            context=context), np.int64)
+        p = np.zeros(e_n, np.float64)
+        if len(top):
+            p[top] = 0.5
+        return p
+
 
 class TopFreqPredictor(LookaheadMixin):
     def __init__(self, num_layers: int, num_experts: int, decay: float = 0.99):
+        self.num_experts = num_experts
         self.freq = np.ones((num_layers, num_experts), np.float64)
         self.decay = decay
+        # EWMA of the per-step used-set size: converts the frequency SHARE
+        # into a per-expert marginal (share x experts-per-step), keeping
+        # predict_proba on the same [0, 1]-marginal scale as the oracle
+        self._avg_used = 1.0
 
     def clone_fresh(self) -> "TopFreqPredictor":
         """Same configuration, no learned state (benchmark-run resets)."""
         return TopFreqPredictor(*self.freq.shape, decay=self.decay)
 
     def observe(self, layer: int, experts) -> None:
+        experts = np.asarray(experts, np.int64).reshape(-1)
         self.freq[layer] *= self.decay
-        np.add.at(self.freq[layer], np.asarray(experts, np.int64).reshape(-1), 1.0)
+        np.add.at(self.freq[layer], experts, 1.0)
+        self._avg_used = 0.9 * self._avg_used + 0.1 * len(np.unique(experts))
 
     def predict(self, layer: int, k: int, rng=None) -> np.ndarray:
         return np.argsort(-self.freq[layer])[:k]
 
+    def predict_proba(self, layer: int, lookahead: int = 1,
+                      context=None) -> np.ndarray:
+        f = self.freq[layer]
+        share = f / max(f.sum(), 1e-30)
+        return np.clip(share * self._avg_used, 0.0, 1.0)
+
 
 class PrevStepPredictor(LookaheadMixin):
+    """Temporal-locality blend: most of the mass on last step's experts,
+    the rest on the decayed frequency prior."""
+
+    PREV_WEIGHT = 0.7
+
     def __init__(self, num_layers: int, num_experts: int):
+        self.num_experts = num_experts
         self.prev = [np.array([], np.int64) for _ in range(num_layers)]
         self.freq = TopFreqPredictor(num_layers, num_experts)
 
@@ -70,11 +114,26 @@ class PrevStepPredictor(LookaheadMixin):
             p = np.concatenate([p, np.asarray(rest[:k - len(p)], np.int64)])
         return p
 
+    def predict_proba(self, layer: int, lookahead: int = 1,
+                      context=None) -> np.ndarray:
+        """Marginal blend: an expert seen last step has ~PREV_WEIGHT chance
+        of immediate reuse (temporal locality, NOT divided across the set —
+        each prev expert independently carries the marginal); everything
+        else falls back to the frequency marginal."""
+        p = np.zeros(self.num_experts, np.float64)
+        prev = self.prev[layer]
+        w = self.PREV_WEIGHT if len(prev) else 0.0
+        if len(prev):
+            p[prev] = w
+        return np.clip(p + (1.0 - w) * self.freq.predict_proba(layer),
+                       0.0, 1.0)
+
 
 class CrossLayerPredictor(LookaheadMixin):
     """P(expert j at layer l | expert i at layer l-1), profiled offline."""
 
     def __init__(self, num_layers: int, num_experts: int, eps: float = 1e-3):
+        self.num_experts = num_experts
         self.eps = eps
         self.C = np.full((num_layers, num_experts, num_experts), eps, np.float64)
         self.prev_set: Optional[np.ndarray] = None
@@ -106,19 +165,37 @@ class CrossLayerPredictor(LookaheadMixin):
         ``layer - lookahead`` computes with experts ``context``, score layer
         ``layer``'s experts by propagating the activation indicator through
         C[layer-lookahead+1] .. C[layer] (row-normalised)."""
-        if context is None or len(np.atleast_1d(context)) == 0 or lookahead < 1:
+        s = self._chained_scores(layer, lookahead, context)
+        if s is None:
             return self.predict(layer, k)
-        src = layer - lookahead
-        if src < 0:
-            return self.freq.predict(layer, k)
+        return np.argsort(-s)[:k]
+
+    def _chained_scores(self, layer: int, lookahead: int,
+                        context) -> Optional[np.ndarray]:
+        """Indicator-propagation scores, or None when there is no usable
+        context / the chain would start before layer 0 (callers fall back
+        to the frequency prior)."""
+        if context is None or len(np.atleast_1d(context)) == 0 \
+                or lookahead < 1 or layer - lookahead < 0:
+            return None
         e_n = self.C.shape[1]
         s = np.zeros(e_n, np.float64)
         s[np.unique(np.asarray(context, np.int64).reshape(-1))] = 1.0
-        for m in range(src + 1, layer + 1):
+        for m in range(layer - lookahead + 1, layer + 1):
             cm = self.C[m]
             cm = cm / np.maximum(cm.sum(axis=1, keepdims=True), 1e-30)
             s = s @ cm
-        return np.argsort(-s)[:k]
+        return s
+
+    def predict_proba(self, layer: int, lookahead: int = 1,
+                      context=None) -> np.ndarray:
+        # the propagated indicator is already marginal-like: entry j sums
+        # P(j | i) over active sources i, so clip rather than renormalize
+        # (renormalizing would shrink every marginal by the used-set size)
+        s = self._chained_scores(layer, lookahead, context)
+        if s is None:
+            return self.freq.predict_proba(layer)
+        return np.clip(s, 0.0, 1.0)
 
 
 @dataclasses.dataclass
@@ -152,6 +229,12 @@ class AdaptiveBudgetController:
     Queue depth sets the ceiling: an empty queue halves the allowed k (the
     speculative bytes would evict still-useful experts for no latency win);
     a deep queue restores the full configured range.
+
+    When the engine ranks prefetches by expected stall saved (the cost
+    model's P(use) x miss-cost scores), it reports how many candidates were
+    actually WORTHWHILE (positive expected saving); the budget is capped at
+    that count so k never pays for transfers whose misses a buddy or
+    replica would absorb for free anyway.
     """
 
     def __init__(self, prefetch_k: int, lookahead: int = 1, *,
@@ -175,14 +258,18 @@ class AdaptiveBudgetController:
         self.trace: list = []
 
     # -- observation ----------------------------------------------------
-    def observe_step(self, stall_breakdown: dict, queue_depth: int):
-        """Call once per engine step. Returns the (possibly updated) budget."""
+    def observe_step(self, stall_breakdown: dict, queue_depth: int,
+                     worthwhile: Optional[int] = None):
+        """Call once per engine step. Returns the (possibly updated) budget.
+        ``worthwhile``: number of prefetch candidates with positive expected
+        stall saved at the last issue (cost-ranked prefetch only)."""
         self._steps += 1
         if self._steps % self.window == 0:
-            self.update(stall_breakdown, queue_depth)
+            self.update(stall_breakdown, queue_depth, worthwhile=worthwhile)
         return self.budget
 
-    def update(self, stall_breakdown: dict, queue_depth: int) -> PrefetchBudget:
+    def update(self, stall_breakdown: dict, queue_depth: int,
+               worthwhile: Optional[int] = None) -> PrefetchBudget:
         """Apply one feedback adjustment from cumulative stall attribution
         (deltas are taken against the previous update)."""
         d_demand = stall_breakdown["demand_stall_s"] - \
@@ -203,13 +290,18 @@ class AdaptiveBudgetController:
             # shallow (prediction accuracy decays with depth)
             la = max(self.min_lookahead, la - 1)
         k = min(k, self._queue_cap(queue_depth))
+        if worthwhile is not None:
+            # expected-stall-saved ranking found only this many candidates
+            # worth the bytes — spending k beyond it buys nothing
+            k = min(k, max(self.min_k, int(worthwhile)))
         b.prefetch_k, b.lookahead = k, la
         b.max_inflight = max(1, min(self.max_inflight_cap, k))
         self.trace.append({"step": self._steps, "prefetch_k": k,
                            "lookahead": la,
                            "demand_delta_s": d_demand,
                            "late_delta_s": d_late,
-                           "queue_depth": queue_depth})
+                           "queue_depth": queue_depth,
+                           "worthwhile": worthwhile})
         return b
 
     def _queue_cap(self, queue_depth: int) -> int:
@@ -248,6 +340,17 @@ class NoisyOraclePredictor(LookaheadMixin):
 
     def observe(self, layer: int, experts) -> None:
         self.set_truth(layer, experts)
+
+    def predict_proba(self, layer: int, lookahead: int = 1,
+                      context=None) -> np.ndarray:
+        """Each truth expert survives with P = accuracy; the corruption mass
+        is spread uniformly (the predictor's actual noise model)."""
+        p = np.full(self.num_experts, 0.0, np.float64)
+        t = self.truth[layer]
+        if len(t):
+            p[t] = self.accuracy
+            p += (1.0 - self.accuracy) * len(t) / self.num_experts
+        return p
 
     def predict(self, layer: int, k: int, rng=None) -> np.ndarray:
         rng = rng or self.rng

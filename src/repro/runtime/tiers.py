@@ -25,9 +25,19 @@ waited for (tail < threshold); a cold miss degrades.
 
 Budget semantics: at EQUAL total HBM budget (``cache_rate`` x E full-precision
 experts per layer), the quant tier displaces full cache slots —
-slots = floor((budget - E * replica_bytes) / expert_bytes). When the tier
-alone exceeds the budget (int8 at cache_rate 0.5 with scale overhead), one
-mandatory full slot is kept and the split is reported as clamped.
+slots = floor((budget - n_covered * replica_bytes) / expert_bytes). When the
+tier alone exceeds the budget (int8 at cache_rate 0.5 with scale overhead),
+one mandatory full slot is kept and the split is reported as clamped.
+
+Partial coverage (``coverage`` < 1.0): replicate only the top-P(use)
+``ceil(coverage * E)`` experts per layer and spend the freed bytes on full
+cache slots — the knee of the accuracy-vs-stall frontier sits where the
+replicas cover the hot tail that the cache misses, not the cold experts the
+router never picks. Which experts are covered defaults to the lowest ids
+(deterministic) until ``set_coverage`` re-picks the top experts per layer
+from activity statistics (profiling recorder counts or predictor
+frequencies). Uncovered experts report infinite fidelity — the cost model
+(runtime/costs.py) and the precedence quant_ok mask both then exclude them.
 """
 from __future__ import annotations
 
@@ -45,26 +55,38 @@ class TieredExpertStore:
     def __init__(self, num_layers: int, num_experts: int, cache_rate: float,
                  *, bits: int = 8, d_model: int, d_ff: int,
                  dtype_bytes: int = 2, stall_per_fidelity: float = 0.05,
+                 coverage: float = 1.0,
                  policy: str = "lru", num_partitions: int = 1, seed: int = 0,
                  buddy_table: Optional[np.ndarray] = None,
                  buddy_candidates: int = 4):
         assert bits in (4, 8)
+        assert 0.0 < coverage <= 1.0, "coverage: fraction of experts " \
+            "replicated per layer (top-P(use) once set_coverage is called)"
         self.num_layers = num_layers
         self.num_experts = num_experts
         self.bits = bits
         self.stall_per_fidelity = float(stall_per_fidelity)
+        self.coverage = float(coverage)
+        self.n_covered = max(1, min(num_experts,
+                                    int(np.ceil(coverage * num_experts))))
         self.full_bytes = expert_nbytes(d_model, d_ff, dtype_bytes)
         self.replica_bytes = quant_expert_nbytes(d_model, d_ff, bits)
 
         # -- budget split (per layer, equal total HBM budget) ------------
+        # partial coverage replicates only n_covered experts; the freed
+        # replica bytes become additional full-precision cache slots
         budget = cache_rate * num_experts * self.full_bytes
-        slots = int((budget - num_experts * self.replica_bytes)
+        slots = int((budget - self.n_covered * self.replica_bytes)
                     // self.full_bytes)
         self.clamped = slots < 1
         slots = max(1, min(num_experts, slots))
         self.cache_slots = slots
         self.budget_bytes = int(round(budget))
-        self.quant_bytes = num_layers * num_experts * self.replica_bytes
+        self.quant_bytes = num_layers * self.n_covered * self.replica_bytes
+        # which experts hold a replica: lowest ids until set_coverage picks
+        # the top-activity set per layer (budget depends only on the COUNT)
+        self.covered = np.zeros((num_layers, num_experts), bool)
+        self.covered[:, :self.n_covered] = True
 
         self.cache = ExpertCache(num_layers, num_experts,
                                  slots / num_experts, policy=policy,
@@ -83,6 +105,27 @@ class TieredExpertStore:
             f"fidelity shape {fidelity.shape} != (L, E)"
         self.fidelity = fidelity
 
+    def set_coverage(self, activity: np.ndarray) -> None:
+        """Re-pick the covered set: the top-``n_covered`` experts per layer
+        by ``activity`` [L, E] (P(use) proxy — profiling counts, predictor
+        frequencies). The budget split is unchanged (it depends only on the
+        count); only WHICH experts may serve degraded moves."""
+        activity = np.asarray(activity, np.float64)
+        assert activity.shape == (self.num_layers, self.num_experts)
+        self.covered[:] = False
+        top = np.argsort(-activity, axis=1)[:, :self.n_covered]
+        np.put_along_axis(self.covered, top, True, axis=1)
+
+    def effective_fidelity(self, layer: Optional[int] = None) -> np.ndarray:
+        """Fidelity with uncovered experts masked to inf — the form the
+        cost model consumes (inf = no usable replica). [L, E], or one
+        layer's [E] row when ``layer`` is given (the per-layer prefetch
+        ranking must not rebuild the full matrix each call). This method is
+        the single owner of the uncovered-masking rule."""
+        if layer is None:
+            return np.where(self.covered, self.fidelity, np.inf)
+        return np.where(self.covered[layer], self.fidelity[layer], np.inf)
+
     # -- the degrade-vs-wait decision -----------------------------------
     def degraded_ok(self, resident: np.ndarray,
                     eta_s: np.ndarray) -> np.ndarray:
@@ -96,8 +139,8 @@ class TieredExpertStore:
         resident = np.asarray(resident, bool)
         eta_s = np.asarray(eta_s, np.float64)
         assert eta_s.shape == resident.shape == self.fidelity.shape
-        worth = np.isfinite(self.fidelity) & \
-            (eta_s >= self.fidelity * self.stall_per_fidelity)
+        fid = self.effective_fidelity()
+        worth = np.isfinite(fid) & (eta_s >= fid * self.stall_per_fidelity)
         return ~resident & worth
 
     # -- accounting ------------------------------------------------------
@@ -110,13 +153,15 @@ class TieredExpertStore:
     def budget_split(self) -> dict:
         """Where the per-layer HBM expert budget went."""
         cache_bytes = self.cache_slots * self.full_bytes
-        tier_bytes = self.num_experts * self.replica_bytes
+        tier_bytes = self.n_covered * self.replica_bytes
         return {
             "budget_bytes_per_layer": self.budget_bytes,
             "quant_bytes_per_layer": tier_bytes,
             "cache_bytes_per_layer": cache_bytes,
             "cache_slots_per_layer": self.cache_slots,
             "quant_frac": tier_bytes / max(1, self.budget_bytes),
+            "coverage": self.coverage,
+            "covered_per_layer": self.n_covered,
             "clamped": bool(self.clamped),
         }
 

@@ -111,8 +111,11 @@ class TransferScheduler:
                priority: Optional[int] = None) -> Transfer:
         """Queue a transfer at the current clock. Duplicate (layer, expert)
         submissions return the in-flight transfer (escalated if the new
-        request is more urgent)."""
-        assert cause in ("prefetch", "demand")
+        request is more urgent). ``cause`` 'upgrade' is the degraded-then-
+        upgrade background fetch (runtime/costs.py): speculative priority —
+        it shares the prefetch class and cap — but exempt from stale-
+        prediction cancellation, and its bytes are ledgered separately."""
+        assert cause in ("prefetch", "demand", "upgrade")
         existing = self.in_flight(layer, expert)
         if existing is not None:
             if cause == "demand" and existing.priority > PRIO_DEMAND:

@@ -36,6 +36,7 @@ from repro.core.policy import BuddyPolicy
 from repro.models import transformer
 from repro.models.moe import BuddyState
 from repro.runtime.cache import ExpertCache
+from repro.runtime.costs import MissCostModel, best_resident_q
 from repro.runtime.memory import (DEFAULT_HW, HardwareModel, TransferLedger,
                                   expert_nbytes)
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
@@ -55,6 +56,8 @@ class EngineStats:
     n_late_prefetch: int = 0
     n_prefetch_issued: int = 0
     n_prefetch_cancelled: int = 0
+    n_miss_drop: int = 0        # misses the cost argmin dropped (renorm)
+    n_upgrade_issued: int = 0   # degraded-then-upgrade background fetches
 
     @property
     def tokens_per_s(self) -> float:
@@ -73,7 +76,9 @@ class ServeEngine:
                  window: int = -1,
                  seed: int = 0,
                  latency_cfg: Optional[ModelConfig] = None,
-                 tier: Optional[TieredExpertStore] = None):
+                 tier: Optional[TieredExpertStore] = None,
+                 upgrade_degraded: Optional[bool] = None,
+                 prefetch_min_saving: Optional[float] = None):
         """latency_cfg: full-scale config whose expert sizes / active params
         drive the transfer + compute latency model (the accuracy testbed can
         be a reduced model while latencies reflect the deployment target —
@@ -84,7 +89,25 @@ class ServeEngine:
         replicas ride the params pytree as a ``quant`` sub-dict), calibrates
         the per-expert fidelity scores, and uses the tier's displaced-budget
         cache. ``policy.quant_tier`` must name the same precision (it is the
-        static jit switch for the mixed-precision dispatch)."""
+        static jit switch for the mixed-precision dispatch).
+
+        upgrade_degraded: degraded-then-upgrade — every slot served from the
+        quant tier enqueues a background 'upgrade' transfer of the TRUE
+        expert (prefetch priority, exempt from stale-prediction cancels), so
+        later steps compute it at full precision once it lands. None (auto)
+        enables it exactly when the unified cost policy is on
+        (policy.miss_policy='cost') and a tier is attached; precedence-mode
+        engines keep the pre-upgrade behavior bit-identical.
+
+        prefetch_min_saving: with cost-ranked prefetch (miss_policy='cost' +
+        a predict_proba predictor), candidates whose expected stall saved —
+        P(use) x unified miss cost — is <= this many seconds are not worth
+        their PCIe bytes and are skipped; the count of worthwhile candidates
+        feeds (and can cap) the adaptive budget controller. None (auto): 1%
+        of a full expert transfer — a prefetch occupies the link for
+        ~transfer_time, so a saving far below that cannot pay for its own
+        bytes (misses a good buddy or replica absorbs score ~stall_per_
+        quality x their tiny quality loss and fall under this bar)."""
         assert cfg.is_moe, "ServeEngine's expert cache applies to MoE archs"
         assert lookahead >= 1, "lookahead: layers ahead to prefetch (>= 1)"
         self.cfg = cfg
@@ -126,6 +149,19 @@ class ServeEngine:
         self._active_params = ref_cfg.active_param_count()
         self._key = jax.random.PRNGKey(seed)
         self._last_used: dict = {}
+        self._cost_mode = policy.miss_policy == "cost"
+        self.costs = MissCostModel(
+            self.num_moe_layers, e, expert_bytes=self._expert_bytes, hw=hw,
+            stall_per_quality=policy.stall_per_quality,
+            drop_loss=policy.drop_loss)
+        self.upgrade_degraded = (self._cost_mode and tier is not None
+                                 if upgrade_degraded is None
+                                 else bool(upgrade_degraded))
+        if prefetch_min_saving is None:
+            prefetch_min_saving = 0.01 * hw.transfer_time(self._expert_bytes)
+        self.prefetch_min_saving = float(prefetch_min_saving)
+        self.last_prefetch_worthwhile: Optional[int] = None
+        self._step_worthwhile: Optional[int] = None
 
         if tables is None:
             r = 8
@@ -154,26 +190,35 @@ class ServeEngine:
         """[L, E] expected stall of fetching each expert on a miss THIS step:
         a cold miss pays the full modeled transfer; an in-flight prefetch
         only its optimistic remaining tail (TransferScheduler.eta_s)."""
-        eta = np.full((self.num_moe_layers, self.cfg.moe.num_experts),
-                      self.hw.transfer_time(self._expert_bytes))
-        for t in self.scheduler.pending():
-            if t.layer < self.num_moe_layers:
-                eta[t.layer, t.expert] = self.scheduler.eta_s(t)
-        return eta
+        return self.costs.fetch_eta(self.scheduler)
+
+    def _tier_fidelity(self) -> Optional[np.ndarray]:
+        """[L, E] calibrated replica error with uncovered experts at inf,
+        or None when no tier is attached."""
+        return None if self.tier is None else self.tier.effective_fidelity()
 
     def _buddy_state(self) -> BuddyState:
         res = self.cache.residency_mask()
         hop = np.stack([self.cache.hop_vector(l)
                         for l in range(self.num_moe_layers)])
-        quant_ok = None
-        if self.tier is not None:
+        quant_ok = fid_cost = fetch_cost = None
+        if self._cost_mode:
+            # unified cost mode: the in-graph argmin consumes per-expert
+            # stall-equivalent costs instead of the precedence quant_ok mask
+            eta = self._miss_eta()
+            fid_cost = jnp.asarray(self.costs.degraded_cost(
+                self._tier_fidelity(), shape=eta.shape), jnp.float32)
+            fetch_cost = jnp.asarray(eta, jnp.float32)
+        elif self.tier is not None:
             quant_ok = jnp.asarray(
                 self.tier.degraded_ok(res, self._miss_eta()))
         return BuddyState(resident=jnp.asarray(res),
                           table=jnp.asarray(self._table),
                           q=jnp.asarray(self._q),
                           hop=jnp.asarray(hop),
-                          quant_ok=quant_ok)
+                          quant_ok=quant_ok,
+                          fid_cost=fid_cost,
+                          fetch_cost=fetch_cost)
 
     def init_caches(self, batch: int, seq_len: int):
         return transformer.init_caches(
@@ -259,6 +304,7 @@ class ServeEngine:
         n_active = int(active.sum())
         if n_active == 0:
             return
+        self._step_worthwhile = None    # fresh per-step aggregate
         sched = self.scheduler
         step_t0 = sched.now
         busy0 = sched.busy_s
@@ -276,6 +322,8 @@ class ServeEngine:
             miss_sl = np.asarray(rec["missed"])               # [L, T, K]
             deg_sl = (np.asarray(rec["degraded"])             # [L, T, K]
                       if "degraded" in rec else None)
+            drop_sl = (np.asarray(rec["dropped"])             # [L, T, K]
+                       if "dropped" in rec else None)
             for li in range(idx.shape[0]):
                 layer = layer_off + li
                 # transfers in flight overlap all earlier layers' compute
@@ -298,6 +346,16 @@ class ServeEngine:
                         self.ledger.degraded(n_deg)
                         if self.tier is not None:
                             self.tier.note_degraded(n_deg)
+                        if self.upgrade_degraded:
+                            self._upgrade_degraded(
+                                layer, rows[deg_sl[li][active]])
+                if drop_sl is not None:
+                    # misses the cost argmin dropped: renormalized in-graph,
+                    # no transfer, no stall — event accounting only
+                    n_dr = int(drop_sl[li][active].sum())
+                    if n_dr:
+                        self.ledger.drop(n_dr)
+                        self.stats.n_miss_drop += n_dr
                 miss_row = np.bincount(rows[miss_sl[li][active]],
                                        minlength=e_n)
                 cursor, stall = self._resolve_misses(layer, miss_row,
@@ -347,8 +405,16 @@ class ServeEngine:
             t = sched.in_flight(layer, e)
             if t is not None:
                 sched.escalate(t)
-                kind = "late_prefetch"
-                self.stats.n_late_prefetch += 1
+                if t.cause == "upgrade":
+                    # an upgrade is not a prediction: waiting on one is a
+                    # demand-class stall (the cost model priced it at the
+                    # COLD transfer; the in-flight bytes are just reused) —
+                    # booking it as late-prefetch would feed a false
+                    # lateness signal to the adaptive budget controller
+                    kind = "demand"
+                else:
+                    kind = "late_prefetch"
+                    self.stats.n_late_prefetch += 1
             else:
                 t = sched.submit(layer, e, self._expert_bytes, "demand")
                 kind = "demand"
@@ -360,16 +426,89 @@ class ServeEngine:
             self.stats.n_miss_fetch += 1
         return cursor, stall
 
+    def _upgrade_degraded(self, layer: int, experts: np.ndarray) -> None:
+        """Degraded-then-upgrade: background-fetch the TRUE experts that the
+        quant tier just served, so later steps compute them at full
+        precision. 'upgrade' cause: prefetch priority (never preempts a
+        stalled layer), exempt from stale-prediction cancellation, bytes
+        ledgered separately. The residency snapshot for THIS step was taken
+        before the upgrade lands, so already-computed tokens keep their
+        degraded outputs and accounting — an upgrade only changes future
+        steps. Duplicate submissions return the in-flight transfer, so an
+        expert degraded on many tokens/steps pays its bytes once."""
+        for e_up in np.unique(np.asarray(experts, np.int64)):
+            e_up = int(e_up)
+            if self.cache.resident[layer, e_up] or \
+                    self.scheduler.in_flight(layer, e_up) is not None:
+                continue
+            self.scheduler.submit(layer, e_up, self._expert_bytes, "upgrade")
+            self.stats.n_upgrade_issued += 1
+
+    def _rank_prefetch(self, tgt: int, used: np.ndarray):
+        """Expected-stall-saved prefetch ranking (runtime/costs.py):
+        score[e] = P(use e at the target layer) x the unified miss cost the
+        runtime would pay without it (lateness risk on the current
+        timeline).
+
+        Returns (want, worthwhile). ``want`` is the keep/submit list (best
+        first, positive-saving only, capped at prefetch_k): it INCLUDES
+        still-attractive in-flight experts, because the caller also feeds
+        it to cancel_stale_prefetches — dropping them would cancel our own
+        unfinished prefetches every step and ping-pong issue/cancel (the
+        submit loop skips resident/in-flight entries anyway). ``worthwhile``
+        counts candidates whose saving justifies NEW bytes (in-flight ones
+        are already paid for) — the adaptive budget controller's cap."""
+        p_use = np.asarray(self.predictor.predict_proba(
+            tgt, lookahead=self.lookahead, context=used), np.float64)
+        # rank at the COLD fetch cost: the ranking asks "is this expert
+        # worth having in flight at all", so an already-running transfer
+        # must not discount its own score (the in-flight ETA would sink it
+        # below fresh candidates and rotate it out of the keep-set — the
+        # same ping-pong as zeroing it). The in-flight discount belongs to
+        # the wait-vs-degrade argmin (_buddy_state), not here.
+        eta = np.full(self.cfg.moe.num_experts,
+                      self.hw.transfer_time(self._expert_bytes))
+        fid_row = (None if self.tier is None
+                   else self.tier.effective_fidelity(tgt))
+        # mode 'none' never reroutes: the in-graph argmin prices buddies at
+        # inf there, and the ranking must agree or it understates the stall
+        # a miss will actually pay
+        best_q = (None if self.policy.mode == "none" else
+                  best_resident_q(self._table[tgt], self._q[tgt],
+                                  self.cache.resident[tgt]))
+        risk = self.costs.miss_cost(eta, fid_row, best_q)
+        score = self.costs.prefetch_scores(p_use, risk,
+                                           self.cache.resident[tgt])
+        new_score = np.where(self.cache.inflight[tgt], 0.0, score)
+        worthwhile = int((new_score > self.prefetch_min_saving).sum())
+        order = np.argsort(-score, kind="stable")
+        want = [int(e) for e in order[:self.prefetch_k]
+                if score[e] > self.prefetch_min_saving]
+        return want, worthwhile
+
     def _issue_prefetches(self, layer: int, used: np.ndarray) -> None:
         """While ``layer`` computes, line up transfers for layer
         ``layer + lookahead`` (wrapping into the next step). Predictions
-        that changed since the last issue are cancelled if still unserved."""
+        that changed since the last issue are cancelled if still unserved.
+        Under the unified cost policy (and a predict_proba predictor) the
+        candidates are ranked by expected stall saved instead of the
+        predictor's raw top-k."""
         if self.predictor is None or self.prefetch_k <= 0:
             return
         tgt = (layer + self.lookahead) % self.num_moe_layers
-        want = self.predictor.predict_ahead(
-            tgt, self.prefetch_k, lookahead=self.lookahead, context=used)
-        want = [int(e) for e in np.atleast_1d(want)]
+        if self._cost_mode and hasattr(self.predictor, "predict_proba"):
+            want, w = self._rank_prefetch(tgt, used)
+            # the controller clamps the GLOBAL budget from this signal, so
+            # report the step's MAX across target layers — a point sample
+            # from one fully-resident layer would starve every other layer
+            # for a whole controller window
+            self._step_worthwhile = (w if self._step_worthwhile is None
+                                     else max(self._step_worthwhile, w))
+            self.last_prefetch_worthwhile = self._step_worthwhile
+        else:
+            want = self.predictor.predict_ahead(
+                tgt, self.prefetch_k, lookahead=self.lookahead, context=used)
+            want = [int(e) for e in np.atleast_1d(want)]
         self.stats.n_prefetch_cancelled += \
             self.scheduler.cancel_stale_prefetches(tgt, want)
         for e in want:
@@ -415,6 +554,8 @@ class ServeEngine:
             self.ledger.tier_upload(self.tier.quant_bytes)
         self.stats = EngineStats()
         self._last_used = {}
+        self.last_prefetch_worthwhile = None
+        self._step_worthwhile = None
 
     def reset_rows(self, caches, rows):
         """Zero the decode caches of ``rows`` (batch indices) so a freed slot
@@ -504,4 +645,15 @@ class ServeEngine:
             # only present with a tier attached: with quant_tier off the
             # summary stays bit-identical to the pre-tier engine
             s["tier"] = self.tier.summary()
+        if self._cost_mode:
+            # only present under the unified cost policy: precedence-mode
+            # summaries stay bit-identical to the pre-cost engine
+            s["cost_policy"] = {
+                "stall_per_quality": self.policy.stall_per_quality,
+                "drop_loss": self.policy.drop_loss,
+                "n_miss_drop": self.stats.n_miss_drop,
+                "n_upgrade_issued": self.stats.n_upgrade_issued,
+                "upgrade_degraded": self.upgrade_degraded,
+                "prefetch_worthwhile_last": self.last_prefetch_worthwhile,
+            }
         return s

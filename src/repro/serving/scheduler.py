@@ -440,11 +440,15 @@ class ContinuousScheduler:
             slot[i] = None
 
     def _feedback(self, queue: RequestQueue) -> None:
-        """Resize the prefetch budget from stall attribution + queue depth."""
+        """Resize the prefetch budget from stall attribution + queue depth
+        (and, with cost-ranked prefetch, the count of candidates whose
+        expected stall saved was worth the bytes)."""
         if self.controller is not None:
             self.controller.observe_step(
                 self.engine.stall_breakdown(),
-                queue.depth(self.engine.scheduler.now))
+                queue.depth(self.engine.scheduler.now),
+                worthwhile=getattr(self.engine,
+                                   "last_prefetch_worthwhile", None))
             self.controller.apply(self.engine)
 
     def run(self, queue: RequestQueue,

@@ -1,0 +1,100 @@
+"""Benchmark-regression gate (benchmarks/check_regression.py): metric
+extraction from serving.json, the >15% fail rule with absolute floors, and
+the injected-regression self-test."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import (FLOORS, compare,  # noqa: E402
+                                         extract_metrics, inject_regression)
+
+
+def _results():
+    """Minimal bench_serving-shaped results dict."""
+    arm = {"token_latency_s": {"p99": 2e-3}, "goodput_rps": 100.0}
+    return {
+        "seed": 0,
+        "c0.5_load1.0": {
+            "arrival_rate_rps": 1.0,
+            "continuous": dict(arm),
+            "tiered": {"summary": {"token_latency_s": {"p99": 1e-3}},
+                       "nll": {"tier": 1.25, "full_residency": 1.0}},
+            "cost_policy": {
+                "cost": {"token_latency_s": {"p99": 1e-3},
+                         "goodput_rps": 110.0},
+                "nll": {"cost": 1.1, "full_residency": 1.0}},
+        },
+    }
+
+
+def test_extract_metrics_shapes():
+    m = extract_metrics(_results())
+    assert m["c0.5_load1.0.p99_token_latency_ms.continuous"] == \
+        pytest.approx(2.0)
+    assert m["c0.5_load1.0.goodput_rps.continuous"] == 100.0
+    assert m["c0.5_load1.0.nll_absdelta.tier"] == pytest.approx(0.25)
+    assert m["c0.5_load1.0.nll_absdelta.cost_policy"] == pytest.approx(0.1)
+    assert m["c0.5_load1.0.goodput_rps.cost_policy"] == 110.0
+    assert len(m) == 7
+
+
+def test_identical_metrics_pass():
+    m = extract_metrics(_results())
+    rows, bad = compare(m, dict(m))
+    assert not bad
+    assert all(r[4] == "ok" for r in rows)
+
+
+def test_injected_regression_fails():
+    m = extract_metrics(_results())
+    rows, bad = compare(m, inject_regression(m, 1.3))
+    assert bad
+    assert any(r[4] == "REGRESSION" for r in rows)
+    # every metric family trips: latency/nll up, goodput down
+    tripped = {r[0] for r in rows if r[4] == "REGRESSION"}
+    assert any("goodput" in t for t in tripped)
+    assert any("latency" in t for t in tripped)
+
+
+def test_small_regression_passes_and_direction_matters():
+    m = extract_metrics(_results())
+    cur = dict(m)
+    lat = "c0.5_load1.0.p99_token_latency_ms.continuous"
+    good = "c0.5_load1.0.goodput_rps.continuous"
+    cur[lat] = m[lat] * 1.10           # +10% < 15% threshold
+    cur[good] = m[good] * 1.30         # goodput UP is an improvement
+    rows, bad = compare(m, cur)
+    assert not bad
+    assert dict((r[0], r[4]) for r in rows)[good] == "improved"
+    # a >15% goodput DROP is a regression
+    cur[good] = m[good] * 0.5
+    _, bad2 = compare(m, cur)
+    assert bad2
+
+
+def test_absolute_floor_masks_noise():
+    """Relative blowups below the absolute floor are noise, not failures —
+    an NLL delta of 1e-4 doubling is not a quality regression."""
+    base = {"k.nll_absdelta.tier": 1e-4}
+    cur = {"k.nll_absdelta.tier": 3e-4}        # 3x, but abs change << floor
+    assert FLOORS["nll_absdelta"] > 2e-4
+    rows, bad = compare(base, cur)
+    assert not bad and rows[0][4] == "ok"
+
+
+def test_missing_metric_fails():
+    m = extract_metrics(_results())
+    cur = dict(m)
+    cur.pop("c0.5_load1.0.nll_absdelta.cost_policy")
+    rows, bad = compare(m, cur)
+    assert bad
+    assert any(r[4] == "MISSING" for r in rows)
+    # a NEW metric in the current run is reported but does not fail
+    cur2 = dict(m)
+    cur2["k.p99_token_latency_ms.new_arm"] = 1.0
+    rows2, bad2 = compare(m, cur2)
+    assert not bad2
+    assert any(r[4] == "new" for r in rows2)

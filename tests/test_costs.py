@@ -1,0 +1,419 @@
+"""Unified expected-cost miss policy (runtime/costs.py): the four-outcome
+argmin, its cost-model edges, P(use) x lateness-risk prefetch ranking, and
+degraded-then-upgrade accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.core.substitute import substitute
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.costs import (BUDDY, DEGRADED, DROP, FETCH, MissCostModel,
+                                 best_resident_q)
+from repro.runtime.memory import DEFAULT_HW
+from repro.runtime.prefetch import (AdaptiveBudgetController,
+                                    CrossLayerPredictor, NoisyOraclePredictor,
+                                    PrevStepPredictor, TopFreqPredictor)
+from repro.runtime.tiers import TieredExpertStore
+from repro.runtime.transfers import TransferScheduler
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    e = cfg.moe.num_experts
+    rng = np.random.default_rng(0)
+    q = rng.random((cfg.num_layers, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    return cfg, params, lm, tables
+
+
+def _tier(cfg, rate=0.5, **kw):
+    return TieredExpertStore(cfg.num_layers, cfg.moe.num_experts, rate,
+                             bits=8, d_model=cfg.d_model, d_ff=cfg.moe.d_ff,
+                             **kw)
+
+
+def _cost_engine(cfg, params, tables, *, mode="buddy", prefetch_k=0,
+                 predictor=None, upgrade=None, tier_kw=None, seed=0):
+    return ServeEngine(
+        cfg, params, tables=tables,
+        policy=BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8, mode=mode,
+                           quant_tier="int8", miss_policy="cost"),
+        tier=_tier(cfg, seed=seed, **(tier_kw or {})), predictor=predictor,
+        prefetch_k=prefetch_k, seed=seed, upgrade_degraded=upgrade)
+
+
+# ---------------------------------------------------------------------------
+# the unified argmin (in-graph + host mirror)
+# ---------------------------------------------------------------------------
+def test_high_q_buddy_beats_low_fidelity_replica_and_vice_versa():
+    """The tentpole semantics: the SAME policy picks buddy or degraded per
+    slot depending on which quality loss is smaller — no fixed precedence."""
+    idx = jnp.asarray([[1], [3]], jnp.int32)
+    logits = jnp.zeros((2, 1), jnp.float32)
+    resident = jnp.asarray([True, False, True, False])
+    table = jnp.asarray([[-1], [0], [-1], [2]], jnp.int32)
+    q = jnp.asarray([[0.0], [0.99], [0.0], [0.2]], jnp.float32)
+    pol = BuddyPolicy(tau=-1.0, beta=1.1, rho=2, H=1, quant_tier="int8",
+                      miss_policy="cost", stall_per_quality=0.05)
+    fid_cost = jnp.full((4,), 0.05 * 0.1, jnp.float32)   # replica err 0.1
+    fetch_cost = jnp.full((4,), 0.01, jnp.float32)
+    res = substitute(idx, logits, resident, table, q, pol,
+                     fid_cost=fid_cost, fetch_cost=fetch_cost)
+    # expert 1: buddy loss 1-0.99=0.01 < 0.1 -> buddy (replica loses)
+    assert bool(res.substituted[0, 0]) and int(res.indices[0, 0]) == 0
+    # expert 3: buddy loss 1-0.2=0.8 > 0.1 -> degraded (buddy loses)
+    assert bool(res.degraded[1, 0]) and not bool(res.substituted[1, 0])
+    assert not np.asarray(res.missed).any()
+
+
+def test_zero_usefulness_replica_never_chosen_over_fetch():
+    """A replica with unusable fidelity (inf cost: uncalibrated, uncovered,
+    or arbitrarily bad) must lose to a demand fetch at ANY finite ETA."""
+    idx = jnp.asarray([[1], [3]], jnp.int32)
+    logits = jnp.zeros((2, 1), jnp.float32)
+    resident = jnp.asarray([True, False, True, False])
+    table = jnp.full((4, 1), -1, jnp.int32)
+    q = jnp.zeros((4, 1), jnp.float32)
+    pol = BuddyPolicy(mode="none", quant_tier="int8", miss_policy="cost")
+    res = substitute(idx, logits, resident, table, q, pol,
+                     fid_cost=jnp.full((4,), jnp.inf),
+                     fetch_cost=jnp.full((4,), 0.01, jnp.float32))
+    assert np.asarray(res.missed).all()
+    assert not np.asarray(res.degraded).any()
+    # even when fetch is arbitrarily slow the unusable replica stays out —
+    # the argmin falls through to drop, never to degraded
+    res2 = substitute(idx, logits, resident, table, q, pol,
+                      fid_cost=jnp.full((4,), jnp.inf),
+                      fetch_cost=jnp.full((4,), 10.0, jnp.float32))
+    assert not np.asarray(res2.degraded).any()
+    assert np.asarray(res2.dropped).all()
+    # host-side mirror agrees
+    m = MissCostModel(1, 4, expert_bytes=1000)
+    out = m.outcome_argmin(np.full((1, 4), 0.01),
+                           fidelity=np.full((1, 4), np.inf), best_q=None)
+    assert (out == FETCH).all()
+
+
+def test_outcome_argmin_tie_break_and_drop():
+    m = MissCostModel(1, 2, expert_bytes=1000, stall_per_quality=0.05,
+                      drop_loss=1.0)
+    # perfect buddy (cost 0) ties nothing else: buddy wins
+    out = m.outcome_argmin(np.full((1, 2), 1.0),
+                           fidelity=np.zeros((1, 2)),
+                           best_q=np.ones((1, 2)))
+    assert (out == BUDDY).all(), "equal zero cost breaks to the buddy"
+    # nothing usable but a cheap drop
+    m2 = MissCostModel(1, 2, expert_bytes=1000, stall_per_quality=0.05,
+                       drop_loss=0.1)
+    out2 = m2.outcome_argmin(np.full((1, 2), 1.0))
+    assert (out2 == DROP).all()
+    assert m2.drop_cost() == pytest.approx(0.005)
+    # degraded beats a cold fetch when the replica is good
+    out3 = m.outcome_argmin(np.full((1, 2), 1.0),
+                            fidelity=np.full((1, 2), 0.01))
+    assert (out3 == DEGRADED).all()
+
+
+def test_cold_miss_eta_equals_modeled_full_transfer(setup):
+    """Cost-model edge: with nothing in flight, every (layer, expert) fetch
+    ETA is exactly the hardware model's full transfer time — and the
+    engine's _miss_eta agrees."""
+    nbytes = 123_456
+    m = MissCostModel(3, 5, expert_bytes=nbytes)
+    eta = m.fetch_eta(TransferScheduler(DEFAULT_HW))
+    assert eta.shape == (3, 5)
+    assert np.allclose(eta, DEFAULT_HW.transfer_time(nbytes))
+    cfg, params, _, tables = setup
+    eng = _cost_engine(cfg, params, tables)
+    assert np.allclose(eng._miss_eta(),
+                       eng.hw.transfer_time(eng._expert_bytes))
+    # an in-flight PREFETCH discounts its expert; an UPGRADE does not
+    # (background quality repair must not lure the scorer into blocking)
+    sched = TransferScheduler(DEFAULT_HW)
+    m2 = MissCostModel(2, 4, expert_bytes=nbytes)
+    t = sched.submit(0, 1, nbytes, "prefetch")
+    sched.submit(1, 2, nbytes, "upgrade")
+    eta2 = m2.fetch_eta(sched)
+    assert eta2[0, 1] == pytest.approx(sched.eta_s(t))
+    assert eta2[1, 2] == pytest.approx(DEFAULT_HW.transfer_time(nbytes))
+
+
+def test_best_resident_q():
+    table = np.asarray([[1, 2], [0, -1], [0, 1], [-1, -1]])
+    q = np.asarray([[0.9, 0.5], [0.3, 0.0], [0.8, 0.7], [0.0, 0.0]])
+    res = np.asarray([False, True, True, False])
+    np.testing.assert_allclose(best_resident_q(table, q, res),
+                               [0.9, -1.0, 0.7, -1.0])
+    # stacked [L, E, R] form slices like the per-layer calls
+    res2 = np.stack([res, [True, False, False, True]])
+    b3 = best_resident_q(np.stack([table] * 2), np.stack([q] * 2), res2)
+    np.testing.assert_allclose(b3[0], [0.9, -1.0, 0.7, -1.0])
+    np.testing.assert_allclose(b3[1], [-1.0, 0.3, 0.8, -1.0])
+
+
+# ---------------------------------------------------------------------------
+# degraded-then-upgrade
+# ---------------------------------------------------------------------------
+def test_upgrade_bytes_counted_once_and_tokens_not_flipped(setup):
+    """Cost-model edge: an upgrade landing mid-step must not double-count
+    bytes (duplicate submissions reuse the in-flight transfer) and must not
+    flip tokens already computed from the step's residency snapshot — the
+    upgraded expert only changes FUTURE steps."""
+    cfg, params, lm, tables = setup
+    prompts = lm.sample(2, 4)
+
+    eng = _cost_engine(cfg, params, tables, mode="none")
+    assert eng.upgrade_degraded, "cost mode + tier auto-enables upgrades"
+    ref = _cost_engine(cfg, params, tables, mode="none", upgrade=False)
+
+    caches = eng.init_caches(2, 8)
+    caches_r = ref.init_caches(2, 8)
+    tok = jnp.asarray(prompts[:, 0], jnp.int32)
+    # step 0: identical snapshots -> identical logits even though eng's
+    # upgrades complete DURING the step's timeline replay
+    lg, caches = eng.step(tok, caches, 0)
+    lg_r, caches_r = ref.step(tok, caches_r, 0)
+    assert eng.stats.n_upgrade_issued > 0
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(lg, -1)),
+                                  np.asarray(jnp.argmax(lg_r, -1)))
+    # degraded accounting reflects the snapshot, not the post-upgrade state
+    assert eng.ledger.events_by_cause["degraded"] == \
+        ref.ledger.events_by_cause["degraded"]
+
+    # run a few more steps: every upgrade's bytes are counted exactly once
+    for pos in range(1, 4):
+        tok = jnp.asarray(prompts[:, min(pos, prompts.shape[1] - 1)],
+                          jnp.int32)
+        _, caches = eng.step(tok, caches, pos)
+    n_up = eng.ledger.events_by_cause["upgrade"]
+    assert n_up == eng.stats.n_upgrade_issued
+    assert eng.ledger.bytes_by_cause["upgrade"] == n_up * eng._expert_bytes
+    # upgrades are speculative traffic: they never stalled a layer
+    assert eng.ledger.demand_stall_s == 0.0
+    assert eng.ledger.late_prefetch_stall_s == 0.0
+
+
+def test_upgrade_lands_and_serves_full_precision(setup):
+    """After the background upgrade arrives, the expert is RESIDENT: the
+    next step's snapshot serves it as a full-precision cache hit instead of
+    another degraded compute."""
+    cfg, params, lm, tables = setup
+    prompts = lm.sample(2, 4)
+    eng = _cost_engine(cfg, params, tables, mode="none")
+    caches = eng.init_caches(2, 8)
+    _, caches = eng.step(jnp.asarray(prompts[:, 0], jnp.int32), caches, 0)
+    ups = [(t.layer, t.expert) for t in eng.scheduler.pending()
+           if t.cause == "upgrade"]
+    assert eng.stats.n_upgrade_issued > 0
+    eng.scheduler.flush()          # land every in-flight upgrade
+    # the landed experts were inserted (capacity may have evicted earlier
+    # arrivals — at least the most recent upgrade per layer survives)
+    landed = {}
+    for l, e in ups:
+        landed[l] = e
+    for l, e in landed.items():
+        assert eng.cache.resident[l, e], \
+            "a landed upgrade must be resident full-precision"
+    # the next snapshot serves those experts from the cache: neither the
+    # degraded mask (cost mode: fid_cost) nor the miss path applies to a
+    # resident expert (substitute() only scores ~resident slots)
+    state = eng._buddy_state()
+    for l, e in landed.items():
+        assert bool(np.asarray(state.resident)[l, e])
+
+
+# ---------------------------------------------------------------------------
+# P(use) x lateness-risk prefetch ranking
+# ---------------------------------------------------------------------------
+def test_prefetch_scores_rank_by_expected_stall_saved():
+    m = MissCostModel(1, 4, expert_bytes=1000, stall_per_quality=0.05)
+    p_use = np.asarray([0.9, 0.5, 0.9, 0.1])
+    # expert 0's miss is nearly free (great buddy); expert 2's stalls
+    miss_cost = np.asarray([1e-4, 5e-3, 8e-3, 8e-3])
+    resident = np.asarray([False, False, False, False])
+    s = m.prefetch_scores(p_use, miss_cost, resident)
+    order = np.argsort(-s)
+    assert order[0] == 2, "high P(use) x high stall risk ranks first"
+    assert s[0] < s[1], "a miss a buddy absorbs is worth less than a " \
+        "rarer but stalling one"
+    # residency / in-flight zero the saving
+    s2 = m.prefetch_scores(p_use, miss_cost, np.asarray([0, 0, 1, 0], bool),
+                           inflight=np.asarray([0, 1, 0, 0], bool))
+    assert s2[2] == 0.0 and s2[1] == 0.0
+
+
+def test_predict_proba_all_predictors():
+    """Contract: per-expert MARGINAL P(use) in [0, 1] (not a distribution
+    summing to 1) so the absolute saving threshold treats every predictor
+    on the oracle's scale."""
+    for cls in (TopFreqPredictor, PrevStepPredictor, CrossLayerPredictor):
+        p = cls(2, 4)
+        p.observe(1, [0, 0, 2])
+        if hasattr(p, "observe_transition"):
+            p.observe_transition(1, [1], [0, 2])
+        proba = p.predict_proba(1)
+        assert proba.shape == (4,)
+        assert (proba >= 0).all() and (proba <= 1.0 + 1e-9).all()
+        assert proba[0] > proba[3], f"{cls.__name__}: observed expert " \
+            "must outrank an unseen one"
+    o = NoisyOraclePredictor(2, 4, accuracy=0.75)
+    o.set_truth(0, [1])
+    po = o.predict_proba(0)
+    assert po[1] == pytest.approx(0.75 + 0.25 / 4)
+    assert po[0] == pytest.approx(0.25 / 4)
+    # marginal scale: a certain-reuse expert under PrevStep scores near its
+    # blend weight, the same order of magnitude as the oracle's accuracy —
+    # NOT divided by the used-set size
+    ps = PrevStepPredictor(1, 8)
+    ps.observe(0, [0, 1, 2, 3])
+    assert ps.predict_proba(0)[0] >= PrevStepPredictor.PREV_WEIGHT
+
+
+def test_engine_cost_ranked_prefetch_and_worthwhile(setup):
+    """With the cost policy and a proba predictor, prefetches follow the
+    expected-stall-saved ranking and the worthwhile count is exposed for
+    the budget controller."""
+    cfg, params, lm, tables = setup
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    eng = _cost_engine(cfg, params, tables, prefetch_k=2,
+                       predictor=PrevStepPredictor(l, e))
+    eng.generate(lm.sample(2, 4), max_new_tokens=6)
+    assert eng.stats.n_prefetch_issued > 0
+    assert eng.last_prefetch_worthwhile is not None
+    # direct ranking call: scores positive only off-residency
+    want, worthwhile = eng._rank_prefetch(0, np.asarray([0, 1]))
+    assert len(want) <= eng.prefetch_k
+    for ex in want:
+        assert not eng.cache.resident[0, ex]
+
+
+def test_cost_ranked_prefetch_keeps_own_inflight(setup):
+    """An in-flight prefetch that is still attractive must stay in the
+    keep-list fed to cancel_stale_prefetches — otherwise the engine would
+    cancel and re-issue its own unfinished prefetches every step
+    (issue/cancel ping-pong that never accumulates lead time)."""
+    cfg, params, lm, tables = setup
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    eng = _cost_engine(cfg, params, tables, prefetch_k=2,
+                       predictor=PrevStepPredictor(l, e))
+    ctx = np.asarray([0, 1])
+    eng.predictor.observe(0, ctx)
+    eng._issue_prefetches(0, ctx)
+    issued = [(t.layer, t.expert) for t in eng.scheduler.pending()
+              if t.cause == "prefetch"]
+    assert issued, "ranking issued nothing to keep alive"
+    # same prediction context again: the in-flight transfers survive
+    eng._issue_prefetches(0, ctx)
+    assert eng.stats.n_prefetch_cancelled == 0
+    still = [(t.layer, t.expert) for t in eng.scheduler.pending()
+             if t.cause == "prefetch"]
+    assert set(issued) <= set(still)
+
+
+def test_rank_prefetch_mode_none_ignores_buddies(setup):
+    """mode='none' never reroutes, so the ranking must not discount miss
+    costs by buddy quality the argmin will never use: its scores are at
+    least the buddy-aware engine's on identical state."""
+    cfg, params, lm, tables = setup
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    a = _cost_engine(cfg, params, tables, mode="none", prefetch_k=2,
+                     predictor=PrevStepPredictor(l, e))
+    b = _cost_engine(cfg, params, tables, mode="buddy", prefetch_k=2,
+                     predictor=PrevStepPredictor(l, e))
+    for eng in (a, b):
+        eng.predictor.observe(0, [0, 1])
+    fid = np.full((l, e), 0.01)
+    a.tier.attach_fidelity(fid)
+    b.tier.attach_fidelity(fid)
+    eta = a.costs.fetch_eta(a.scheduler)[0]
+    bq_buddy = best_resident_q(a._table[0], a._q[0], a.cache.resident[0])
+    risk_none = a.costs.miss_cost(eta, fid[0], None)
+    risk_buddy = a.costs.miss_cost(eta, fid[0], bq_buddy)
+    assert (risk_none >= risk_buddy - 1e-12).all()
+    _, w_none = a._rank_prefetch(0, np.asarray([0, 1]))
+    assert w_none >= 0  # runs end-to-end without a buddy term
+
+
+def test_controller_worthwhile_caps_budget():
+    c = AdaptiveBudgetController(prefetch_k=4, lookahead=1, min_k=1,
+                                 max_k=8, window=1)
+    demand = {"demand_stall_s": 1.0, "late_prefetch_stall_s": 0.0,
+              "overlapped_s": 0.0}
+    b = c.update(demand, queue_depth=8, worthwhile=2)
+    assert b.prefetch_k <= 2
+    assert c.trace[-1]["worthwhile"] == 2
+    # without the signal the demand-dominant rule grows k as before
+    c2 = AdaptiveBudgetController(prefetch_k=4, lookahead=1, min_k=1,
+                                  max_k=8, window=1)
+    assert c2.update(demand, queue_depth=8).prefetch_k == 5
+
+
+# ---------------------------------------------------------------------------
+# partial-coverage tiers
+# ---------------------------------------------------------------------------
+def test_partial_coverage_frees_slots_and_limits_degrade(setup):
+    cfg, *_ = setup
+    e = cfg.moe.num_experts
+    full_cov = _tier(cfg, rate=1.0)
+    half_cov = _tier(cfg, rate=1.0, coverage=0.5)
+    assert half_cov.n_covered == 2
+    assert half_cov.cache.capacity >= full_cov.cache.capacity
+    assert half_cov.quant_bytes < full_cov.quant_bytes
+    sp = half_cov.budget_split()
+    assert sp["coverage"] == 0.5 and sp["covered_per_layer"] == 2
+
+    # top-activity experts get the replicas
+    act = np.tile(np.asarray([1.0, 9.0, 3.0, 0.1]), (cfg.num_layers, 1))
+    half_cov.set_coverage(act)
+    assert half_cov.covered[:, 1].all() and half_cov.covered[:, 2].all()
+    assert not half_cov.covered[:, 0].any()
+
+    # uncovered experts never degrade (precedence mask AND cost fidelity)
+    half_cov.attach_fidelity(np.full((cfg.num_layers, e), 0.01))
+    eta = np.full((cfg.num_layers, e), 1.0)
+    ok = half_cov.degraded_ok(np.zeros((cfg.num_layers, e), bool), eta)
+    assert ok[:, 1].all() and not ok[:, 0].any()
+    eff = half_cov.effective_fidelity()
+    assert np.isinf(eff[:, 0]).all() and np.isfinite(eff[:, 1]).all()
+
+
+def test_partial_coverage_engine_runs(setup):
+    cfg, params, lm, tables = setup
+    eng = _cost_engine(cfg, params, tables, mode="none",
+                       tier_kw={"coverage": 0.5})
+    eng.generate(lm.sample(1, 3), max_new_tokens=4)
+    s = eng.summary()
+    assert s["tier"]["tier_budget_split"]["coverage"] == 0.5
+    # misses on uncovered experts fell through to fetch, not degrade
+    deg = s["tier"]["degraded_tokens"]
+    assert np.isfinite(eng.teacher_forced_nll(lm.sample(1, 4)))
+    assert deg >= 0  # engine runs end-to-end with a partial tier
+
+
+# ---------------------------------------------------------------------------
+# precedence mode is untouched (regression guard)
+# ---------------------------------------------------------------------------
+def test_precedence_mode_summary_has_no_cost_section(setup):
+    cfg, params, lm, tables = setup
+    eng = ServeEngine(cfg, params, tables=tables,
+                      policy=BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8),
+                      cache=ExpertCache(cfg.num_layers, cfg.moe.num_experts,
+                                        0.5, seed=0), seed=0)
+    eng.generate(lm.sample(1, 3), max_new_tokens=3)
+    s = eng.summary()
+    assert "cost_policy" not in s
+    assert not eng.upgrade_degraded
+
+
+def test_cost_policy_rejects_drop_fallback():
+    with pytest.raises(AssertionError):
+        BuddyPolicy(miss_policy="cost", fallback="drop")
