@@ -1,48 +1,208 @@
-"""Kernel microbenches: Pallas (interpret on CPU — functional timing, not TPU
-perf) vs the pure-jnp oracle, across paper-relevant shapes."""
+"""Kernel microbenches + the fused-dispatch decode step-time comparison.
+
+Two timing arms per kernel, labeled for what they actually measure on this
+CPU-only container:
+
+  interp_us   the Pallas kernel in INTERPRET mode — functional validation
+              timing only (the kernel body runs in Python/XLA-CPU); NOT a
+              TPU kernel-performance number.
+  xla_ref_us  the pure-jnp oracle (kernels/ref.py) under jax.jit — a real
+              compiled-XLA timing, the honest CPU reference arm.
+
+The decode-step section times the thing the grouped kernel exists for: one
+jitted ``moe_forward`` decode step, three-dispatch (``use_fused_dispatch``
+off: full-precision path + buddy replicas + separate degraded pass) vs
+single-dispatch (knob on, jnp megastep), at 0% / ~25% / ~50% mixed-outcome
+slots. ``step_time_ratio = fused / unfused`` (lower is better) feeds the CI
+regression gate via ``check_regression --kind kernels``.
+
+Everything is seeded (``--seed``) and recorded to
+``results/bench/kernels.json``.
+"""
 from __future__ import annotations
 
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.configs.base import MoEConfig
+from repro.core.policy import BuddyPolicy
+from repro.core.quantize import quantize_expert_ffn
+from repro.core.substitute import substitute
 from repro.kernels import ops, ref
+from repro.models import moe as M
+
+OUT_PATH = os.path.join(common.CACHE_DIR, "kernels.json")
+
+INTERP_NOTE = ("interp_us times Pallas INTERPRET mode (functional "
+               "validation on CPU, not TPU kernel perf); xla_ref_us times "
+               "the jitted jnp oracle — the compiled-XLA reference arm")
 
 
-def run(out_rows):
-    rng = np.random.default_rng(0)
+def _record(out_rows, results, name, interp_us, xla_us):
+    results["kernels"][name] = {"interp_us": interp_us,
+                                "xla_ref_us": xla_us}
+    out_rows.append((f"kernel.{name}", interp_us,
+                     f"xla_ref_us={xla_us:.0f}"))
+    print(f"  {name}: pallas(interp) {interp_us:.0f}us, "
+          f"jit-xla-ref {xla_us:.0f}us")
 
-    # buddy_substitute @ DeepSeek-V2-Lite decode batch
-    t, e, k, r = 256, 64, 6, 16
-    s = np.stack([rng.choice(e, k, replace=False) for _ in range(t)]).astype(np.int32)
+
+def _bench_kernels(out_rows, results, rng, smoke: bool):
+    rep_i = 2 if smoke else 3          # interpret arm is slow; median of few
+    rep_x = 5
+
+    # buddy_substitute @ DeepSeek-V2-Lite decode batch. The jitted XLA
+    # reference is core.substitute (the in-model path), NOT the numpy-loop
+    # oracle — a python loop timing is not a reference arm.
+    t, e, k, r = (64, 16, 4, 8) if smoke else (256, 64, 6, 16)
+    s = np.stack([rng.choice(e, k, replace=False)
+                  for _ in range(t)]).astype(np.int32)
     gate = rng.random(t) < 0.8
     res = rng.random(e) < 0.5
     table = rng.integers(0, e, (e, r)).astype(np.int32)
     q = rng.random((e, r)).astype(np.float32)
-    a = [jnp.asarray(x) for x in (s, gate, res, table, q)]
-    us_k = common.timer(lambda: ops.buddy_substitute(*a, h=8, rho=3))
-    us_r = common.timer(lambda: ref.ref_buddy_substitute(s, gate, res, table,
-                                                         q, h=8, rho=3),
-                        repeats=2)
-    out_rows.append(("kernel.buddy_substitute", us_k, f"ref_us={us_r:.0f}"))
-    print(f"  buddy_substitute: pallas(interp) {us_k:.0f}us, "
-          f"python-ref {us_r:.0f}us")
+    a = [jnp.asarray(v) for v in (s, gate, res, table, q)]
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=3, H=8)
+    logits = jnp.asarray(rng.normal(size=(t, k)).astype(np.float32))
+    sub_jit = jax.jit(lambda si, lo, re, ta, qq: substitute(
+        si, lo, re, ta, qq, pol))
+    us_k = common.timer(lambda: ops.buddy_substitute(*a, h=8, rho=3),
+                        repeats=rep_i)
+    us_r = common.timer(lambda: sub_jit(a[0], logits, a[2], a[3], a[4]),
+                        repeats=rep_x)
+    _record(out_rows, results, "buddy_substitute", us_k, us_r)
 
     # topk_gate @ prefill tile
-    z = jnp.asarray(rng.normal(size=(2048, 64)).astype(np.float32))
-    us_k = common.timer(lambda: ops.topk_gate(z, 0.4, k=6))
-    us_r = common.timer(lambda: ref.ref_topk_gate(z, 0.4, k=6))
-    out_rows.append(("kernel.topk_gate", us_k, f"ref_us={us_r:.0f}"))
-    print(f"  topk_gate: pallas(interp) {us_k:.0f}us, jnp-ref {us_r:.0f}us")
+    tg = 512 if smoke else 2048
+    z = jnp.asarray(rng.normal(size=(tg, e)).astype(np.float32))
+    ref_topk = jax.jit(lambda zz: ref.ref_topk_gate(zz, 0.4, k=k))
+    us_k = common.timer(lambda: ops.topk_gate(z, 0.4, k=k), repeats=rep_i)
+    us_r = common.timer(lambda: ref_topk(z), repeats=rep_x)
+    _record(out_rows, results, "topk_gate", us_k, us_r)
 
-    # expert_ffn @ small dispatch buffer
-    e_n, c, d, f = 8, 128, 256, 512
+    # shared SwiGLU shapes for the three FFN kernels
+    e_n, c, d, f = (4, 32, 64, 128) if smoke else (8, 128, 256, 512)
     x = jnp.asarray((rng.normal(size=(e_n, c, d)) * 0.1).astype(np.float32))
     w1 = jnp.asarray((rng.normal(size=(e_n, d, f)) * 0.05).astype(np.float32))
     w3 = jnp.asarray((rng.normal(size=(e_n, d, f)) * 0.05).astype(np.float32))
     w2 = jnp.asarray((rng.normal(size=(e_n, f, d)) * 0.05).astype(np.float32))
-    us_k = common.timer(lambda: ops.expert_ffn(x, w1, w3, w2), repeats=3)
-    us_r = common.timer(lambda: ref.ref_expert_ffn(x, w1, w3, w2))
-    out_rows.append(("kernel.expert_ffn", us_k, f"ref_us={us_r:.0f}"))
-    print(f"  expert_ffn: pallas(interp) {us_k:.0f}us, jnp-ref {us_r:.0f}us")
-    return {}
+    quant = quantize_expert_ffn(w1, w3, w2, 8)
+    qargs = (quant["w1_q"], quant["w1_s"], quant["w3_q"], quant["w3_s"],
+             quant["w2_q"], quant["w2_s"])
+
+    ref_ffn = jax.jit(ref.ref_expert_ffn)
+    us_k = common.timer(lambda: ops.expert_ffn(x, w1, w3, w2), repeats=rep_i)
+    us_r = common.timer(lambda: ref_ffn(x, w1, w3, w2), repeats=rep_x)
+    _record(out_rows, results, "expert_ffn", us_k, us_r)
+
+    ref_qffn = jax.jit(ref.ref_quant_ffn)
+    us_k = common.timer(lambda: ops.quant_ffn(x, *qargs), repeats=rep_i)
+    us_r = common.timer(lambda: ref_qffn(x, *qargs), repeats=rep_x)
+    _record(out_rows, results, "quant_ffn", us_k, us_r)
+
+    # grouped_ffn: 2E groups (fp + degraded halves of the same experts)
+    xg = jnp.concatenate([x, x * 0.5], axis=0)                 # [2E, C, D]
+    ref_gffn = jax.jit(ref.ref_grouped_ffn)
+    us_k = common.timer(lambda: ops.grouped_ffn(xg, w1, w3, w2, *qargs),
+                        repeats=rep_i)
+    us_r = common.timer(lambda: ref_gffn(xg, w1, w3, w2, *qargs),
+                        repeats=rep_x)
+    _record(out_rows, results, "grouped_ffn", us_k, us_r)
+
+
+def _decode_step_bench(out_rows, results, rng, smoke: bool):
+    """Fused vs unfused jitted decode step at three miss mixes."""
+    e_n, k_n, d, f = (16, 4, 64, 128) if smoke else (32, 6, 128, 256)
+    b = 8 if smoke else 16                                 # decode rows
+    cfg = MoEConfig(num_experts=e_n, top_k=k_n, d_ff=f)
+    key = jax.random.PRNGKey(int(rng.integers(0, 2 ** 31)))
+    params = M.init_moe(key, d, cfg, jnp.float32)
+    params["quant"] = quantize_expert_ffn(params["w1"], params["w3"],
+                                          params["w2"], 8)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (b, 1, d)) * 0.5
+    # ring buddy table: expert i's buddies are the next experts (mod E)
+    table = jnp.asarray(np.stack([np.roll(np.arange(e_n), -i - 1)[:4]
+                                  for i in range(e_n)]), jnp.int32)
+    qtab = jnp.full((e_n, 4), 0.3, jnp.float32)
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=1, H=4, quant_tier="int8")
+    pol_fused = dataclasses.replace(pol, use_fused_dispatch=True)
+
+    def scenario(name, miss_frac):
+        n_miss = int(round(miss_frac * e_n))
+        resident = np.ones(e_n, bool)
+        if n_miss:
+            resident[rng.choice(e_n, n_miss, replace=False)] = False
+        # half the non-resident experts may serve degraded; rho=1 caps
+        # buddy reroutes so fetch-resolved misses survive too
+        quant_ok = ~resident & (np.arange(e_n) % 2 == 0)
+        buddy = M.BuddyState(resident=jnp.asarray(resident), table=table,
+                             q=qtab, hop=jnp.zeros((e_n,), jnp.int32),
+                             quant_ok=jnp.asarray(quant_ok))
+        step_u = jax.jit(lambda p, xx: M.moe_forward(
+            p, xx, cfg, policy=pol, buddy=buddy)[0])
+        step_f = jax.jit(lambda p, xx: M.moe_forward(
+            p, xx, cfg, policy=pol_fused, buddy=buddy)[0])
+        us_u = common.timer(lambda: step_u(params, x), repeats=7)
+        us_f = common.timer(lambda: step_f(params, x), repeats=7)
+        _, aux = M.moe_forward(params, x, cfg, policy=pol, buddy=buddy)
+        n_slots = b * k_n
+        mix = {"slots": n_slots,
+               "substituted": int(aux.n_substituted),
+               "degraded": int(aux.n_degraded),
+               "fetch_missed": int(aux.n_missed),
+               "outcome_frac": float(
+                   (int(aux.n_substituted) + int(aux.n_degraded)
+                    + int(aux.n_missed)) / n_slots)}
+        ratio = us_f / us_u
+        results["decode_step"][name] = {
+            "unfused_us": us_u, "fused_us": us_f,
+            "step_time_ratio": ratio, "mix": mix}
+        out_rows.append((f"decode_step.{name}.fused", us_f,
+                         f"unfused_us={us_u:.0f} ratio={ratio:.3f}"))
+        print(f"  {name}: unfused {us_u:.0f}us, fused {us_f:.0f}us, "
+              f"ratio {ratio:.3f} (outcome slots: {mix['outcome_frac']:.0%})")
+
+    results["decode_step"]["shape"] = {
+        "num_experts": e_n, "top_k": k_n, "d_model": d, "d_ff": f,
+        "decode_rows": b, "quant_tier": "int8"}
+    scenario("zero_miss", 0.0)
+    scenario("mixed25", 0.3)   # ~25%+ of slots carry a non-hit outcome
+    scenario("mixed50", 0.5)
+
+
+def run(out_rows, seed: int = 0, smoke: bool = False):
+    rng = np.random.default_rng(seed)
+    results = {"seed": seed, "smoke": smoke, "interpret_note": INTERP_NOTE,
+               "kernels": {}, "decode_step": {}}
+    _bench_kernels(out_rows, results, rng, smoke)
+    print("  -- decode step: three-dispatch vs single-dispatch (jit XLA) --")
+    _decode_step_bench(out_rows, results, rng, smoke)
+    os.makedirs(common.CACHE_DIR, exist_ok=True)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(results, fh, indent=1, sort_keys=True)
+    print(f"  wrote {os.path.normpath(OUT_PATH)}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes / fewer repeats (CI smoke matrix)")
+    args = ap.parse_args()
+    rows = []
+    run(rows, seed=args.seed, smoke=args.smoke)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,22 +1,35 @@
-"""Benchmark-regression gate for the serving smoke run (CI).
+"""Benchmark-regression gate (CI). Two kinds, selected by ``--kind``:
 
-Compares the metrics of a fresh ``results/bench/serving.json`` against a
-COMMITTED baseline (``benchmarks/baselines/serving_smoke.json``) and fails
-(exit 1) when any metric regresses by more than ``--threshold`` (default
-15%), printing a per-metric delta table either way.
+  serving (default) — compares a fresh ``results/bench/serving.json``
+    against the committed ``benchmarks/baselines/serving_smoke.json``.
+    Tracked metrics (per sweep key, e.g. ``c0.5_load1.0``):
 
-Tracked metrics (per sweep key, e.g. ``c0.5_load1.0``):
+      p99_token_latency_ms.*   continuous arm + tier / cost-policy arms
+                               (lower is better)
+      goodput_rps.*            continuous + cost-policy arms (higher better)
+      nll_absdelta.*           |NLL - full-residency reference| of the tier
+                               and cost-policy arms (lower is better)
 
-  p99_token_latency_ms.*   continuous arm + tier / cost-policy arms (lower
-                           is better)
-  goodput_rps.*            continuous + cost-policy arms (higher is better)
-  nll_absdelta.*           |NLL - full-residency reference| of the tier and
-                           cost-policy arms (lower is better)
+  kernels — compares a fresh ``results/bench/kernels.json`` (from
+    ``bench_kernels --smoke``) against
+    ``benchmarks/baselines/kernels_smoke.json``. Only the fused-vs-unfused
+    decode ``step_time_ratio`` metrics are gated (ratios of medians on the
+    same host are CI-robust; raw microsecond timings are not):
 
-The simulation is deterministic given ``--seed`` (modeled latencies, seeded
-workload/cache/PRNGs), so the baseline is tight run-to-run; small absolute
-floors (see ``FLOORS``) keep the RELATIVE threshold from tripping on
-float-level noise when a baseline value is near zero.
+      decode_step.step_time_ratio.{zero_miss,mixed25,mixed50}
+                               fused / unfused jitted step time (lower is
+                               better; <= ~1.0 at zero miss, < 1 at >=25%
+                               mixed-outcome slots)
+
+A metric regressing by more than ``--threshold`` (default 15%) fails
+(exit 1), printing a per-metric delta table either way.
+
+The serving simulation is deterministic given ``--seed`` (modeled
+latencies, seeded workload/cache/PRNGs), so its baseline is tight
+run-to-run; small absolute floors (see ``FLOORS``) keep the RELATIVE
+threshold from tripping on float-level noise when a baseline value is near
+zero. The kernels ratios get a larger floor (0.15 absolute) to damp CI
+timing jitter.
 
 Comparison rules:
   * a metric present in the baseline but missing from the current run FAILS
@@ -42,8 +55,14 @@ import sys
 from typing import Dict, Tuple
 
 HERE = os.path.dirname(os.path.abspath(__file__))
-DEFAULT_CURRENT = os.path.join(HERE, "..", "results", "bench", "serving.json")
-DEFAULT_BASELINE = os.path.join(HERE, "baselines", "serving_smoke.json")
+
+# --kind -> (default current results file, default committed baseline)
+KIND_PATHS = {
+    "serving": (os.path.join(HERE, "..", "results", "bench", "serving.json"),
+                os.path.join(HERE, "baselines", "serving_smoke.json")),
+    "kernels": (os.path.join(HERE, "..", "results", "bench", "kernels.json"),
+                os.path.join(HERE, "baselines", "kernels_smoke.json")),
+}
 
 # direction: is a LARGER current value worse?
 LOWER_IS_BETTER = "lower"
@@ -55,6 +74,7 @@ FLOORS = {
     "p99_token_latency_ms": 0.01,    # modeled ms
     "goodput_rps": 0.05,             # requests / simulated second
     "nll_absdelta": 0.02,            # nats on the smoke NLL probe
+    "step_time_ratio": 0.15,         # fused/unfused ratio — wall-clock jitter
 }
 
 
@@ -95,6 +115,21 @@ def extract_metrics(results: dict) -> Dict[str, float]:
             out[f"{key}.nll_absdelta.cost_policy"] = \
                 abs(cp["nll"]["cost"] - cp["nll"]["full_residency"])
     return out
+
+
+def extract_kernel_metrics(results: dict) -> Dict[str, float]:
+    """Gateable metrics from a bench_kernels results dict: the decode-step
+    fused/unfused ratios only — raw interp/XLA microsecond timings vary too
+    much across CI hosts to gate, but a ratio of medians on one host holds."""
+    out: Dict[str, float] = {}
+    for name, row in results.get("decode_step", {}).items():
+        if isinstance(row, dict) and "step_time_ratio" in row:
+            out[f"decode_step.step_time_ratio.{name}"] = \
+                row["step_time_ratio"]
+    return out
+
+
+EXTRACTORS = {"serving": extract_metrics, "kernels": extract_kernel_metrics}
 
 
 def inject_regression(metrics: Dict[str, float],
@@ -144,10 +179,14 @@ def _fmt(v) -> str:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--current", default=DEFAULT_CURRENT,
-                    help="serving.json of the run under test")
-    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
-                    help="committed baseline metrics JSON")
+    ap.add_argument("--kind", choices=sorted(KIND_PATHS), default="serving",
+                    help="which benchmark's results to gate")
+    ap.add_argument("--current", default=None,
+                    help="results JSON of the run under test "
+                         "(default: per --kind)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline metrics JSON "
+                         "(default: per --kind)")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="max tolerated relative regression per metric")
     ap.add_argument("--write-baseline", action="store_true",
@@ -158,9 +197,13 @@ def main(argv=None) -> int:
                     help="self-test: worsen every current metric by FACTOR "
                          "before comparing (the gate must then fail)")
     args = ap.parse_args(argv)
+    if args.current is None:
+        args.current = KIND_PATHS[args.kind][0]
+    if args.baseline is None:
+        args.baseline = KIND_PATHS[args.kind][1]
 
     with open(args.current) as f:
-        current = extract_metrics(json.load(f))
+        current = EXTRACTORS[args.kind](json.load(f))
     if not current:
         print(f"no gateable metrics found in {args.current}", file=sys.stderr)
         return 1

@@ -44,6 +44,15 @@ class BuddyPolicy:
     drop_loss: quality units lost by dropping a routed slot and
             renormalizing (the whole slot's mixture contribution; 1.0 makes
             drop the outcome of last resort).
+    use_fused_dispatch: collapse the decode step's outcome-diverse dispatch
+            (full-precision expert FFN + buddy-replica einsum + separate
+            degraded dequant pass) into ONE dispatch that computes every
+            outcome class with the right weights exactly once — the jnp
+            megastep selects per-slot operands by outcome class, the Pallas
+            path (kernels/grouped_ffn.py) bins slots by (resolved expert,
+            class) into a single grouped launch. Static under jit: False
+            (default) compiles the exact pre-fused graph, bit-identical to
+            before the knob existed.
     """
     tau: float = 0.2
     beta: float = 0.6
@@ -59,6 +68,7 @@ class BuddyPolicy:
     miss_policy: str = "precedence"
     stall_per_quality: float = 0.05
     drop_loss: float = 1.0
+    use_fused_dispatch: bool = False
 
     def __post_init__(self):
         assert self.fallback in ("fetch", "drop")

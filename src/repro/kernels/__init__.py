@@ -4,5 +4,9 @@ mode on CPU; see ops.py for jit'd wrappers and ref.py for the oracles):
   buddy_substitute — Algorithm 1 (the paper's CUDA kernel, TPU-adapted)
   topk_gate        — fused router top-k + renorm + TAE gate
   expert_ffn       — grouped expert SwiGLU over dispatch buffers
+  quant_ffn        — fused dequant + SwiGLU over int8/int4 tier replicas
+  grouped_ffn      — single-dispatch four-way miss outcome (full-precision
+                     + buddy + degraded in ONE launch; dropped slots never
+                     binned)
   wkv_chunk        — chunkwise-parallel RWKV6 WKV (§Perf B1 hot loop)
 """

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: ONE grouped expert launch for the four-way miss
+outcome (full-precision / buddy / degraded / dropped).
+
+The decode step used to pay for outcome diversity with dispatch diversity:
+full-precision experts ran through ``expert_ffn``, buddy-substituted slots
+through the gathered-replica einsum, and degraded (quant-tier) slots through
+a separate jnp dequant pass over EVERY slot — while ``quant_ffn`` sat off
+the dispatch path entirely. This kernel computes all compute-bearing
+outcome classes in a single fused ``pallas_call`` so the megastep stays one
+launch as outcome classes multiply (fidelity-ladder rungs, peer-fetch).
+
+Group layout (the mask/operand contract — see README "Kernels"):
+
+  x [2E, C, D] — tokens binned by (resolved expert, outcome class):
+    group g in [0, E)    full-precision class: slots whose expert id g is
+                         served at full precision. Buddy-substituted slots
+                         land here too — substitution REWRITES the expert
+                         id, so a buddy slot is just a full-precision slot
+                         at the substituted id. Fetch-resolved misses also
+                         land here (the engine models their stall on the
+                         transfer timeline; compute is full-precision).
+    group g in [E, 2E)   degraded class: slots computed against expert
+                         (g - E)'s always-resident quant replica, dequant
+                         applied POST-matmul exactly as quant_ffn_pallas.
+    dropped slots        are never binned (their mixture weight is zero and
+                         renormalized away) — the scatter skips them and
+                         the gather back to token order fills zeros.
+
+  weights as operands by outcome class: both halves of the grid index the
+  weight tables at expert e = g mod E; the class bit (g >= E) selects the
+  fp table (w1/w3/w2) or the quant pair ((w_q, scale) triplets) inside the
+  kernel via predicated execution — one matmul chain runs per grid step.
+
+Tiling mirrors expert_ffn/quant_ffn (MXU-aligned):
+
+  grid = (2E, C/BC, F/BF)  — group, token-chunk tile, hidden tile
+  x block [1, BC, D]; fp w1/w3 [1, D, BF], w2 [1, BF, D]
+  w1q/w3q [1, D, BF] int8 + scales [1, 1, BF]; w2q [1, BF, D] + [1, 1, D]
+  out block [1, BC, D] accumulated in f32 across the F-tile axis
+
+Numerics per class are IDENTICAL to the standalone kernels: the fp class
+follows expert_ffn (matmuls in x.dtype, f32 accumulation, hg cast back to
+x.dtype between the two matmuls); the degraded class follows quant_ffn
+(all-f32 with per-output-channel scales applied post-matmul, which commutes
+because the scale depends only on the output channel).
+
+Bandwidth note: BlockSpec streams BOTH the fp and the quant block of the
+group's expert each grid step even though only one is consumed (Pallas
+block fetches are spec-driven, not predicate-driven). The overhead is
+bounded by the replica's size — int8 adds <=50% of the fp bytes, int4
+payload <=25% — and only on this fused path; a scalar-prefetch variant
+that skips the dead operand per group is the known follow-up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w1_ref, w3_ref, w2_ref,
+            w1q_ref, s1_ref, w3q_ref, s3_ref, w2q_ref, s2_ref, out_ref,
+            *, e_n: int):
+    g = pl.program_id(0)
+    f_idx = pl.program_id(2)
+    is_deg = g >= e_n
+
+    @pl.when(f_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(jnp.logical_not(is_deg))
+    def _full_precision():          # expert_ffn numerics
+        x = x_ref[0]                                   # [BC, D]
+        h = jax.nn.silu(jnp.dot(x, w1_ref[0],
+                                preferred_element_type=jnp.float32))
+        gp = jnp.dot(x, w3_ref[0], preferred_element_type=jnp.float32)
+        hg = (h * gp).astype(x.dtype)
+        out_ref[0] += jnp.dot(hg, w2_ref[0],
+                              preferred_element_type=jnp.float32)
+
+    @pl.when(is_deg)
+    def _degraded():                # quant_ffn numerics (post-matmul dequant)
+        x = x_ref[0].astype(jnp.float32)
+        w1 = w1q_ref[0].astype(jnp.float32)
+        w3 = w3q_ref[0].astype(jnp.float32)
+        w2 = w2q_ref[0].astype(jnp.float32)
+        h = jax.nn.silu(jnp.dot(x, w1, preferred_element_type=jnp.float32)
+                        * s1_ref[0])
+        gp = jnp.dot(x, w3, preferred_element_type=jnp.float32) * s3_ref[0]
+        out_ref[0] += jnp.dot(h * gp, w2,
+                              preferred_element_type=jnp.float32) * s2_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f",
+                                             "interpret"))
+def grouped_ffn_pallas(x, w1, w3, w2,
+                       w1_q, w1_s, w3_q, w3_s, w2_q, w2_s, *,
+                       block_c: int = 128, block_f: int = 256,
+                       interpret: bool = False):
+    """x [2E, C, D] binned by (expert, class) — groups [0, E) full
+    precision, [E, 2E) degraded; w1/w3 [E, D, F], w2 [E, F, D] (fp);
+    w1_q/w3_q [E, D, F] int8 with scales [E, F]; w2_q [E, F, D] int8 with
+    scales [E, D]. Returns [2E, C, D] in x.dtype."""
+    g_n, c_n, d_n = x.shape
+    e_n, _, f_n = w1.shape
+    assert g_n == 2 * e_n, \
+        f"grouped_ffn: x must carry 2E groups (fp + degraded), got " \
+        f"{g_n} groups for E={e_n}"
+    assert w1_q.shape == w1.shape and w2_q.shape == w2.shape
+    bc = min(block_c, c_n)
+    bf = min(block_f, f_n)
+    pad_c = (-c_n) % bc
+    pad_f = (-f_n) % bf
+    xp = jnp.pad(x, ((0, 0), (0, pad_c), (0, 0)))
+    w1p = jnp.pad(w1, ((0, 0), (0, 0), (0, pad_f)))
+    w3p = jnp.pad(w3, ((0, 0), (0, 0), (0, pad_f)))
+    w2p = jnp.pad(w2, ((0, 0), (0, pad_f), (0, 0)))
+    w1qp = jnp.pad(w1_q, ((0, 0), (0, 0), (0, pad_f)))
+    w3qp = jnp.pad(w3_q, ((0, 0), (0, 0), (0, pad_f)))
+    w2qp = jnp.pad(w2_q, ((0, 0), (0, pad_f), (0, 0)))
+    # padded hidden channels have zero weights -> zero contribution; pad
+    # scales with ones so the dequant multiply stays finite
+    s1p = jnp.pad(w1_s, ((0, 0), (0, pad_f)), constant_values=1.0)[:, None, :]
+    s3p = jnp.pad(w3_s, ((0, 0), (0, pad_f)), constant_values=1.0)[:, None, :]
+    s2p = w2_s[:, None, :]                                      # [E, 1, D]
+    n_c, n_f = xp.shape[1] // bc, w1p.shape[2] // bf
+    grid = (g_n, n_c, n_f)
+
+    # weight operands are indexed at expert g mod E — the same expert's fp
+    # and quant blocks serve both halves of the group axis
+    def _w_in(g, c, f):
+        return (g % e_n, 0, f)
+
+    def _w_out(g, c, f):
+        return (g % e_n, f, 0)
+
+    def _s_in(g, c, f):
+        return (g % e_n, 0, f)
+
+    def _s_out(g, c, f):
+        return (g % e_n, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, e_n=e_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, d_n), lambda g, c, f: (g, c, 0)),
+            pl.BlockSpec((1, d_n, bf), _w_in),
+            pl.BlockSpec((1, d_n, bf), _w_in),
+            pl.BlockSpec((1, bf, d_n), _w_out),
+            pl.BlockSpec((1, d_n, bf), _w_in),
+            pl.BlockSpec((1, 1, bf), _s_in),
+            pl.BlockSpec((1, d_n, bf), _w_in),
+            pl.BlockSpec((1, 1, bf), _s_in),
+            pl.BlockSpec((1, bf, d_n), _w_out),
+            pl.BlockSpec((1, 1, d_n), _s_out),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d_n), lambda g, c, f: (g, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((g_n, xp.shape[1], d_n), jnp.float32),
+        interpret=interpret,
+    )(xp, w1p, w3p, w2p, w1qp, s1p, w3qp, s3p, w2qp, s2p)
+    return out[:, :c_n].astype(x.dtype)

@@ -10,6 +10,7 @@ import jax
 
 from repro.kernels.buddy_substitute import buddy_substitute_pallas
 from repro.kernels.expert_ffn import expert_ffn_pallas
+from repro.kernels.grouped_ffn import grouped_ffn_pallas
 from repro.kernels.quant_ffn import quant_ffn_pallas
 from repro.kernels.topk_gate import topk_gate_pallas
 from repro.kernels.wkv_chunk import wkv_chunk_pallas
@@ -39,6 +40,17 @@ def quant_ffn(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s, *,
     return quant_ffn_pallas(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s,
                             block_c=block_c, block_f=block_f,
                             interpret=_interpret())
+
+
+def grouped_ffn(x, w1, w3, w2, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s, *,
+                block_c: int = 128, block_f: int = 256):
+    """Single-dispatch four-way miss outcome: x [2E, C, D] binned by
+    (resolved expert, outcome class) — groups [0, E) full-precision/buddy,
+    [E, 2E) degraded (quant replica, post-matmul dequant). Dropped slots
+    are never binned. Returns [2E, C, D]."""
+    return grouped_ffn_pallas(x, w1, w3, w2, w1_q, w1_s, w3_q, w3_s,
+                              w2_q, w2_s, block_c=block_c, block_f=block_f,
+                              interpret=_interpret())
 
 
 def wkv_chunk(rt, kt, v, ke, lae, dg, s0):

@@ -79,17 +79,44 @@ def ref_expert_ffn(x, w1, w3, w2):
                       preferred_element_type=jnp.float32).astype(x.dtype)
 
 
+def dequant_swiglu(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s):
+    """THE dequant+SwiGLU reference — shared by the quant_ffn / grouped_ffn
+    oracles AND the model's degraded fallback (models.moe), so the oracle
+    and the in-model path cannot drift.
+
+    x [..., C, D] f32-castable; w1_q/w3_q [..., D, F] int8 with scales
+    [..., F]; w2_q [..., F, D] int8 with scales [..., D]. Leading dims
+    broadcast through jnp.matmul (e.g. [E, C, D] binned buffers or
+    [N, 1, D] per-slot rows). Scales are per OUTPUT channel and applied
+    post-matmul (they commute with the contraction). Returns [..., C, D]
+    f32."""
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu((xf @ w1_q.astype(jnp.float32)) * w1_s[..., None, :])
+    g = (xf @ w3_q.astype(jnp.float32)) * w3_s[..., None, :]
+    return ((h * g) @ w2_q.astype(jnp.float32)) * w2_s[..., None, :]
+
+
 def ref_quant_ffn(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s):
     """Oracle for kernels.quant_ffn: dequantize per output channel, then the
     grouped SwiGLU in f32 (same post-matmul scale placement as the kernel)."""
-    xf = x.astype(jnp.float32)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xf,
-                               w1_q.astype(jnp.float32)) * w1_s[:, None, :])
-    g = jnp.einsum("ecd,edf->ecf", xf,
-                   w3_q.astype(jnp.float32)) * w3_s[:, None, :]
-    out = jnp.einsum("ecf,efd->ecd", h * g,
-                     w2_q.astype(jnp.float32)) * w2_s[:, None, :]
+    out = dequant_swiglu(x, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s)
     return out.astype(x.dtype)
+
+
+def ref_grouped_ffn(x, w1, w3, w2, w1_q, w1_s, w3_q, w3_s, w2_q, w2_s):
+    """Oracle for kernels.grouped_ffn — the single-dispatch four-way miss
+    kernel. x [2E, C, D]: groups [0, E) are the full-precision class
+    (expert g, expert_ffn numerics — buddy-substituted and fetch-resolved
+    slots land here at their resolved id) and groups [E, 2E) the degraded
+    class (expert g - E against the quant replica, quant_ffn numerics).
+    Dropped slots are never binned, so their rows are zero on both sides.
+    Returns [2E, C, D] in x.dtype."""
+    e_n = w1.shape[0]
+    assert x.shape[0] == 2 * e_n, \
+        f"ref_grouped_ffn: expected {2 * e_n} groups, got {x.shape[0]}"
+    full = ref_expert_ffn(x[:e_n], w1, w3, w2).astype(jnp.float32)
+    deg = dequant_swiglu(x[e_n:], w1_q, w1_s, w3_q, w3_s, w2_q, w2_s)
+    return jnp.concatenate([full, deg], axis=0).astype(x.dtype)
 
 
 def ref_wkv_chunk(rt, kt, v, ke, lae, dg, s0):

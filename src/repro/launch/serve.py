@@ -156,6 +156,11 @@ def main():
                          "expert after serving its slot from the quant tier "
                          "(auto: on exactly when --miss-policy cost and a "
                          "tier is attached)")
+    ap.add_argument("--fused-dispatch", action="store_true",
+                    help="single-dispatch hot path: compute full-precision,"
+                         " buddy, and degraded slots in ONE grouped step "
+                         "(kernels/grouped_ffn.py) instead of three "
+                         "dispatches; off = bit-identical pre-fused graph")
     ap.add_argument("--prefetch-min-saving", type=float, default=-1.0,
                     help="cost-ranked prefetch: skip candidates whose "
                          "expected stall saved (P(use) x miss cost) is at "
@@ -184,7 +189,8 @@ def main():
                          mode=args.policy, quant_tier=args.quant_tier,
                          miss_policy=args.miss_policy,
                          stall_per_quality=args.stall_per_quality,
-                         drop_loss=args.drop_loss)
+                         drop_loss=args.drop_loss,
+                         use_fused_dispatch=args.fused_dispatch)
     tier = None
     if args.quant_tier != "off":
         tier = TieredExpertStore(

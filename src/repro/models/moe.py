@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.configs.base import MoEConfig
 from repro.core.policy import BuddyPolicy
 from repro.core.substitute import SubstituteResult, substitute
+from repro.kernels.ref import dequant_swiglu
 from repro.models.common import dense_init, shard, swiglu
 
 
@@ -116,22 +117,113 @@ def router_topk(router_w, x_flat, top_k: int, jitter_key=None, jitter=0.0):
 def _degraded_outputs(quant: dict, x_flat: jax.Array, e_flat: jax.Array):
     """Per-slot SwiGLU against the resident quant-replica tier: [T*K, D] f32.
 
-    Gathers each slot's TRUE expert from the int8/int4 tier (dequant applied
-    post-matmul — scales are per output channel) so a miss is computed
-    immediately at degraded fidelity instead of stalling on PCIe. The jnp
-    reference path; kernels/quant_ffn.py is the fused TPU version over
-    dispatch buffers."""
+    Gathers each slot's TRUE expert from the int8/int4 tier so a miss is
+    computed immediately at degraded fidelity instead of stalling on PCIe.
+    The math lives in kernels/ref.dequant_swiglu — ONE reference shared with
+    the quant_ffn / grouped_ffn oracles, so the in-model fallback and the
+    kernel oracles cannot drift."""
     xr = jnp.repeat(x_flat.astype(jnp.float32),
                     e_flat.shape[0] // x_flat.shape[0], axis=0)  # [T*K, D]
-    h = jax.nn.silu(jnp.einsum("td,tdf->tf", xr,
-                               quant["w1_q"][e_flat].astype(jnp.float32))
-                    * quant["w1_s"][e_flat])
-    g = jnp.einsum("td,tdf->tf", xr,
-                   quant["w3_q"][e_flat].astype(jnp.float32)) \
-        * quant["w3_s"][e_flat]
-    return jnp.einsum("tf,tfd->td", h * g,
-                      quant["w2_q"][e_flat].astype(jnp.float32)) \
-        * quant["w2_s"][e_flat]
+    return dequant_swiglu(xr[:, None, :],
+                          quant["w1_q"][e_flat], quant["w1_s"][e_flat],
+                          quant["w3_q"][e_flat], quant["w3_s"][e_flat],
+                          quant["w2_q"][e_flat], quant["w2_s"][e_flat])[:, 0]
+
+
+def _fused_dispatch(params: dict, x_flat, new_idx, degraded, skip,
+                    run_degraded: bool, use_kernel: bool, cap: int):
+    """The single-dispatch hot path: per-slot outputs [T*K, D] for ALL
+    outcome classes in one compute step.
+
+    new_idx [T, K] — resolved expert ids (buddy slots already rewritten to
+    the substituted id, so full-precision and buddy slots are the same
+    class); degraded [T, K] — slots served from the quant replica at their
+    TRUE id; skip [T, K] — slots whose mixture weight is zero (cost-argmin
+    drops and fallback='drop' misses): they are never binned/computed.
+
+    use_kernel=False: the jnp megastep — gather each slot's operands once,
+    SELECTED by outcome class (fp table at the resolved id, or the dequant-
+    scaled replica at the true id), then one SwiGLU einsum chain. This
+    replaces fp-compute-over-all-slots PLUS quant-compute-over-all-slots
+    with exactly one compute per slot.
+
+    use_kernel=True: bin slots by (expert, class) into a [2E, cap, D]
+    buffer and run kernels/grouped_ffn.py — one pallas_call, one scatter,
+    one gather. Returns (y_rep [T*K, D], n_capacity_dropped [])."""
+    t_n, d = x_flat.shape
+    k_n = new_idx.shape[1]
+    e_n = params["w1"].shape[0]
+    e_flat = new_idx.reshape(-1)                                   # [N]
+    n = e_flat.shape[0]
+    deg_f = degraded.reshape(-1) if run_degraded \
+        else jnp.zeros((n,), bool)
+    skip_f = skip.reshape(-1)
+
+    if not use_kernel:
+        # -- jnp megastep: weights-as-operands by outcome class ---------
+        xr = jnp.repeat(x_flat, k_n, axis=0)                       # [N, D]
+        w1s = params["w1"][e_flat]                                 # [N, D, F]
+        w3s = params["w3"][e_flat]
+        w2s = params["w2"][e_flat]
+        if run_degraded:
+            q = params["quant"]
+            sel = deg_f[:, None, None]
+            # per-output-channel scales commute with the contraction, so
+            # dequantizing the operand pre-matmul == the reference's
+            # post-matmul placement (kernels/ref.dequant_swiglu)
+            w1s = jnp.where(sel, (q["w1_q"][e_flat].astype(jnp.float32)
+                                  * q["w1_s"][e_flat][:, None, :]
+                                  ).astype(w1s.dtype), w1s)
+            w3s = jnp.where(sel, (q["w3_q"][e_flat].astype(jnp.float32)
+                                  * q["w3_s"][e_flat][:, None, :]
+                                  ).astype(w3s.dtype), w3s)
+            w2s = jnp.where(sel, (q["w2_q"][e_flat].astype(jnp.float32)
+                                  * q["w2_s"][e_flat][:, None, :]
+                                  ).astype(w2s.dtype), w2s)
+        h = jax.nn.silu(jnp.einsum("td,tdf->tf", xr, w1s,
+                                   preferred_element_type=jnp.float32))
+        g = jnp.einsum("td,tdf->tf", xr, w3s,
+                       preferred_element_type=jnp.float32)
+        hg = (h * g).astype(x_flat.dtype)
+        hg = shard(hg, None, "dff")
+        y_rep = jnp.einsum("tf,tfd->td", hg, w2s,
+                           preferred_element_type=jnp.float32
+                           ).astype(x_flat.dtype)
+        # skipped slots carry zero mixture weight; zero the output too so
+        # the megastep's per-slot provenance matches the kernel path
+        y_rep = jnp.where(skip_f[:, None], 0.0, y_rep)
+        return y_rep, jnp.zeros((), jnp.int32)
+
+    # -- Pallas grouped kernel: bin by (resolved expert, class) ---------
+    grp = jnp.where(deg_f, e_flat + e_n, e_flat)
+    grp = jnp.where(skip_f, 2 * e_n, grp)          # out of range: unbinned
+    onehot = jax.nn.one_hot(grp, 2 * e_n, dtype=jnp.float32)       # [N, 2E]
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1).astype(jnp.int32) - 1
+    kept = (pos >= 0) & (pos < cap)
+    n_cap_dropped = (pos >= cap).sum()
+    pos_safe = jnp.where(kept, pos, cap)
+    xr = jnp.repeat(x_flat, k_n, axis=0)                           # [N, D]
+    buf = jnp.zeros((2 * e_n, cap, d), x_flat.dtype) \
+        .at[grp, pos_safe].set(xr, mode="drop")
+    if run_degraded:
+        q = params["quant"]
+        qargs = (q["w1_q"], q["w1_s"], q["w3_q"], q["w3_s"],
+                 q["w2_q"], q["w2_s"])
+    else:
+        # no tier attached: the degraded half of the grid is empty; feed
+        # zero replicas (constant-folded) so the kernel signature is static
+        f_n = params["w1"].shape[2]
+        qargs = (jnp.zeros((e_n, d, f_n), jnp.int8),
+                 jnp.ones((e_n, f_n), jnp.float32),
+                 jnp.zeros((e_n, d, f_n), jnp.int8),
+                 jnp.ones((e_n, f_n), jnp.float32),
+                 jnp.zeros((e_n, f_n, d), jnp.int8),
+                 jnp.ones((e_n, d), jnp.float32))
+    from repro.kernels import ops as kops
+    out_buf = kops.grouped_ffn(buf, params["w1"], params["w3"],
+                               params["w2"], *qargs)
+    y_rep = out_buf.at[grp, pos_safe].get(mode="fill", fill_value=0)
+    return y_rep.astype(x_flat.dtype), n_cap_dropped.astype(jnp.int32)
 
 
 def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
@@ -212,6 +304,43 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         # counterpart of the global fallback='drop' above)
         weights = jnp.where(dropped, 0.0, weights)
         weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # ---------------- single-dispatch fused hot path ----------------------
+    # One compute step for the whole four-way miss outcome: full-precision
+    # and buddy slots read the fp table at the RESOLVED id, degraded slots
+    # read the quant replica at the TRUE id, dropped slots (zero mixture
+    # weight) are skipped entirely. Replaces the three-dispatch split below
+    # (expert_ffn path + buddy-replica einsum + separate degraded pass).
+    if policy is not None and policy.use_fused_dispatch:
+        # slots whose mixture weight was zeroed above — never computed
+        skip = dropped
+        if policy.fallback == "drop":
+            skip = skip | missed
+        if dropless or (x.ndim == 3 and x.shape[1] == 1):
+            cap = t_n * k_n                       # decode / chunked prefill
+        else:
+            cap = int(max(k_n, t_n * k_n / e_n * capacity_factor))
+            cap = min(t_n * k_n, -(-cap // 8) * 8)
+        y_rep, n_dropped = _fused_dispatch(
+            params, x_flat, new_idx, degraded, skip,
+            run_degraded, use_kernel, cap)
+        y = (y_rep.reshape(t_n, k_n, d)
+             * weights[..., None].astype(x.dtype)).sum(1)
+        if cfg.num_shared_experts and "shared" in params:
+            y = y + swiglu(x_flat, params["shared"]["w1"],
+                           params["shared"]["w3"], params["shared"]["w2"])
+        p_mean = jax.nn.softmax(logits, axis=-1).mean(0)
+        onehot_f = jax.nn.one_hot(new_idx.reshape(-1), e_n,
+                                  dtype=jnp.float32)
+        f_frac = onehot_f.reshape(t_n, k_n, e_n).sum(1).mean(0)
+        lb = e_n * jnp.sum(f_frac * p_mean)
+        miss_per_expert = jnp.zeros((e_n,), jnp.int32) \
+            .at[idx.reshape(-1)].add(missed.reshape(-1).astype(jnp.int32))
+        aux = MoEAux(lb, new_idx, idx, probs, substituted.sum(),
+                     missed.sum(), n_dropped, miss_per_expert,
+                     substituted, missed, degraded.sum(), degraded,
+                     dropped.sum(), dropped)
+        return y.reshape(orig_shape), aux
 
     # ---------------- active-expert gather (tiny-batch decode) -----------
     # When the whole batch selects fewer expert-slots than there are experts

@@ -8,7 +8,8 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import (FLOORS, compare,  # noqa: E402
+from benchmarks.check_regression import (FLOORS, KIND_PATHS,  # noqa: E402
+                                         compare, extract_kernel_metrics,
                                          extract_metrics, inject_regression)
 
 
@@ -83,6 +84,58 @@ def test_absolute_floor_masks_noise():
     assert FLOORS["nll_absdelta"] > 2e-4
     rows, bad = compare(base, cur)
     assert not bad and rows[0][4] == "ok"
+
+
+def _kernel_results():
+    """Minimal bench_kernels-shaped results dict."""
+    return {
+        "seed": 0,
+        "kernels": {"expert_ffn": {"interp_us": 900.0, "xla_ref_us": 200.0}},
+        "decode_step": {
+            "shape": {"num_experts": 16},
+            "zero_miss": {"unfused_us": 1000.0, "fused_us": 420.0,
+                          "step_time_ratio": 0.42, "mix": {}},
+            "mixed25": {"unfused_us": 1000.0, "fused_us": 610.0,
+                        "step_time_ratio": 0.61, "mix": {}},
+        },
+    }
+
+
+def test_extract_kernel_metrics_gates_only_ratios():
+    """Raw microsecond timings are host-dependent noise; only the
+    fused/unfused step-time ratios are gateable."""
+    m = extract_kernel_metrics(_kernel_results())
+    assert m == {"decode_step.step_time_ratio.zero_miss": 0.42,
+                 "decode_step.step_time_ratio.mixed25": 0.61}
+    assert not any("interp" in k or "_us" in k for k in m)
+
+
+def test_kernel_ratio_regression_trips_above_floor():
+    m = extract_kernel_metrics(_kernel_results())
+    # +0.05 absolute is under the 0.15 jitter floor -> ok
+    rows, bad = compare(m, {k: v + 0.05 for k, v in m.items()})
+    assert not bad and all(r[4] == "ok" for r in rows)
+    # +0.25 absolute (>15% rel AND > floor) -> regression
+    rows, bad = compare(m, {k: v + 0.25 for k, v in m.items()})
+    assert bad and all(r[4] == "REGRESSION" for r in rows)
+    # the self-test injection must also trip
+    _, bad = compare(m, inject_regression(m, 1.3))
+    assert bad
+
+
+def test_kernel_baseline_committed_and_consistent():
+    """The committed kernels baseline must exist, parse, and gate the same
+    metric names the extractor produces."""
+    import json
+    baseline_path = KIND_PATHS["kernels"][1]
+    assert os.path.exists(baseline_path), baseline_path
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    extracted = extract_kernel_metrics(_kernel_results())
+    assert set(baseline) >= set(extracted)
+    for name, val in baseline.items():
+        assert name.startswith("decode_step.step_time_ratio.")
+        assert 0.0 < val < 2.0, (name, val)
 
 
 def test_missing_metric_fails():

@@ -116,6 +116,76 @@ def test_buddy_kernel_matches_core_substitute():
                                   np.asarray(res.substituted))
 
 
+def _grouped_setup(rng, e, c, d, f, dtype=jnp.float32):
+    from repro.core.quantize import quantize_expert_ffn
+    x = jnp.asarray((rng.normal(size=(2 * e, c, d)) * 0.1), dtype)
+    w1 = (rng.normal(size=(e, d, f)) * 0.05).astype(np.float32)
+    w3 = (rng.normal(size=(e, d, f)) * 0.05).astype(np.float32)
+    w2 = (rng.normal(size=(e, f, d)) * 0.05).astype(np.float32)
+    quant = quantize_expert_ffn(jnp.asarray(w1), jnp.asarray(w3),
+                                jnp.asarray(w2), 8)
+    fp = tuple(jnp.asarray(w, dtype) for w in (w1, w3, w2))
+    q = (quant["w1_q"], quant["w1_s"], quant["w3_q"], quant["w3_s"],
+         quant["w2_q"], quant["w2_s"])
+    return x, fp, q
+
+
+@pytest.mark.parametrize("e,c,d,f,bc,bf", [
+    (1, 8, 32, 64, 8, 32),
+    (4, 96, 128, 384, 32, 128),
+    (8, 100, 64, 200, 64, 64),    # non-divisible c/f -> padding path
+])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-4),
+                                       (jnp.bfloat16, 5e-2)])
+def test_grouped_ffn_sweep(e, c, d, f, bc, bf, dtype, tol):
+    """Groups [0, E) must match the fp expert_ffn numerics, [E, 2E) the
+    quant_ffn numerics — one launch, both outcome classes."""
+    rng = np.random.default_rng(e * 77 + c)
+    x, fp, q = _grouped_setup(rng, e, c, d, f, dtype)
+    got = ops.grouped_ffn(x, *fp, *q, block_c=bc, block_f=bf)
+    want = ref.ref_grouped_ffn(x, *fp, *q)
+    assert got.shape == (2 * e, c, d) and got.dtype == x.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_grouped_ffn_matches_single_class_kernels():
+    """The fused kernel's two halves equal the standalone kernels on the
+    same operands (class mix must not perturb either class's math)."""
+    rng = np.random.default_rng(5)
+    e, c, d, f = 4, 32, 48, 96
+    x, fp, q = _grouped_setup(rng, e, c, d, f)
+    got = ops.grouped_ffn(x, *fp, *q, block_c=16, block_f=32)
+    full = ops.expert_ffn(x[:e], *fp, block_c=16, block_f=32)
+    deg = ops.quant_ffn(x[e:], *q, block_c=16, block_f=32)
+    np.testing.assert_allclose(np.asarray(got[:e]), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got[e:]), np.asarray(deg),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("empty", ["fp", "degraded", "both"])
+def test_grouped_ffn_empty_groups(empty):
+    """All-zero rows (unbinned capacity slots / an outcome class with no
+    slots this step) must produce exactly zero output — the dispatch gather
+    relies on it."""
+    rng = np.random.default_rng(9)
+    e, c, d, f = 2, 16, 32, 64
+    x, fp, q = _grouped_setup(rng, e, c, d, f)
+    mask = np.ones((2 * e, 1, 1), np.float32)
+    if empty in ("fp", "both"):
+        mask[:e] = 0.0
+    if empty in ("degraded", "both"):
+        mask[e:] = 0.0
+    x = x * jnp.asarray(mask)
+    got = np.asarray(ops.grouped_ffn(x, *fp, *q, block_c=16, block_f=32))
+    want = np.asarray(ref.ref_grouped_ffn(x, *fp, *q))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    zeroed = np.where(mask[:, 0, 0] == 0.0)[0]
+    np.testing.assert_array_equal(got[zeroed], 0.0)
+
+
 @pytest.mark.parametrize("bh,n,c,d", [(1, 1, 32, 64), (3, 4, 32, 64),
                                       (2, 2, 32, 128), (4, 8, 16, 32)])
 def test_wkv_chunk_sweep(bh, n, c, d):

@@ -1,0 +1,193 @@
+"""Property-style invariants of substitute()'s four-way outcome masks.
+
+The fused dispatch consumes these masks as a PARTITION — every non-resident
+routed slot must resolve to exactly one of {substituted, degraded, missed
+(fetch), dropped}, and a substituted slot's final id must be resident.
+Checked under both miss_policy='precedence' and 'cost' over randomized
+shapes/residency/tables (hypothesis, or the seeded fallback in
+tests/_hypothesis_stub.py), plus deterministic tie-break edge cases of the
+cost argmin."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.policy import BuddyPolicy
+from repro.core.substitute import substitute
+
+settings.register_profile("props", max_examples=25)
+settings.load_profile("props")
+
+
+def _random_case(rng, t, e, k, r):
+    idx = np.stack([rng.choice(e, k, replace=False)
+                    for _ in range(t)]).astype(np.int32)
+    logits = rng.normal(size=(t, k)).astype(np.float32)
+    resident = rng.random(e) < rng.uniform(0.1, 0.9)
+    table = np.full((e, r), -1, np.int32)
+    q = np.zeros((e, r), np.float32)
+    for i in range(e):
+        n = int(rng.integers(0, min(r, e - 1) + 1))
+        if n:
+            peers = rng.choice([x for x in range(e) if x != i], n,
+                               replace=False)
+            table[i, :n] = peers
+            q[i, :n] = np.sort(rng.random(n).astype(np.float32))[::-1]
+    return idx, logits, resident, table, q
+
+
+def _masks(res):
+    sub = np.asarray(res.substituted)
+    missed = np.asarray(res.missed)
+    deg = np.asarray(res.degraded)
+    drp = (np.asarray(res.dropped) if res.dropped is not None
+           else np.zeros_like(missed))
+    return sub, missed, deg, drp
+
+
+def _check_partition(res, idx, resident, rho):
+    """The shared invariant block for every drawn case."""
+    sub, missed, deg, drp = _masks(res)
+    nonres = ~resident[idx]
+    # pairwise disjoint
+    for i, a in enumerate((sub, missed, deg, drp)):
+        for b in (sub, missed, deg, drp)[i + 1:]:
+            assert not (a & b).any(), "outcome masks overlap"
+    # union covers every non-resident slot and nothing else
+    np.testing.assert_array_equal(sub | missed | deg | drp, nonres)
+    # substituted => final id is resident; untouched otherwise
+    final = np.asarray(res.indices)
+    assert resident[final[sub]].all()
+    np.testing.assert_array_equal(final[~sub], idx[~sub])
+    # degraded / dropped slots keep their TRUE (non-resident) id
+    assert (~resident[final[deg]]).all() if deg.any() else True
+    # the rho budget bounds substitutions per token
+    assert (sub.sum(axis=1) <= rho).all()
+
+
+@given(st.data())
+def test_precedence_masks_partition(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31 - 1)))
+    t = data.draw(st.integers(1, 12))
+    e = data.draw(st.integers(2, 16))
+    k = data.draw(st.integers(1, min(4, e)))
+    r = data.draw(st.integers(1, 6))
+    rho = data.draw(st.integers(0, k))
+    with_tier = data.draw(st.booleans())
+    idx, logits, resident, table, q = _random_case(rng, t, e, k, r)
+    quant_ok = (rng.random(e) < 0.5) if with_tier else None
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=rho, H=max(r, 1))
+    res = substitute(jnp.asarray(idx), jnp.asarray(logits),
+                     jnp.asarray(resident), jnp.asarray(table),
+                     jnp.asarray(q), pol,
+                     quant_ok=None if quant_ok is None
+                     else jnp.asarray(quant_ok))
+    _check_partition(res, idx, resident, rho)
+    if quant_ok is None:
+        assert not np.asarray(res.degraded).any()
+
+
+@given(st.data())
+def test_cost_masks_partition(data):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31 - 1)))
+    t = data.draw(st.integers(1, 12))
+    e = data.draw(st.integers(2, 16))
+    k = data.draw(st.integers(1, min(4, e)))
+    r = data.draw(st.integers(1, 6))
+    rho = data.draw(st.integers(0, k))
+    idx, logits, resident, table, q = _random_case(rng, t, e, k, r)
+    # finite fetch always; fid sometimes infinite (no usable replica)
+    fetch = rng.uniform(0.0, 0.1, e).astype(np.float32)
+    fid = np.where(rng.random(e) < 0.5,
+                   rng.uniform(0.0, 0.1, e), np.inf).astype(np.float32)
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=rho, H=max(r, 1),
+                      miss_policy="cost",
+                      stall_per_quality=float(rng.uniform(0.01, 0.1)),
+                      drop_loss=float(rng.uniform(0.0, 2.0)))
+    res = substitute(jnp.asarray(idx), jnp.asarray(logits),
+                     jnp.asarray(resident), jnp.asarray(table),
+                     jnp.asarray(q), pol,
+                     fid_cost=jnp.asarray(fid), fetch_cost=jnp.asarray(fetch))
+    _check_partition(res, idx, resident, rho)
+
+
+@given(st.data())
+def test_mode_none_masks_partition(data):
+    """mode='none' (no rerouting) still partitions misses across the
+    degraded tier and the fallback, in both miss policies."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31 - 1)))
+    t = data.draw(st.integers(1, 10))
+    e = data.draw(st.integers(2, 12))
+    k = data.draw(st.integers(1, min(3, e)))
+    cost = data.draw(st.booleans())
+    idx, logits, resident, table, q = _random_case(rng, t, e, k, 2)
+    kw = {}
+    if cost:
+        pol = BuddyPolicy(mode="none", miss_policy="cost")
+        kw = dict(fid_cost=jnp.asarray(
+                      rng.uniform(0.0, 0.1, e).astype(np.float32)),
+                  fetch_cost=jnp.asarray(
+                      rng.uniform(0.0, 0.1, e).astype(np.float32)))
+    else:
+        pol = BuddyPolicy(mode="none")
+        kw = dict(quant_ok=jnp.asarray(rng.random(e) < 0.5))
+    res = substitute(jnp.asarray(idx), jnp.asarray(logits),
+                     jnp.asarray(resident), jnp.asarray(table),
+                     jnp.asarray(q), pol, **kw)
+    _check_partition(res, idx, resident, rho=0)
+    assert not np.asarray(res.substituted).any()
+
+
+def _one_slot_cost_case(q_top, fid, fetch, drop_loss=1.0, resident_buddy=True):
+    """One token: slot 0 routes to non-resident expert 0 (buddy = expert 1);
+    slot 1 routes to resident expert 2 (inert, keeps the TAE gate open —
+    a single-slot token has zero activation entropy)."""
+    idx = jnp.asarray([[0, 2]], jnp.int32)
+    logits = jnp.asarray([[2.0, 0.0]], jnp.float32)
+    resident = jnp.asarray([False, resident_buddy, True])
+    table = jnp.asarray([[1], [-1], [-1]], jnp.int32)
+    q = jnp.asarray([[q_top], [0.0], [0.0]], jnp.float32)
+    pol = BuddyPolicy(tau=0.0, beta=1.1, rho=1, H=1, miss_policy="cost",
+                      stall_per_quality=0.05, drop_loss=drop_loss)
+    res = substitute(idx, logits, resident, table, q, pol,
+                     fid_cost=jnp.asarray([fid, jnp.inf, jnp.inf],
+                                          jnp.float32),
+                     fetch_cost=jnp.asarray([fetch] * 3, jnp.float32))
+    assert bool(res.allowed.all()), "TAE gate unexpectedly closed"
+    # only slot 0 is under test; slot 1 must stay untouched
+    for m in _masks(res):
+        assert not m[:, 1].any()
+    return res
+
+
+def test_cost_tiebreak_prefers_earlier_outcome():
+    """At exactly equal cost the argmin must resolve toward the EARLIER
+    outcome: buddy > degraded > fetch > drop (the transfer-free reroute
+    wins a tie; fetch beats a lossy drop)."""
+    # q=0 -> buddy cost = 0.05 exactly; all four options cost 0.05
+    res = _one_slot_cost_case(q_top=0.0, fid=0.05, fetch=0.05, drop_loss=1.0)
+    sub, missed, deg, drp = _masks(res)
+    assert sub[0, 0] and not (missed | deg | drp)[0, 0]
+    # no eligible buddy: degraded wins the three-way tie
+    res = _one_slot_cost_case(q_top=0.0, fid=0.05, fetch=0.05,
+                              resident_buddy=False)
+    sub, missed, deg, drp = _masks(res)
+    assert deg[0, 0] and not (sub | missed | drp)[0, 0]
+    # no replica either: fetch beats drop at equal cost
+    res = _one_slot_cost_case(q_top=0.0, fid=float("inf"), fetch=0.05,
+                              resident_buddy=False)
+    sub, missed, deg, drp = _masks(res)
+    assert missed[0, 0] and not (sub | deg | drp)[0, 0]
+
+
+def test_cost_strict_preference_overrides_order():
+    """A strictly cheaper LATER outcome must win (the tie-break is only a
+    tie-break): a nearly-landed prefetch beats a worse buddy."""
+    res = _one_slot_cost_case(q_top=0.4, fid=float("inf"), fetch=0.001)
+    sub, missed, deg, drp = _masks(res)
+    assert missed[0, 0] and not (sub | deg | drp)[0, 0]
+    # and an effectively-free drop beats an expensive fetch
+    res = _one_slot_cost_case(q_top=0.0, fid=float("inf"), fetch=1.0,
+                              drop_loss=0.001, resident_buddy=False)
+    sub, missed, deg, drp = _masks(res)
+    assert drp[0, 0] and not (sub | missed | deg)[0, 0]
