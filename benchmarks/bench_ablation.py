@@ -60,6 +60,7 @@ def run(out_rows):
         params, jnp.asarray(eval_data))
     ref_top1 = np.asarray(ref_logits.argmax(-1))
     res = {}
+    t0_all = time.time()
 
     # ---- (a) gate knob sweeps ----
     t0 = time.time()
@@ -119,6 +120,6 @@ def run(out_rows):
     out_rows.append(("ablation.prefetchers", (time.time() - t0) * 1e6 / 10,
                      "see bench/ablation.json"))
 
-    with open(os.path.join(common.CACHE_DIR, "ablation.json"), "w") as f:
-        json.dump(res, f, indent=1)
+    common.write_results("ablation.json", res, config="ablation", seed=0,
+                         t0=t0_all)
     return res

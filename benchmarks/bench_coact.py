@@ -41,6 +41,6 @@ def run(out_rows):
                          for l in range(cfg.num_layers)]))
     out_rows.append(("coact.top8_coverage", (time.time() - t0) * 1e6,
                      f"{cov:.4f}"))
-    with open(os.path.join(common.CACHE_DIR, "coact.json"), "w") as f:
-        json.dump(res, f, indent=1)
+    common.write_results("coact.json", res, config="coact", seed=0,
+                         t0=t0)
     return res

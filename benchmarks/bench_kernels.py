@@ -178,15 +178,16 @@ def _decode_step_bench(out_rows, results, rng, smoke: bool):
 
 
 def run(out_rows, seed: int = 0, smoke: bool = False):
+    t0 = time.time()
     rng = np.random.default_rng(seed)
     results = {"seed": seed, "smoke": smoke, "interpret_note": INTERP_NOTE,
                "kernels": {}, "decode_step": {}}
     _bench_kernels(out_rows, results, rng, smoke)
     print("  -- decode step: three-dispatch vs single-dispatch (jit XLA) --")
     _decode_step_bench(out_rows, results, rng, smoke)
-    os.makedirs(common.CACHE_DIR, exist_ok=True)
-    with open(OUT_PATH, "w") as fh:
-        json.dump(results, fh, indent=1, sort_keys=True)
+    common.write_results("kernels.json", results,
+                         config="smoke" if smoke else "full", seed=seed,
+                         t0=t0)
     print(f"  wrote {os.path.normpath(OUT_PATH)}")
     return results
 

@@ -99,8 +99,8 @@ def run(out_rows):
           f"{us:.0f}us  — vs ~{res['mixtral-8x7b']['on_demand_ms']:.1f}ms fetch")
     out_rows.append(("latency.substitute_us", us,
                      f"fetch_ms={res['mixtral-8x7b']['on_demand_ms']:.2f}"))
-    with open(os.path.join(common.CACHE_DIR, "latency.json"), "w") as f:
-        json.dump(res, f, indent=1)
+    common.write_results("latency.json", res, config="latency", seed=0,
+                         t0=t0)
     print(f"  (total {time.time()-t0:.1f}s)")
     return res
 

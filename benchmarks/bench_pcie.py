@@ -66,6 +66,5 @@ def run(out_rows):
               f"late-prefetch {bd['late_prefetch_stall_s']:.3f}s  "
               f"overlapped {bd['overlapped_s']:.3f}s")
     out_rows.append(("pcie.reduction", us, f"{reduction:.4f}"))
-    with open(os.path.join(common.CACHE_DIR, "pcie.json"), "w") as f:
-        json.dump(res, f, indent=1)
+    common.write_results("pcie.json", res, config="pcie", seed=0, t0=t0)
     return res

@@ -47,8 +47,6 @@ results/bench/serving.json.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
@@ -61,6 +59,7 @@ from repro.models import transformer
 from repro.runtime.cache import ExpertCache
 from repro.runtime.prefetch import (AdaptiveBudgetController,
                                     PrevStepPredictor)
+from repro.runtime.telemetry import Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
 from repro.serving.engine import ServeEngine
 from repro.serving.scheduler import (ContinuousScheduler, PoissonArrivals,
@@ -405,10 +404,46 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
                     f"serving.{key}.nll_absdelta_costpolicy",
                     d_cost, f"precedence={d_prec:.4f}"))
 
-    os.makedirs(common.CACHE_DIR, exist_ok=True)
-    with open(os.path.join(common.CACHE_DIR, "serving.json"), "w") as f:
-        json.dump(results, f, indent=1, default=str)
-    print(f"  (total {time.time()-t0:.1f}s)")
+    # -- telemetry overhead A/B: the flight recorder is a pure observer of
+    # the SIMULATED timeline, so a telemetry-on engine must agree with a
+    # telemetry-off twin on the simulated clock EXACTLY (sim_step_ratio ==
+    # 1.0 — gated against the committed baseline by check_regression.py)
+    # and on every generated token. A FRESH MarkovLM drives the probe:
+    # extra draws from the shared ``lm`` would advance its RNG and silently
+    # change every sweep above at the same --seed.
+    probe_toks = MarkovLM(cfg.vocab_size, seed=seed + 101).sample(slots, 10)
+
+    def _ab_run(tele):
+        eng = _engine(cfg, params, tables, cache_rates[0], prefetch_k,
+                      seed=seed)
+        if tele is not None:
+            eng.telemetry = tele
+            eng._wire_telemetry()
+        out = eng.generate(probe_toks, max_new_tokens=max_new)
+        return np.asarray(out), eng
+
+    out_off, eng_off = _ab_run(None)
+    out_on, eng_on = _ab_run(Telemetry.with_trace(
+        predictor_label="prev_step", num_layers=cfg.num_layers,
+        num_experts=cfg.moe.num_experts))
+    s_off, s_on = eng_off.summary(), dict(eng_on.summary())
+    s_on.pop("telemetry", None)
+    identical = bool(np.array_equal(out_off, out_on) and s_off == s_on)
+    off_s, on_s = eng_off.stats.sim_time_s, eng_on.stats.sim_time_s
+    results["telemetry_overhead"] = {
+        "sim_elapsed_off_s": off_s, "sim_elapsed_on_s": on_s,
+        "sim_step_ratio": on_s / max(off_s, 1e-12),
+        "summaries_bit_identical": identical}
+    print(f"  telemetry A/B: sim_step_ratio "
+          f"{results['telemetry_overhead']['sim_step_ratio']:.6f} "
+          f"(bit-identical: {identical})")
+
+    path = common.write_results(
+        "serving.json", results,
+        config=f"smoke={smoke} loads={loads} cache_rates={cache_rates} "
+               f"quant_tier={quant_tier} cost_policy={cost_policy}",
+        seed=seed, t0=t0)
+    print(f"  (total {time.time()-t0:.1f}s; wrote {path})")
     return results
 
 

@@ -26,6 +26,5 @@ def run(out_rows):
                                for l in range(cfg.num_layers)]))
     out_rows.append(("skew.mean_gini", (time.time() - t0) * 1e6,
                      f"{mean_gini:.4f}"))
-    with open(os.path.join(common.CACHE_DIR, "skew.json"), "w") as f:
-        json.dump(res, f, indent=1)
+    common.write_results("skew.json", res, config="skew", seed=0, t0=t0)
     return res

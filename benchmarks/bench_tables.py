@@ -63,6 +63,7 @@ def _run_method(cfg, params, lm, tables, policy, rate, eval_data, ref_top1):
 
 
 def run(out_rows):
+    t0_all = time.time()
     cfg, params, lm = common.get_model()
     rec, q = common.get_profile(cfg, params, lm)
     sims = common.get_sims(cfg, params, lm)
@@ -106,7 +107,6 @@ def run(out_rows):
             print(f"  c={rate} {name:22s} nll {r['nll']:.4f} "
                   f"agree {r['top1_agree']:.3f} t/s {r['tokens_per_s']:8.1f} "
                   f"sub {r['n_sub']:4d} fetch {r['n_miss_fetch']:4d}")
-    os.makedirs(common.CACHE_DIR, exist_ok=True)
-    with open(os.path.join(common.CACHE_DIR, "tables234.json"), "w") as f:
-        json.dump(results, f, indent=1)
+    common.write_results("tables234.json", results, config="tables234",
+                         seed=0, t0=t0_all)
     return results

@@ -75,6 +75,9 @@ FLOORS = {
     "goodput_rps": 0.05,             # requests / simulated second
     "nll_absdelta": 0.02,            # nats on the smoke NLL probe
     "step_time_ratio": 0.15,         # fused/unfused ratio — wall-clock jitter
+    "sim_step_ratio": 0.01,          # telemetry-on/off SIMULATED time ratio:
+                                     # deterministic clock, must stay 1.0 —
+                                     # the floor only absorbs float residue
 }
 
 
@@ -114,6 +117,13 @@ def extract_metrics(results: dict) -> Dict[str, float]:
                 cp["cost"]["goodput_rps"]
             out[f"{key}.nll_absdelta.cost_policy"] = \
                 abs(cp["nll"]["cost"] - cp["nll"]["full_residency"])
+    # telemetry overhead gate: the flight recorder must not move the
+    # SIMULATED clock — bench_serving's on/off A/B reports the ratio of
+    # simulated elapsed times, which is 1.0 exactly when telemetry is a
+    # pure observer (the committed baseline pins it there)
+    to = results.get("telemetry_overhead")
+    if isinstance(to, dict) and "sim_step_ratio" in to:
+        out["telemetry_overhead.sim_step_ratio"] = to["sim_step_ratio"]
     return out
 
 

@@ -3,7 +3,9 @@
 profile and CFT buddy tables. Trained once and cached on disk."""
 from __future__ import annotations
 
+import json
 import os
+import subprocess
 import time
 
 import jax
@@ -89,6 +91,42 @@ def get_tables(cfg, q, rec, alpha: float, k_max: int,
                           output_sim=output_sim)
     save_tables(path, t)
     return t
+
+
+def git_sha() -> str:
+    """Short commit SHA of the working tree: git first, the CI-provided
+    GITHUB_SHA as fallback (artifact-only checkouts), else 'unknown'."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return os.environ.get("GITHUB_SHA", "unknown")[:12] or "unknown"
+
+
+def write_results(filename: str, results: dict, *, config: str = "",
+                  seed=None, t0=None) -> str:
+    """Provenance-stamped bench-result writer: every ``results/bench/*.json``
+    goes through here so each file records WHERE it came from — git SHA,
+    config/arm name, seed, and the bench's wall-clock duration (``t0`` from
+    ``time.time()`` at run start). Returns the written path."""
+    results = dict(results)
+    results["provenance"] = {
+        "git_sha": git_sha(),
+        "config": config,
+        "seed": seed,
+        "wall_s": round(time.time() - t0, 3) if t0 is not None else None,
+        "bench": os.path.basename(filename),
+    }
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    path = os.path.join(CACHE_DIR, filename)
+    with open(path, "w") as f:
+        json.dump(results, f, indent=2, default=str)
+    return path
 
 
 def timer(fn, *args, repeats: int = 5, warmup: int = 1):

@@ -4,6 +4,8 @@ configurable cache rate, with the full request/batcher plumbing.
 Run:  PYTHONPATH=src python examples/serve_buddymoe.py --cache-rate 0.5
       PYTHONPATH=src python examples/serve_buddymoe.py --continuous \
           --arrival-rate 400 --prefill-chunk 8
+      PYTHONPATH=src python examples/serve_buddymoe.py --continuous \
+          --telemetry on --trace-out serve_trace.json   # -> ui.perfetto.dev
 """
 import argparse
 import os
@@ -18,7 +20,9 @@ from benchmarks import common
 from repro.core import BuddyPolicy
 from repro.runtime.cache import ExpertCache
 from repro.runtime.prefetch import AdaptiveBudgetController, PrevStepPredictor
+from repro.runtime.telemetry import Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
+from repro.runtime.trace import export_trace
 from repro.serving.engine import ServeEngine
 from repro.serving.requests import Request, StaticBatcher
 from repro.serving.scheduler import (ContinuousScheduler, PoissonArrivals,
@@ -50,10 +54,16 @@ def build_engine(args):
     else:
         cache = ExpertCache(cfg.num_layers, cfg.moe.num_experts,
                             args.cache_rate, seed=0)
+    tele = None
+    if args.telemetry == "on" or args.trace_out:
+        make = Telemetry.with_trace if args.trace_out else Telemetry
+        tele = make(predictor_label="prev_step", num_layers=cfg.num_layers,
+                    num_experts=cfg.moe.num_experts)
     eng = ServeEngine(
         cfg, params, tables=tables, policy=policy, cache=cache, tier=tier,
         predictor=PrevStepPredictor(cfg.num_layers, cfg.moe.num_experts),
-        prefetch_k=args.prefetch, lookahead=args.lookahead, seed=0)
+        prefetch_k=args.prefetch, lookahead=args.lookahead, seed=0,
+        telemetry=tele)
     return cfg, lm, eng
 
 
@@ -93,6 +103,14 @@ def main():
     ap.add_argument("--stall-per-quality", type=float, default=0.05,
                     help="seconds of stall worth one unit of quality loss "
                          "(the cost model's single exchange rate)")
+    ap.add_argument("--telemetry", choices=["off", "on"], default="off",
+                    help="attach the flight recorder: calibration + prefetch "
+                         "meters printed after the run ('off' is the exact "
+                         "pre-telemetry code path — bit-identical)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="event-log export (implies --telemetry on): "
+                         "'*.jsonl' = JSONL, else Chrome/Perfetto "
+                         "trace_event JSON for https://ui.perfetto.dev")
     args = ap.parse_args()
 
     cfg, lm, eng = build_engine(args)
@@ -153,6 +171,20 @@ def main():
     print(f"stall breakdown: demand {bd['demand_stall_s']*1e3:.1f}ms  "
           f"late-prefetch {bd['late_prefetch_stall_s']*1e3:.1f}ms  "
           f"overlapped {bd['overlapped_s']*1e3:.1f}ms")
+
+    if eng.telemetry is not None:
+        cal = eng.telemetry.calibration.summary()
+        pf = eng.telemetry.prefetch.summary()
+        print("telemetry calibration: " + "; ".join(
+            f"{o} n={c['n']}"
+            + (f" |resid| {c['residual_abs_mean_s']*1e3:.3f}ms"
+               if c["n"] else "") for o, c in cal.items()))
+        print(f"telemetry prefetch: precision {pf['precision']:.3f} recall "
+              f"{pf['recall']:.3f} issued {pf['issued']} late {pf['late']}")
+        if args.trace_out:
+            n = export_trace(eng.telemetry.trace, args.trace_out)
+            print(f"wrote {n} trace events to {args.trace_out} "
+                  f"(load at https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,11 @@
     # trace of {t_arrival, prompt_len, max_new_tokens} rows
     PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
         --trace trace.jsonl --slots 4
+
+    # flight recorder: metrics + calibration in the summary, and a Perfetto
+    # trace of the run (load serve_trace.json at https://ui.perfetto.dev)
+    PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
+        --num-requests 16 --slots 4 --telemetry on --trace-out serve_trace.json
 """
 from __future__ import annotations
 
@@ -38,7 +43,9 @@ from repro.runtime.cache import ExpertCache
 from repro.runtime.prefetch import (AdaptiveBudgetController,
                                     CrossLayerPredictor, PrevStepPredictor,
                                     TopFreqPredictor)
+from repro.runtime.telemetry import Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
+from repro.runtime.trace import export_trace
 from repro.serving.engine import ServeEngine
 from repro.serving.scheduler import (BurstyArrivals, ContinuousScheduler,
                                      PoissonArrivals, RequestQueue, SLOConfig,
@@ -161,6 +168,18 @@ def main():
                          " buddy, and degraded slots in ONE grouped step "
                          "(kernels/grouped_ffn.py) instead of three "
                          "dispatches; off = bit-identical pre-fused graph")
+    # -- observability (runtime/telemetry.py + runtime/trace.py) ---------
+    ap.add_argument("--telemetry", choices=["off", "on"], default="off",
+                    help="attach the flight recorder: metrics registry, "
+                         "miss-cost calibration, and prefetch meters in the "
+                         "final summary ('off' runs the exact pre-telemetry "
+                         "code path — bit-identical outputs and timeline)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the event log here after the run (implies "
+                         "--telemetry on): '*.jsonl' = lossless JSONL, "
+                         "anything else = Chrome/Perfetto trace_event JSON "
+                         "— load it at https://ui.perfetto.dev or "
+                         "chrome://tracing")
     ap.add_argument("--prefetch-min-saving", type=float, default=-1.0,
                     help="cost-ranked prefetch: skip candidates whose "
                          "expected stall saved (P(use) x miss cost) is at "
@@ -212,12 +231,18 @@ def main():
                   else args.prefetch_k)
     predictor = PREDICTORS[args.predictor](n_moe, cfg.moe.num_experts)
     upgrade = {"auto": None, "on": True, "off": False}[args.upgrade_degraded]
+    tele = None
+    if args.telemetry == "on" or args.trace_out:
+        make = Telemetry.with_trace if args.trace_out else Telemetry
+        tele = make(predictor_label=args.predictor, num_layers=n_moe,
+                    num_experts=cfg.moe.num_experts)
     eng = ServeEngine(cfg, params, tables=tables, policy=policy,
                       cache=None if tier is not None else cache, tier=tier,
                       predictor=predictor, prefetch_k=prefetch_k,
                       lookahead=args.lookahead, upgrade_degraded=upgrade,
                       prefetch_min_saving=(None if args.prefetch_min_saving
-                                           < 0 else args.prefetch_min_saving))
+                                           < 0 else args.prefetch_min_saving),
+                      telemetry=tele)
 
     if args.mode == "continuous":
         _serve_continuous(args, cfg, eng, lm, prefetch_k)
@@ -238,6 +263,32 @@ def main():
               f"{t['tier_budget_split']['cache_slots_per_layer']} full "
               f"slots/layer left")
     print("sample output tokens:", out[0, -16:].tolist())
+    _report_telemetry(eng.telemetry, args.trace_out)
+
+
+def _report_telemetry(tele, trace_out):
+    """One-line calibration + prefetch digest, then the --trace-out export
+    (the full nested summary is already inside the engine summary JSON)."""
+    if tele is None:
+        return
+    cal = tele.calibration.summary()
+    parts = []
+    for o, c in cal.items():
+        p = f"{o} n={c['n']}"
+        if c["n"]:
+            p += f" |resid| {c['residual_abs_mean_s']*1e3:.3f}ms"
+        parts.append(p)
+    print("[telemetry] calibration: " + "; ".join(parts))
+    pf = tele.prefetch.summary()
+    print(f"[telemetry] prefetch[{pf['predictor']}]: precision "
+          f"{pf['precision']:.3f} recall {pf['recall']:.3f} issued "
+          f"{pf['issued']} used-in-time {pf['used_in_time']} late "
+          f"{pf['late']} expected-saved "
+          f"{pf['expected_stall_saved_s']*1e3:.2f}ms")
+    if trace_out:
+        n = export_trace(tele.trace, trace_out)
+        kind = "JSONL" if trace_out.endswith(".jsonl") else "Perfetto"
+        print(f"[telemetry] wrote {n} {kind} trace events to {trace_out}")
 
 
 def _serve_continuous(args, cfg, eng, lm, prefetch_k):
@@ -288,6 +339,7 @@ def _serve_continuous(args, cfg, eng, lm, prefetch_k):
           f"{s['ttft_s']['p99']*1e3:.2f}ms  "
           f"goodput {s['goodput_rps']:.1f} req/s  "
           f"SLO-met {s['slo_met_frac']*100:.0f}%")
+    _report_telemetry(eng.telemetry, args.trace_out)
 
 
 if __name__ == "__main__":

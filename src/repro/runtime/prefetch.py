@@ -312,10 +312,29 @@ class AdaptiveBudgetController:
     # -- actuation ------------------------------------------------------
     def apply(self, engine) -> PrefetchBudget:
         """Push the current budget into a ServeEngine and its transfer
-        scheduler (the runtime knobs the budget governs)."""
+        scheduler (the runtime knobs the budget governs). With a telemetry
+        bundle attached to the engine, the applied budget is mirrored to
+        gauges and — when it CHANGED — stamped as a trace instant on the
+        "engine" track (read-only observation; telemetry=None engines run
+        the identical path)."""
+        changed = (engine.prefetch_k != self.budget.prefetch_k
+                   or engine.lookahead != self.budget.lookahead)
         engine.prefetch_k = self.budget.prefetch_k
         engine.lookahead = self.budget.lookahead
         engine.scheduler.set_prefetch_cap(self.budget.max_inflight)
+        tele = getattr(engine, "telemetry", None)
+        if tele is not None:
+            tele.metrics.gauge("budget_prefetch_k").set(
+                self.budget.prefetch_k)
+            tele.metrics.gauge("budget_lookahead").set(self.budget.lookahead)
+            tele.metrics.gauge("budget_max_inflight").set(
+                self.budget.max_inflight)
+            if changed and tele.trace is not None:
+                tele.trace.instant(
+                    "engine", 0, "budget", "budget", engine.scheduler.now,
+                    prefetch_k=self.budget.prefetch_k,
+                    lookahead=self.budget.lookahead,
+                    max_inflight=self.budget.max_inflight)
         return self.budget
 
 

@@ -97,6 +97,10 @@ class TieredExpertStore:
         # engine attaches real scores = "never degrade" (conservative)
         self.fidelity = np.full((num_layers, num_experts), np.inf)
         self.degraded_tokens = 0
+        # optional runtime.telemetry.Telemetry bundle: note_degraded ticks
+        # a counter and set_coverage stamps a trace instant when attached;
+        # None (the default) leaves every path bit-identical
+        self.telemetry = None
 
     # -- calibration ----------------------------------------------------
     def attach_fidelity(self, fidelity: np.ndarray) -> None:
@@ -115,6 +119,8 @@ class TieredExpertStore:
         self.covered[:] = False
         top = np.argsort(-activity, axis=1)[:, :self.n_covered]
         np.put_along_axis(self.covered, top, True, axis=1)
+        if self.telemetry is not None:
+            self.telemetry.metrics.counter("tier_coverage_repicks").inc()
 
     def effective_fidelity(self, layer: Optional[int] = None) -> np.ndarray:
         """Fidelity with uncovered experts masked to inf — the form the
@@ -146,6 +152,9 @@ class TieredExpertStore:
     # -- accounting ------------------------------------------------------
     def note_degraded(self, n_slots: int) -> None:
         self.degraded_tokens += int(n_slots)
+        if self.telemetry is not None:
+            self.telemetry.metrics.counter("tier_degraded_slots").inc(
+                int(n_slots))
 
     def reset_counters(self) -> None:
         self.degraded_tokens = 0

@@ -63,6 +63,7 @@ class Transfer:
     start_s: float = -1.0           # first time the link served it
     done_s: float = -1.0
     state: str = QUEUED
+    event_seq: int = 0              # last event's scheduler sequence number
 
     @property
     def started(self) -> bool:
@@ -93,14 +94,23 @@ class TransferScheduler:
         self._by_key: Dict[Tuple[int, int], Transfer] = {}
         self._listeners: List[Callable[[str, Transfer], None]] = []
         self._next_tid = 0
+        self._event_seq = 0
+        self.trace = None           # optional FlightRecorder (runtime/trace)
 
     # -- wiring ---------------------------------------------------------
     def add_listener(self, fn: Callable[[str, Transfer], None]) -> None:
         self._listeners.append(fn)
 
     def _emit(self, kind: str, t: Transfer) -> None:
+        # monotonic per-scheduler sequence id: simultaneous events (common on
+        # a discrete-event clock) get a total order, so listeners and trace
+        # exports are byte-stable across runs at a fixed seed
+        self._event_seq += 1
+        t.event_seq = self._event_seq
         for fn in self._listeners:
             fn(kind, t)
+        if self.trace is not None:
+            self.trace.transfer_event(kind, t, self.now)
 
     # -- submission / lookup -------------------------------------------
     def in_flight(self, layer: int, expert: int) -> Optional[Transfer]:

@@ -39,6 +39,7 @@ from repro.runtime.cache import ExpertCache
 from repro.runtime.costs import MissCostModel, best_resident_q
 from repro.runtime.memory import (DEFAULT_HW, HardwareModel, TransferLedger,
                                   expert_nbytes)
+from repro.runtime.telemetry import ExpertStats, Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
 from repro.runtime.transfers import TransferScheduler
 
@@ -78,7 +79,8 @@ class ServeEngine:
                  latency_cfg: Optional[ModelConfig] = None,
                  tier: Optional[TieredExpertStore] = None,
                  upgrade_degraded: Optional[bool] = None,
-                 prefetch_min_saving: Optional[float] = None):
+                 prefetch_min_saving: Optional[float] = None,
+                 telemetry: Optional[Telemetry] = None):
         """latency_cfg: full-scale config whose expert sizes / active params
         drive the transfer + compute latency model (the accuracy testbed can
         be a reduced model while latencies reflect the deployment target —
@@ -107,7 +109,15 @@ class ServeEngine:
         of a full expert transfer — a prefetch occupies the link for
         ~transfer_time, so a saving far below that cannot pay for its own
         bytes (misses a good buddy or replica absorbs score ~stall_per_
-        quality x their tiny quality loss and fall under this bar)."""
+        quality x their tiny quality loss and fall under this bar).
+
+        telemetry: an optional runtime.telemetry.Telemetry bundle. When
+        attached, the engine emits flight-recorder spans on the simulated
+        clock, maintains per-expert hit/miss/degraded EMAs, records miss-
+        cost calibration samples (predicted vs realized stall per outcome
+        class), and feeds the prefetch precision/recall meter — all read-
+        only observers of engine state (no PRNG draws, no timeline
+        mutation), so a telemetry=None run is bit-identical."""
         assert cfg.is_moe, "ServeEngine's expert cache applies to MoE archs"
         assert lookahead >= 1, "lookahead: layers ahead to prefetch (>= 1)"
         self.cfg = cfg
@@ -162,6 +172,8 @@ class ServeEngine:
         self.prefetch_min_saving = float(prefetch_min_saving)
         self.last_prefetch_worthwhile: Optional[int] = None
         self._step_worthwhile: Optional[int] = None
+        self.telemetry = telemetry
+        self._wire_telemetry()
 
         if tables is None:
             r = 8
@@ -186,6 +198,24 @@ class ServeEngine:
             static_argnames=())
 
     # ------------------------------------------------------------------
+    def _wire_telemetry(self) -> None:
+        """Attach the (optional) telemetry bundle to the CURRENT scheduler —
+        called from __init__ and again by reset_runtime (which rebuilds the
+        scheduler, so the trace hook and prefetch-meter listener must be
+        re-registered). A replacement bundle can be installed between runs
+        with ``eng.telemetry = Telemetry(...); eng.reset_runtime()``.
+        No-op when telemetry is None: the off path stays bit-identical."""
+        tele = self.telemetry
+        if tele is None:
+            return
+        self.scheduler.trace = tele.trace
+        self.scheduler.add_listener(tele.prefetch.on_transfer_event)
+        if self.tier is not None:
+            self.tier.telemetry = tele
+        if tele.expert_stats is None:
+            tele.expert_stats = ExpertStats(self.num_moe_layers,
+                                            self.cfg.moe.num_experts)
+
     def _miss_eta(self) -> np.ndarray:
         """[L, E] expected stall of fetching each expert on a miss THIS step:
         a cold miss pays the full modeled transfer; an in-flight prefetch
@@ -305,6 +335,8 @@ class ServeEngine:
         if n_active == 0:
             return
         self._step_worthwhile = None    # fresh per-step aggregate
+        tele = self.telemetry
+        trace = tele.trace if tele is not None else None
         sched = self.scheduler
         step_t0 = sched.now
         busy0 = sched.busy_s
@@ -338,6 +370,7 @@ class ServeEngine:
                 n_sub = int(sub_sl[li][active].sum())
                 self.stats.n_sub += n_sub
                 self.ledger.buddy_hit(n_sub)
+                n_deg = n_dr = 0
                 if deg_sl is not None:
                     # misses served by the resident quant tier: no transfer,
                     # no stall — only the degraded-token accounting
@@ -358,9 +391,24 @@ class ServeEngine:
                         self.stats.n_miss_drop += n_dr
                 miss_row = np.bincount(rows[miss_sl[li][active]],
                                        minlength=e_n)
+                if tele is not None:
+                    self._record_layer_telemetry(
+                        layer, rows, used, res_used, miss_row, cursor,
+                        n_sub=n_sub, n_deg=n_deg, n_dr=n_dr,
+                        sub_slots=sub_sl[li][active],
+                        deg_slots=(deg_sl[li][active]
+                                   if deg_sl is not None else None))
+                stall_t0 = cursor
                 cursor, stall = self._resolve_misses(layer, miss_row,
                                                      cursor)
                 step_stall += stall
+                if trace is not None:
+                    if stall > 0.0:
+                        trace.span("layers", layer, "stall", "stall",
+                                   stall_t0, cursor, stall_s=stall,
+                                   n_fetch=int((miss_row > 0).sum()))
+                    trace.span("layers", layer, "compute", "compute",
+                               cursor, cursor + per_layer)
                 cursor += per_layer          # this layer's compute slice
                 self._issue_prefetches(layer, used)
                 self.cache.unpin(layer)
@@ -377,6 +425,17 @@ class ServeEngine:
         self.stats.stall_s += step_stall
         self.stats.sim_time_s += step_time
 
+        if tele is not None:
+            m = tele.metrics
+            m.ema("step_time_s", alpha=0.05).update(step_time)
+            m.histogram("step_stall_s").observe(step_stall)
+            m.gauge("inflight_transfers").set(sched.n_in_flight)
+            if trace is not None:
+                trace.span("engine", 0, "step",
+                           f"step{self.stats.steps - 1}", step_t0, cursor,
+                           tokens=n_active, stall_s=step_stall,
+                           overlapped_s=overlapped)
+
     def _observe_layer(self, layer: int, used: np.ndarray) -> None:
         self.cache.touch(layer, used)
         if self.predictor is not None:
@@ -386,14 +445,70 @@ class ServeEngine:
             self.predictor.observe(layer, used)
         self._last_used[layer] = used
 
+    def _record_layer_telemetry(self, layer: int, rows, used, res_used,
+                                miss_row, t_layer: float, *, n_sub: int,
+                                n_deg: int, n_dr: int, sub_slots,
+                                deg_slots) -> None:
+        """Per-(layer, step) telemetry: the miss-outcome breakdown (trace
+        instant + counters), per-expert EMA updates, the prefetch meter's
+        used-in-time credit, and the zero-stall calibration rows for the
+        transfer-free outcomes (buddy/degraded/drop) with their cost-model
+        quality price — the ``stall_per_quality`` calibration signal. The
+        fetch-outcome calibration rows are recorded in _resolve_misses,
+        where predicted ETA and realized stall are both in hand. Pure
+        observer: touches no engine/cache/scheduler state."""
+        tele = self.telemetry
+        missing = np.flatnonzero(miss_row > 0)
+        uniq_used = np.unique(used)
+        deg_e = (np.unique(rows[deg_slots]) if n_deg else None)
+        if tele.expert_stats is not None:
+            tele.expert_stats.update(layer, uniq_used, res_used, missing,
+                                     deg_e)
+        tele.prefetch.note_used(layer, uniq_used)
+        m = tele.metrics
+        m.counter("slots", outcome="hit").inc(len(res_used))
+        for outcome, n in (("buddy", n_sub), ("degraded", n_deg),
+                           ("fetch", int(miss_row.sum())), ("drop", n_dr)):
+            if n:
+                m.counter("slots", outcome=outcome).inc(n)
+        cal = tele.calibration
+        if n_sub:
+            # buddy: zero stall by construction; the quality price is the
+            # cost model's host-side estimate at the substituted experts
+            # (the in-graph argmin recomputes Psi per token)
+            bq = best_resident_q(self._table[layer], self._q[layer],
+                                 self.cache.resident[layer])
+            bc = self.costs.buddy_cost(bq)[np.asarray(rows[sub_slots])]
+            bc = bc[np.isfinite(bc)]
+            cal.record("buddy", 0.0, 0.0, n=n_sub,
+                       quality_cost=float(bc.mean()) if bc.size else 0.0)
+        if n_deg:
+            dc = self.costs.degraded_cost(self._tier_fidelity())[layer][deg_e]
+            dc = dc[np.isfinite(dc)]
+            cal.record("degraded", 0.0, 0.0, n=n_deg,
+                       quality_cost=float(dc.mean()) if dc.size else 0.0)
+        if n_dr:
+            cal.record("drop", 0.0, 0.0, n=n_dr,
+                       quality_cost=self.costs.drop_cost())
+        if tele.trace is not None:
+            tele.trace.instant(
+                "layers", layer, "outcomes", f"L{layer}", t_layer,
+                hit=len(res_used), buddy=n_sub, degraded=n_deg,
+                fetch=int(miss_row.sum()), drop=n_dr)
+
     def _resolve_misses(self, layer: int, miss_row: np.ndarray,
                         cursor: float):
         """Residual misses (post-substitution) block THIS layer only. An
         in-flight prefetch is escalated and waited for its tail (late
         prefetch); otherwise a demand fetch pays the full transfer."""
         missing = np.flatnonzero(miss_row > 0)
+        tele = self.telemetry
         if self.policy.fallback != "fetch":
-            self.ledger.drop(int(miss_row.sum()))
+            n_dropped = int(miss_row.sum())
+            self.ledger.drop(n_dropped)
+            if tele is not None and n_dropped:
+                tele.calibration.record("drop", 0.0, 0.0, n=n_dropped,
+                                        quality_cost=self.costs.drop_cost())
             return cursor, 0.0
         sched = self.scheduler
         stall = 0.0
@@ -403,6 +518,16 @@ class ServeEngine:
                 # arrived after this step's mask snapshot — already on device
                 continue
             t = sched.in_flight(layer, e)
+            # calibration: the cost model's predicted stall for the fetch
+            # outcome AT DECISION TIME — the in-flight optimistic tail, or
+            # the modeled cold transfer (same quantities fetch_eta feeds the
+            # argmin) — recorded against the realized stall below
+            predicted = None
+            if tele is not None:
+                predicted = (sched.eta_s(t) if t is not None else
+                             self.hw.transfer_time(self._expert_bytes))
+                if t is None:
+                    tele.prefetch.note_uncovered_miss(layer, e)
             if t is not None:
                 sched.escalate(t)
                 if t.cause == "upgrade":
@@ -421,6 +546,9 @@ class ServeEngine:
             done = sched.run_until_done(t)
             s = max(0.0, done - cursor)
             self.ledger.stall(kind, s)      # ledger owns the breakdown
+            if tele is not None:
+                tele.calibration.record("fetch", predicted, s)
+                tele.metrics.histogram("stall_s", kind=kind).observe(s)
             stall += s
             cursor = max(cursor, done)
             self.stats.n_miss_fetch += 1
@@ -484,6 +612,10 @@ class ServeEngine:
         order = np.argsort(-score, kind="stable")
         want = [int(e) for e in order[:self.prefetch_k]
                 if score[e] > self.prefetch_min_saving]
+        # stash for the prefetch meter: _issue_prefetches credits the score
+        # (expected stall saved) of each NEW submission to the telemetry
+        # bundle — plain attribute, no behavioral effect when telemetry off
+        self._last_rank_scores = score
         return want, worthwhile
 
     def _issue_prefetches(self, layer: int, used: np.ndarray) -> None:
@@ -496,8 +628,10 @@ class ServeEngine:
         if self.predictor is None or self.prefetch_k <= 0:
             return
         tgt = (layer + self.lookahead) % self.num_moe_layers
+        scores = None
         if self._cost_mode and hasattr(self.predictor, "predict_proba"):
             want, w = self._rank_prefetch(tgt, used)
+            scores = self._last_rank_scores
             # the controller clamps the GLOBAL budget from this signal, so
             # report the step's MAX across target layers — a point sample
             # from one fully-resident layer would starve every other layer
@@ -516,6 +650,8 @@ class ServeEngine:
                 continue
             self.scheduler.submit(tgt, e, self._expert_bytes, "prefetch")
             self.stats.n_prefetch_issued += 1
+            if self.telemetry is not None and scores is not None:
+                self.telemetry.prefetch.add_expected_saving(scores[e])
 
     # ------------------------------------------------------------------
     def reset_runtime(self, cache: Optional[ExpertCache] = None,
@@ -556,6 +692,10 @@ class ServeEngine:
         self._last_used = {}
         self.last_prefetch_worthwhile = None
         self._step_worthwhile = None
+        # an attached telemetry bundle keeps accumulating across resets
+        # (swap it first to start a fresh one); the scheduler was just
+        # rebuilt, so its trace hook + meter listener must be re-registered
+        self._wire_telemetry()
 
     def reset_rows(self, caches, rows):
         """Zero the decode caches of ``rows`` (batch indices) so a freed slot
@@ -656,4 +796,8 @@ class ServeEngine:
                 "upgrade_degraded": self.upgrade_degraded,
                 "prefetch_worthwhile_last": self.last_prefetch_worthwhile,
             }
+        if self.telemetry is not None:
+            # only present with a telemetry bundle attached: telemetry=off
+            # summaries stay bit-identical to the pre-telemetry engine
+            s["telemetry"] = self.telemetry.summary()
         return s

@@ -183,6 +183,7 @@ class ServeRequest:
     admitted_s: float = -1.0
     first_token_s: float = -1.0
     finished_s: float = -1.0
+    rejected_s: float = -1.0            # shed time (SLO admission)
     cursor: int = 0                     # next prompt token to feed
     tokens: list = dataclasses.field(default_factory=list)
     token_times: list = dataclasses.field(default_factory=list)
@@ -290,10 +291,63 @@ class RequestQueue:
                 est_finish = now + est_service_fn(r)
                 if est_finish > r.arrival_s + r.slo.deadline_s:
                     r.state = REJECTED
+                    r.rejected_s = now
                     self.rejected.append(r)
                     continue
             return r
         return None
+
+
+# ===========================================================================
+# Request-lifecycle trace spans (flight recorder, "requests" track)
+# ===========================================================================
+def emit_request_spans(trace, requests: Sequence[ServeRequest],
+                       emitted: set) -> int:
+    """Emit each request's lifecycle onto the recorder's "requests" track:
+    arrive instant, queued span (arrival -> admit/shed), prefill span
+    (admit -> first token), decode span (first token -> retire), per-token
+    instants, and a retire/shed terminal instant. Lane = request id.
+
+    Requests still WAITING/RUNNING (truncated run) get only the events whose
+    timestamps exist, so a mid-step-truncated trace is still loadable.
+    ``emitted`` (a set of rids owned by the caller) makes the call
+    idempotent — summary() can run more than once without duplicating
+    spans. Returns the number of requests newly emitted."""
+    n = 0
+    for r in requests:
+        if r.rid in emitted:
+            continue
+        emitted.add(r.rid)
+        n += 1
+        trace.instant("requests", r.rid, "arrive", f"req{r.rid}",
+                      r.arrival_s, prompt_len=len(r.prompt),
+                      max_new_tokens=r.max_new_tokens)
+        if r.state == REJECTED:
+            end = r.rejected_s if r.rejected_s >= 0 else r.arrival_s
+            trace.span("requests", r.rid, "queued", "queued",
+                       r.arrival_s, end)
+            trace.instant("requests", r.rid, "shed", "shed", end,
+                          reason="slo_admission")
+            continue
+        if r.admitted_s < 0:
+            continue                        # never admitted (truncated run)
+        trace.span("requests", r.rid, "queued", "queued",
+                   r.arrival_s, r.admitted_s)
+        if r.first_token_s >= 0:
+            trace.span("requests", r.rid, "prefill", "prefill",
+                       r.admitted_s, r.first_token_s)
+        end = r.finished_s if r.finished_s >= 0 else (
+            r.token_times[-1] if r.token_times else r.admitted_s)
+        if r.first_token_s >= 0:
+            trace.span("requests", r.rid, "decode", "decode",
+                       r.first_token_s, end, tokens=len(r.tokens))
+        for k, t in enumerate(r.token_times):
+            trace.instant("requests", r.rid, "token", f"tok{k}", t)
+        if r.state == FINISHED:
+            trace.instant("requests", r.rid, "retire", "retire", end,
+                          ttft_s=r.ttft(), e2e_s=r.e2e(),
+                          slo_ok=r.slo_ok())
+    return n
 
 
 # ===========================================================================
@@ -384,6 +438,7 @@ class ContinuousScheduler:
         self.completed: List[ServeRequest] = []
         self.occupancy: List[int] = []
         self.steps = 0
+        self._trace_emitted: set = set()    # rids already on the trace
 
     # -- service-time estimate for SLO-aware admission ------------------
     def _est_service(self, r: ServeRequest, est_step_s: float) -> float:
@@ -571,6 +626,12 @@ class ContinuousScheduler:
 
     def summary(self, queue: RequestQueue, t_start: float = 0.0) -> dict:
         elapsed = self.engine.scheduler.now - t_start
+        tele = getattr(self.engine, "telemetry", None)
+        if tele is not None and tele.trace is not None:
+            emit_request_spans(tele.trace, self.completed,
+                               self._trace_emitted)
+            emit_request_spans(tele.trace, queue.rejected,
+                               self._trace_emitted)
         extra = {
             "steps": self.steps,
             "slots": self.slots,

@@ -1,0 +1,379 @@
+"""Flight recorder (runtime/telemetry.py + runtime/trace.py): metric merge
+semantics, trace export round-trips, request-span completeness under the
+continuous scheduler, and the hard invariant — telemetry off is bit-identical
+to the pre-telemetry engine."""
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.runtime.telemetry import (EMA, CalibrationMeter, Counter,
+                                     ExpertStats, Gauge, Histogram,
+                                     MetricsRegistry, PrefetchMeter,
+                                     Telemetry)
+from repro.runtime.trace import FlightRecorder, export_trace
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import (ContinuousScheduler, PoissonArrivals,
+                                     RequestQueue, SLOConfig, make_requests)
+from repro.training.data import MarkovLM
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    rng = np.random.default_rng(0)
+    tables = build_buddy_lists(rng.random((l, e, e)), alpha=0.95, k_max=e - 1)
+    return cfg, params, lm, tables
+
+
+def _engine(cfg, params, tables, *, rate=0.5, seed=0, telemetry=None,
+            prefetch_k=2, mode="buddy"):
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    return ServeEngine(cfg, params, tables=tables,
+                       policy=BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8,
+                                          mode=mode),
+                       cache=ExpertCache(l, e, rate, seed=seed),
+                       predictor=PrevStepPredictor(l, e),
+                       prefetch_k=prefetch_k, seed=seed, telemetry=telemetry)
+
+
+# ===========================================================================
+# Metric primitives: merge semantics
+# ===========================================================================
+def test_counter_and_gauge_merge():
+    a, b = Counter(), Counter()
+    a.inc(3)
+    b.inc(4)
+    a.merge(b)
+    assert a.snapshot() == 7
+    g, h = Gauge(), Gauge()
+    g.set(2.0)
+    h.set(5.0)
+    g.merge(h)              # high-water semantics across registries
+    assert g.snapshot() == 5.0
+
+
+def test_histogram_merge_exact():
+    a, b = Histogram(), Histogram()
+    for v in (1e-5, 3e-4, 0.02):
+        a.observe(v)
+    for v in (0.02, 1.5):
+        b.observe(v, n=2)
+    a.merge(b)
+    s = a.snapshot()
+    assert s["n"] == 7
+    assert s["sum"] == pytest.approx(1e-5 + 3e-4 + 0.02 + 2 * 0.02 + 2 * 1.5)
+    assert s["min"] == pytest.approx(1e-5)
+    assert s["max"] == pytest.approx(1.5)
+    # quantile is the bucket upper bound -> never below the true value
+    assert a.quantile(0.99) >= 1.5
+    with pytest.raises(AssertionError):
+        a.merge(Histogram(bounds=(0.1, 1.0)))
+
+
+def test_histogram_bucket_edges():
+    h = Histogram(bounds=(1.0, 10.0))
+    h.observe(1.0)          # value AT a bound lands in that bucket
+    h.observe(10.0)
+    h.observe(100.0)        # overflow bucket
+    assert h.counts == [1, 1, 1]
+
+
+def test_ema_merge_count_weighted():
+    a, b = EMA(alpha=0.5), EMA(alpha=0.5)
+    a.update(1.0)           # first sample seeds, no pull toward zero
+    assert a.value == 1.0
+    a.update(3.0)
+    assert a.value == pytest.approx(2.0)
+    b.update(10.0)
+    a.merge(b)
+    assert a.n == 3
+    assert a.value == pytest.approx((2.0 * 2 + 10.0 * 1) / 3)
+    with pytest.raises(AssertionError):
+        a.merge(EMA(alpha=0.1))
+
+
+def test_registry_labels_kinds_and_merge():
+    r = MetricsRegistry()
+    r.counter("slots", outcome="hit").inc(5)
+    r.counter("slots", outcome="fetch").inc(1)
+    r.ema("step_time_s", alpha=0.05).update(0.5)
+    with pytest.raises(AssertionError):    # one kind per name
+        r.gauge("slots")
+    other = MetricsRegistry()
+    other.counter("slots", outcome="hit").inc(2)
+    other.counter("inflight").inc(1)
+    r.merge(other)
+    snap = r.snapshot()
+    assert snap["slots"]["outcome=hit"] == 7
+    assert snap["slots"]["outcome=fetch"] == 1
+    assert snap["inflight"][""] == 1
+    # merging must NOT alias the source registry's metric objects
+    other.counter("inflight").inc(10)
+    assert r.snapshot()["inflight"][""] == 1
+
+
+def test_expert_stats_ema_update():
+    st = ExpertStats(num_layers=2, num_experts=4, alpha=0.5)
+    st.update(0, used=[1, 2], hit=[1], missed=[2])
+    assert st.used_ema[0, 1] == pytest.approx(0.5)
+    assert st.miss_ema[0, 2] == pytest.approx(0.5)
+    assert st.miss_ema[0, 1] == 0.0
+    st.update(0, used=[1], hit=[1], missed=[])
+    assert st.used_ema[0, 1] == pytest.approx(0.75)     # 0.5*0.5 + 0.5
+    assert st.miss_ema[0, 2] == pytest.approx(0.25)     # decayed only
+    top = st.summary(top_k=2)["top_miss"]
+    assert top and top[0]["expert"] == 2
+
+
+# ===========================================================================
+# Calibration + prefetch meters
+# ===========================================================================
+def test_calibration_meter_residuals():
+    c = CalibrationMeter()
+    c.record("fetch", predicted_s=1.0, realized_s=1.5)
+    c.record("fetch", predicted_s=2.0, realized_s=1.5)
+    c.record("buddy", 0.0, 0.0, quality_cost=0.3)
+    s = c.summary()
+    f = s["fetch"]
+    assert f["n"] == 2
+    assert f["residual_mean_s"] == pytest.approx(0.0)    # +0.5 and -0.5
+    assert f["residual_abs_mean_s"] == pytest.approx(0.5)
+    assert f["residual_rms_s"] == pytest.approx(0.5)
+    assert f["residual_max_abs_s"] == pytest.approx(0.5)
+    assert s["buddy"]["quality_cost_mean"] == pytest.approx(0.3)
+    assert s["degraded"] == {"n": 0}
+    other = CalibrationMeter()
+    other.record("fetch", 1.0, 1.0)
+    c.merge(other)
+    assert c.summary()["fetch"]["n"] == 3
+
+
+def _tev(cause, layer, expert):
+    return types.SimpleNamespace(cause=cause, layer=layer, expert=expert)
+
+
+def test_prefetch_meter_late_is_not_used_in_time():
+    """An escalated (late) prefetch that lands and whose expert is then
+    routed to must count as LATE, never as a used-in-time true positive —
+    the layer already stalled for its tail."""
+    m = PrefetchMeter("test")
+    t = _tev("prefetch", 0, 1)
+    m.on_transfer_event("submit", t)
+    m.on_transfer_event("escalate", t)
+    m.on_transfer_event("complete", t)
+    m.note_used(0, [1])
+    assert (m.n_issued, m.n_late, m.n_used) == (1, 1, 0)
+
+    # clean landing -> used-in-time, credited once per landed transfer
+    t2 = _tev("prefetch", 0, 2)
+    m.on_transfer_event("submit", t2)
+    m.on_transfer_event("complete", t2)
+    m.note_used(0, [2])
+    m.note_used(0, [2])
+    assert m.n_used == 1
+    m.note_uncovered_miss(0, 3)
+    assert m.precision() == pytest.approx(1 / 2)
+    assert m.recall() == pytest.approx(1 / 3)   # used + late + uncovered
+    # non-prefetch causes are ignored entirely
+    m.on_transfer_event("submit", _tev("demand", 0, 0))
+    assert m.n_issued == 2
+
+
+# ===========================================================================
+# Trace: ordering, JSONL round-trip, Perfetto export
+# ===========================================================================
+def test_trace_sequence_ordering_deterministic():
+    fr = FlightRecorder()
+    fr.instant("engine", 0, "a", "a", 1.0)
+    fr.instant("engine", 0, "b", "b", 0.5)
+    fr.instant("engine", 0, "c", "c", 0.5)   # same ts -> seq breaks the tie
+    evs = fr.sorted_events()
+    assert [e["name"] for e in evs] == ["b", "c", "a"]
+    assert evs[0]["seq"] < evs[1]["seq"]
+    seqs = [e["seq"] for e in fr.sorted_events()]
+    assert seqs == [e["seq"] for e in fr.sorted_events()]   # stable
+
+
+def test_jsonl_roundtrip(tmp_path):
+    fr = FlightRecorder()
+    fr.instant("requests", 1, "arrive", "req1", 0.0, prompt_len=4)
+    fr.span("layers", 0, "compute", "compute", 0.0, 0.5, tokens=3)
+    p = str(tmp_path / "trace.jsonl")
+    n = fr.export_jsonl(p)
+    assert n == 2
+    assert FlightRecorder.load_jsonl(p) == fr.sorted_events()
+    assert export_trace(fr, str(tmp_path / "t2.jsonl")) == 2
+    assert export_trace(None, str(tmp_path / "none.jsonl")) == 0
+
+
+def test_perfetto_export(tmp_path):
+    fr = FlightRecorder()
+    fr.span("requests", 7, "decode", "decode", 0.001, 0.003, tokens=2)
+    fr.instant("transfers", 0, "submit", "x", 0.002)
+    d = fr.to_perfetto()
+    meta = {e["args"]["name"]: e["pid"] for e in d["traceEvents"]
+            if e["ph"] == "M"}
+    assert set(meta) == {"requests", "layers", "transfers", "engine"}
+    spans = [e for e in d["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == 1
+    assert spans[0]["pid"] == meta["requests"] and spans[0]["tid"] == 7
+    assert spans[0]["ts"] == pytest.approx(0.001 * 1e6)     # microseconds
+    assert spans[0]["dur"] == pytest.approx(0.002 * 1e6)
+    insts = [e for e in d["traceEvents"] if e["ph"] == "i"]
+    assert len(insts) == 1 and insts[0]["pid"] == meta["transfers"]
+    n = export_trace(fr, str(tmp_path / "trace.json"))
+    assert n == len(d["traceEvents"])
+
+
+# ===========================================================================
+# Engine integration
+# ===========================================================================
+def test_transfer_event_seq_monotonic(setup):
+    cfg, params, lm, tables = setup
+    tele = Telemetry.with_trace(num_layers=cfg.num_layers,
+                                num_experts=cfg.moe.num_experts)
+    eng = _engine(cfg, params, tables, mode="none", telemetry=tele)
+    seqs = []
+    eng.scheduler.add_listener(lambda kind, t: seqs.append(t.event_seq))
+    eng.generate(lm.sample(2, 4), max_new_tokens=4)
+    assert len(seqs) > 0
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+def test_bit_identity_telemetry_off_vs_on(setup):
+    """The hard invariant: telemetry only OBSERVES. Same tokens, same
+    simulated clock, same summary (minus the telemetry section)."""
+    cfg, params, lm, tables = setup
+    prompts = lm.sample(2, 5)
+    eng_off = _engine(cfg, params, tables, seed=3)
+    out_off = np.asarray(eng_off.generate(prompts, max_new_tokens=6))
+    tele = Telemetry.with_trace(predictor_label="prev_step",
+                                num_layers=cfg.num_layers,
+                                num_experts=cfg.moe.num_experts)
+    eng_on = _engine(cfg, params, tables, seed=3, telemetry=tele)
+    out_on = np.asarray(eng_on.generate(prompts, max_new_tokens=6))
+    assert np.array_equal(out_off, out_on)
+    assert eng_off.stats.sim_time_s == eng_on.stats.sim_time_s
+    s_off, s_on = eng_off.summary(), dict(eng_on.summary())
+    assert "telemetry" not in s_off
+    tele_section = s_on.pop("telemetry")
+    assert s_off == s_on
+    # and the on-engine actually recorded something
+    assert tele_section["metrics"]
+    assert len(tele.trace) > 0
+
+
+def test_fetch_calibration_matches_timeline(setup):
+    """Fetch residuals are ~0: the predicted ETA and the realized stall
+    come from the same deterministic bandwidth model."""
+    cfg, params, lm, tables = setup
+    tele = Telemetry(num_layers=cfg.num_layers,
+                     num_experts=cfg.moe.num_experts)
+    eng = _engine(cfg, params, tables, mode="none", prefetch_k=0,
+                  telemetry=tele)
+    eng.generate(lm.sample(2, 5), max_new_tokens=6)
+    f = tele.calibration.summary()["fetch"]
+    assert f["n"] > 0
+    assert f["residual_abs_mean_s"] == pytest.approx(0.0, abs=1e-9)
+    assert f["predicted_mean_s"] > 0
+
+
+def _workload(lm, n, rate, max_new, slo, seed=1):
+    rng = np.random.default_rng(seed)
+    prompts = [lm.sample(1, int(rng.integers(4, 9)))[0] for _ in range(n)]
+    return make_requests(prompts, PoissonArrivals(rate, seed=seed + 1),
+                         max_new, slo)
+
+
+def test_request_span_completeness_continuous(setup):
+    """Every request that completes under mid-step join/retire gets a full
+    lifecycle on the requests track: arrive -> queued -> prefill -> decode
+    -> retire, with per-token instants matching its emitted tokens."""
+    cfg, params, lm, tables = setup
+    tele = Telemetry.with_trace(num_layers=cfg.num_layers,
+                                num_experts=cfg.moe.num_experts)
+    eng = _engine(cfg, params, tables, telemetry=tele)
+    slo = SLOConfig(ttft_s=1.0, tpot_s=1.0, deadline_s=10.0)
+    sched = ContinuousScheduler(eng, slots=2, prefill_chunk=2)
+    s = sched.run(RequestQueue(_workload(lm, 6, 800.0, 4, slo)))
+    assert s["completed"] == 6
+    evs = tele.trace.sorted_events()
+    by_req = {}
+    for ev in evs:
+        if ev["track"] == "requests":
+            by_req.setdefault(ev["lane"], []).append(ev)
+    assert set(by_req) == set(range(6))
+    for rid, req_evs in by_req.items():
+        kinds = [e["kind"] for e in req_evs]
+        for k in ("arrive", "queued", "prefill", "decode", "retire"):
+            assert k in kinds, f"req {rid} missing {k}"
+        dec = next(e for e in req_evs if e["kind"] == "decode")
+        toks = [e for e in req_evs if e["kind"] == "token"]
+        assert len(toks) == dec["args"]["tokens"]
+        ret = next(e for e in req_evs if e["kind"] == "retire")
+        assert ret["args"]["e2e_s"] >= ret["args"]["ttft_s"] >= 0
+    # summary() ran inside run(); a second call must not duplicate spans
+    sched.summary(RequestQueue([]))
+    assert len(tele.trace.sorted_events()) == len(evs)
+
+
+def test_request_spans_shed_requests(setup):
+    """SLO-aware admission sheds doomed requests; they still appear on the
+    requests track as arrive -> queued -> shed (no prefill/decode)."""
+    cfg, params, lm, tables = setup
+    tele = Telemetry.with_trace(num_layers=cfg.num_layers,
+                                num_experts=cfg.moe.num_experts)
+    eng = _engine(cfg, params, tables, telemetry=tele)
+    slo = SLOConfig(deadline_s=1e-9)     # impossible: everything sheds
+    queue = RequestQueue(_workload(lm, 4, 800.0, 3, slo), admission="slo")
+    s = ContinuousScheduler(eng, slots=2).run(queue)
+    assert s["rejected"] == 4
+    req_evs = [e for e in tele.trace.sorted_events()
+               if e["track"] == "requests"]
+    kinds_by_req = {}
+    for ev in req_evs:
+        kinds_by_req.setdefault(ev["lane"], set()).add(ev["kind"])
+    assert len(kinds_by_req) == 4
+    for rid, kinds in kinds_by_req.items():
+        assert {"arrive", "queued", "shed"} <= kinds
+        assert "decode" not in kinds and "retire" not in kinds
+
+
+def test_engine_summary_contains_telemetry(setup):
+    cfg, params, lm, tables = setup
+    tele = Telemetry(num_layers=cfg.num_layers,
+                     num_experts=cfg.moe.num_experts)
+    eng = _engine(cfg, params, tables, telemetry=tele)
+    eng.generate(lm.sample(2, 4), max_new_tokens=4)
+    s = eng.summary()
+    assert "telemetry" in s
+    assert "calibration" in s["telemetry"]
+    assert "prefetch" in s["telemetry"]
+    assert s["telemetry"]["expert_stats"]["steps"] > 0
+    assert "slots" in s["telemetry"]["metrics"]
+
+
+def test_telemetry_survives_reset_runtime(setup):
+    """reset_runtime rebuilds the scheduler — the recorder must be re-wired
+    so post-reset transfers keep landing in the same bundle."""
+    cfg, params, lm, tables = setup
+    tele = Telemetry.with_trace(num_layers=cfg.num_layers,
+                                num_experts=cfg.moe.num_experts)
+    eng = _engine(cfg, params, tables, mode="none", telemetry=tele)
+    eng.generate(lm.sample(2, 4), max_new_tokens=3)
+    n_before = len(tele.trace)
+    assert n_before > 0
+    eng.reset_runtime()
+    assert eng.scheduler.trace is tele.trace
+    eng.generate(lm.sample(2, 4), max_new_tokens=3)
+    assert len(tele.trace) > n_before
