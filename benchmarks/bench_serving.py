@@ -35,6 +35,14 @@ cost_no_worse_both / cost_strictly_better_one in serving.json; the CI
 regression gate in benchmarks/check_regression.py tracks the raw metrics
 against a committed baseline).
 
+--n-devices 2..8 adds the MESH arm: the same engine sharded expert-parallel
+across D devices, run twice — peer-HBM borrowing over ICI on vs off — on an
+identical workload. The peer-on arm must resolve residual misses by
+borrowing from the owning device's HBM (fifth miss outcome) and hold a
+lower p99 token latency than the peer-off twin, whose misses all pay host
+PCIe. Per-link utilization and the peer-borrow share are recorded under
+results["mesh"] and gated by check_regression.py --kind mesh.
+
 --seed makes sweeps reproducible run-to-run: it drives the workload draw,
 the cache placement, and every engine PRNG, and is recorded per arm in
 results/bench/serving.json.
@@ -153,7 +161,8 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
         cache_rates=(0.5,), num_requests: int = 24, slots: int = 4,
         max_new: int = 8, prefetch_k: int = 2,
         prefill_chunk: int = 8, seed: int = 0,
-        quant_tier: str = "off", cost_policy: bool = False) -> dict:
+        quant_tier: str = "off", cost_policy: bool = False,
+        n_devices: int = 1, ici_gbps=None) -> dict:
     t0 = time.time()
     assert not cost_policy or quant_tier != "off", \
         "--cost-policy compares the four-way miss tree: pick a --quant-tier"
@@ -404,6 +413,78 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
                     f"serving.{key}.nll_absdelta_costpolicy",
                     d_cost, f"precedence={d_prec:.4f}"))
 
+    if n_devices > 1:
+        # -- expert-parallel mesh A/B: identical D-device engines, peer-HBM
+        # borrowing on vs off. mode='none' and prefetch-free, like the
+        # tiered trio, so the arm measures the MISS PATH itself: peer-off
+        # resolves every residual miss over host PCIe, peer-on borrows
+        # peer-owned experts over ICI. A FRESH MarkovLM + rng drive the
+        # workload — drawing from the shared ``lm`` would advance its RNG
+        # and silently change every sweep above at the same --seed.
+        mesh_lm = MarkovLM(cfg.vocab_size, seed=seed + 211)
+        cr = cache_rates[0]
+        l, e = cfg.num_layers, cfg.moe.num_experts
+
+        def _mesh_eng(peer: bool) -> ServeEngine:
+            return ServeEngine(
+                cfg, params, tables=tables,
+                policy=BuddyPolicy(mode="none"),
+                cache=ExpertCache(l, e, cr, seed=seed),
+                predictor=PrevStepPredictor(l, e), prefetch_k=0, seed=seed,
+                n_devices=n_devices, ici_gbps=ici_gbps, peer_borrow=peer)
+
+        step_s = _probe_step_s(_mesh_eng(False), mesh_lm, slots)
+        req_tokens = (PROMPT_LO + PROMPT_HI - 1) // 2 + max_new
+        rate = loads[-1] * slots / (req_tokens * step_s)
+        slo = SLOConfig(ttft_s=2 * PROMPT_HI * step_s, tpot_s=2 * step_s,
+                        deadline_s=3 * req_tokens * step_s)
+        # one prompt/budget draw shared by both arms (re-sampling between
+        # arms would hand them different workloads)
+        mrng = np.random.default_rng(seed + 3)
+        mesh_prompts = [mesh_lm.sample(1, int(mrng.integers(PROMPT_LO,
+                                                            PROMPT_HI)))[0]
+                        for _ in range(num_requests)]
+        mesh_new = mrng.integers(2, 2 * max_new + 1, num_requests)
+
+        def _mesh_run(peer: bool):
+            cs = ContinuousScheduler(_mesh_eng(peer), slots=slots,
+                                     prefill_chunk=1)
+            return cs.run(RequestQueue(make_requests(
+                mesh_prompts, PoissonArrivals(rate, seed=seed + 4),
+                mesh_new, slo)))
+
+        s_peer = _mesh_run(True)
+        s_nopeer = _mesh_run(False)
+        m_on = s_peer["engine"]["mesh"]
+        p99_on = s_peer["token_latency_s"]["p99"]
+        p99_off = s_nopeer["token_latency_s"]["p99"]
+        results["mesh"] = {
+            "n_devices": n_devices, "cache_rate": cr,
+            "arrival_rate_rps": rate, "seed": seed,
+            "peer_on": s_peer, "peer_off": s_nopeer,
+            "p99_tok_ms": {"peer_on": p99_on * 1e3,
+                           "peer_off": p99_off * 1e3},
+            "n_peer_borrow": m_on["n_peer_borrow"],
+            "peer_share": m_on["peer_share"],
+            "peer_stall_s": m_on["peer_stall_s"],
+            "links": m_on["links"],
+            "peer_lower_p99": bool(p99_on <= p99_off),
+        }
+        print(f"  [mesh D={n_devices}] peer-borrow on/off p99 tok "
+              f"{p99_on*1e3:.3f}/{p99_off*1e3:.3f}ms  "
+              f"borrows {m_on['n_peer_borrow']} "
+              f"({m_on['peer_share']*100:.1f}% of served slots)  "
+              f"peer lowers p99: {results['mesh']['peer_lower_p99']}")
+        for u in m_on["links"]:
+            print(f"  [mesh D={n_devices}]   {u['name']}: busy "
+                  f"{u['busy_s']*1e3:.3f}ms  total "
+                  f"{u['total_bytes']/1e6:.2f}MB")
+        out_rows.append((f"serving.mesh_d{n_devices}.p99_tok_ms_peer",
+                         p99_on * 1e3, f"peer_off={p99_off*1e3:.3f}"))
+        out_rows.append((f"serving.mesh_d{n_devices}.peer_share",
+                         m_on["peer_share"],
+                         f"n_borrow={m_on['n_peer_borrow']}"))
+
     # -- telemetry overhead A/B: the flight recorder is a pure observer of
     # the SIMULATED timeline, so a telemetry-on engine must agree with a
     # telemetry-off twin on the simulated clock EXACTLY (sim_step_ratio ==
@@ -441,7 +522,8 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
     path = common.write_results(
         "serving.json", results,
         config=f"smoke={smoke} loads={loads} cache_rates={cache_rates} "
-               f"quant_tier={quant_tier} cost_policy={cost_policy}",
+               f"quant_tier={quant_tier} cost_policy={cost_policy} "
+               f"n_devices={n_devices}",
         seed=seed, t0=t0)
     print(f"  (total {time.time()-t0:.1f}s; wrote {path})")
     return results
@@ -472,16 +554,27 @@ if __name__ == "__main__":
                          "cost argmin (runtime/costs.py) vs the fixed "
                          "precedence chain on the same tiered config "
                          "(requires --quant-tier)")
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="adds the expert-parallel mesh arm at this device "
+                         "count (2-8): peer-HBM borrowing over ICI on vs "
+                         "off on identical sharded engines")
+    ap.add_argument("--ici-gbps", type=float, default=0.0,
+                    help="per-ICI-link bandwidth in GB/s for the mesh arm "
+                         "(0: hardware model default)")
     args = ap.parse_args()
     if args.cost_policy and args.quant_tier == "off":
         ap.error("--cost-policy compares the four-way miss tree: "
                  "pick a --quant-tier (int8/int4)")
+    if not 1 <= args.n_devices <= 8:
+        ap.error("--n-devices must be in 1..8")
+    ici = args.ici_gbps if args.ici_gbps > 0 else None
     rows = []
     if args.smoke:
         run(rows, smoke=True, loads=(1.0,), cache_rates=(0.5,),
             num_requests=16, max_new=6, prefill_chunk=args.prefill_chunk,
             seed=args.seed, quant_tier=args.quant_tier,
-            cost_policy=args.cost_policy)
+            cost_policy=args.cost_policy, n_devices=args.n_devices,
+            ici_gbps=ici)
     else:
         run(rows,
             loads=tuple(float(x) for x in args.rates.split(",")),
@@ -489,7 +582,8 @@ if __name__ == "__main__":
             num_requests=args.num_requests, slots=args.slots,
             max_new=args.max_new, prefill_chunk=args.prefill_chunk,
             seed=args.seed, quant_tier=args.quant_tier,
-            cost_policy=args.cost_policy)
+            cost_policy=args.cost_policy, n_devices=args.n_devices,
+            ici_gbps=ici)
     print("\nname,value,derived")
     for name, v, derived in rows:
         print(f"{name},{v:.2f},{derived}")

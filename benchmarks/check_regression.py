@@ -10,6 +10,17 @@
       nll_absdelta.*           |NLL - full-residency reference| of the tier
                                and cost-policy arms (lower is better)
 
+  mesh — compares the ``results["mesh"]`` section of a fresh
+    ``results/bench/serving.json`` (from ``bench_serving --smoke
+    --n-devices 4``) against ``benchmarks/baselines/mesh_smoke.json``:
+
+      mesh_d<D>.p99_token_latency_ms.{peer_on,peer_off}
+                               the expert-parallel A/B arms (lower better)
+      mesh_d<D>.peer_share     fraction of served slots resolved by
+                               peer-HBM borrow (higher is better — a
+                               collapse means the fifth outcome stopped
+                               firing)
+
   kernels — compares a fresh ``results/bench/kernels.json`` (from
     ``bench_kernels --smoke``) against
     ``benchmarks/baselines/kernels_smoke.json``. Only the fused-vs-unfused
@@ -60,6 +71,8 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 KIND_PATHS = {
     "serving": (os.path.join(HERE, "..", "results", "bench", "serving.json"),
                 os.path.join(HERE, "baselines", "serving_smoke.json")),
+    "mesh": (os.path.join(HERE, "..", "results", "bench", "serving.json"),
+             os.path.join(HERE, "baselines", "mesh_smoke.json")),
     "kernels": (os.path.join(HERE, "..", "results", "bench", "kernels.json"),
                 os.path.join(HERE, "baselines", "kernels_smoke.json")),
 }
@@ -78,6 +91,7 @@ FLOORS = {
     "sim_step_ratio": 0.01,          # telemetry-on/off SIMULATED time ratio:
                                      # deterministic clock, must stay 1.0 —
                                      # the floor only absorbs float residue
+    "peer_share": 0.002,             # fraction of served slots peer-borrowed
 }
 
 
@@ -89,7 +103,8 @@ def _family(metric: str) -> str:
 
 
 def _direction(metric: str) -> str:
-    return (HIGHER_IS_BETTER if _family(metric) == "goodput_rps"
+    return (HIGHER_IS_BETTER
+            if _family(metric) in ("goodput_rps", "peer_share")
             else LOWER_IS_BETTER)
 
 
@@ -139,7 +154,27 @@ def extract_kernel_metrics(results: dict) -> Dict[str, float]:
     return out
 
 
-EXTRACTORS = {"serving": extract_metrics, "kernels": extract_kernel_metrics}
+def extract_mesh_metrics(results: dict) -> Dict[str, float]:
+    """Gateable metrics from the expert-parallel mesh A/B arm of a
+    bench_serving results dict (present when run with --n-devices > 1):
+    both peer arms' p99 token latency, and the peer-borrow hit share —
+    a collapse there means misses stopped resolving over ICI even if the
+    latency happens to hold on a small workload."""
+    out: Dict[str, float] = {}
+    m = results.get("mesh")
+    if not isinstance(m, dict):
+        return out
+    d = m["n_devices"]
+    out[f"mesh_d{d}.p99_token_latency_ms.peer_on"] = \
+        m["p99_tok_ms"]["peer_on"]
+    out[f"mesh_d{d}.p99_token_latency_ms.peer_off"] = \
+        m["p99_tok_ms"]["peer_off"]
+    out[f"mesh_d{d}.peer_share"] = m["peer_share"]
+    return out
+
+
+EXTRACTORS = {"serving": extract_metrics, "mesh": extract_mesh_metrics,
+              "kernels": extract_kernel_metrics}
 
 
 def inject_regression(metrics: Dict[str, float],

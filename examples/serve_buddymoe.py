@@ -6,6 +6,8 @@ Run:  PYTHONPATH=src python examples/serve_buddymoe.py --cache-rate 0.5
           --arrival-rate 400 --prefill-chunk 8
       PYTHONPATH=src python examples/serve_buddymoe.py --continuous \
           --telemetry on --trace-out serve_trace.json   # -> ui.perfetto.dev
+      PYTHONPATH=src python examples/serve_buddymoe.py --n-devices 4 \
+          --cache-rate 0.5      # expert-parallel mesh: peer-HBM borrowing
 """
 import argparse
 import os
@@ -63,7 +65,8 @@ def build_engine(args):
         cfg, params, tables=tables, policy=policy, cache=cache, tier=tier,
         predictor=PrevStepPredictor(cfg.num_layers, cfg.moe.num_experts),
         prefetch_k=args.prefetch, lookahead=args.lookahead, seed=0,
-        telemetry=tele)
+        telemetry=tele, n_devices=args.n_devices,
+        ici_gbps=args.ici_gbps if args.ici_gbps > 0 else None)
     return cfg, lm, eng
 
 
@@ -103,6 +106,12 @@ def main():
     ap.add_argument("--stall-per-quality", type=float, default=0.05,
                     help="seconds of stall worth one unit of quality loss "
                          "(the cost model's single exchange rate)")
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="expert-parallel mesh size (1-8): shard experts "
+                         "across devices and resolve misses on peer-owned "
+                         "experts by borrowing over ICI (1 = single device)")
+    ap.add_argument("--ici-gbps", type=float, default=0.0,
+                    help="per-ICI-link bandwidth in GB/s (0: model default)")
     ap.add_argument("--telemetry", choices=["off", "on"], default="off",
                     help="attach the flight recorder: calibration + prefetch "
                          "meters printed after the run ('off' is the exact "
@@ -170,7 +179,25 @@ def main():
         bd = s["stall_breakdown"]
     print(f"stall breakdown: demand {bd['demand_stall_s']*1e3:.1f}ms  "
           f"late-prefetch {bd['late_prefetch_stall_s']*1e3:.1f}ms  "
-          f"overlapped {bd['overlapped_s']*1e3:.1f}ms")
+          f"overlapped {bd['overlapped_s']*1e3:.1f}ms"
+          + (f"  peer {bd['peer_stall_s']*1e3:.1f}ms"
+             if "peer_stall_s" in bd else ""))
+
+    # per-link utilization digest: the host PCIe link plus every ICI link,
+    # with each link's bytes split by transfer cause
+    es = s.get("engine", s)
+    links = [eng.scheduler.utilization()] + \
+        [eng.peer_links[d].utilization() for d in sorted(eng.peer_links)]
+    print("link utilization:")
+    for u in links:
+        by = ", ".join(f"{k} {v/1e6:.2f}MB"
+                       for k, v in u["bytes_by_cause"].items())
+        print(f"  {u['name']}: busy {u['busy_s']*1e3:.2f}ms  queue "
+              f"{u['queue_depth']}  {by or 'idle'}")
+    if "mesh" in es:
+        m = es["mesh"]
+        print(f"mesh: {m['n_devices']} devices, {m['n_peer_borrow']} "
+              f"peer borrows ({m['peer_share']*100:.1f}% of served slots)")
 
     if eng.telemetry is not None:
         cal = eng.telemetry.calibration.summary()

@@ -21,19 +21,26 @@ Uniqueness (b not in U_t) subsumes the paper's multiplicative reuse penalty:
 a buddy already claimed for token t can never be picked again for t.
 
 Unified cost mode (policy.miss_policy='cost', runtime/costs.py): instead of
-the fixed precedence above, every missed slot picks the ARGMIN of the four
+the fixed precedence above, every missed slot picks the ARGMIN of the five
 outcome costs on one stall-seconds scale —
 
   buddy     stall_per_quality * (1 - Psi_best)   (gates/budget still apply)
   degraded  fid_cost[e]   caller-prepared stall_per_quality * fidelity
+  peer      peer_cost[e]  caller-prepared expected stall of borrowing the
+            full-precision expert from a peer device's HBM over ICI
+            (multi-device meshes; inf where no peer holds it)
   fetch     fetch_cost[e] caller-prepared expected stall (in-flight ETA or
             modeled cold transfer)
   drop      stall_per_quality * drop_loss
 
 so a high-q buddy beats a low-fidelity replica and vice versa, a
 nearly-landed prefetch beats both, and the fetch/drop choice is per-slot.
-Ties break toward the earlier outcome (buddy, then degraded): at equal cost
-the transfer-free reroute wins.
+Ties break toward the earlier outcome (buddy, then degraded, then peer):
+at equal cost the transfer-free reroute wins, and a peer borrow beats an
+equally-priced host fetch — the outcome codes match
+``runtime.costs.{BUDDY,DEGRADED,PEER,FETCH,DROP}``. Single-device callers
+never pass ``peer_cost``/``peer_ok`` and compile the exact four-outcome
+graph this module always had.
 """
 from __future__ import annotations
 
@@ -58,14 +65,27 @@ class SubstituteResult(NamedTuple):
     #                             by the cost argmin (cost mode only; the
     #                             precedence drop path stays on ``missed``
     #                             with policy.fallback='drop')
+    peered: jax.Array = None    # [T, K] bool — miss served by borrowing the
+    #                             full-precision expert from a peer device's
+    #                             HBM over ICI (multi-device meshes only;
+    #                             excluded from ``missed``)
 
 
-def _outcome_argmin(cost_b, cost_d, cost_f, cost_r):
-    """Per-slot argmin over the four outcome costs, ties to the EARLIER
-    outcome (buddy, then degraded, then fetch, then drop) so an equally
-    priced transfer-free reroute always wins. Returns int codes [T]."""
-    costs = jnp.stack([cost_b, cost_d, cost_f, cost_r], axis=-1)
-    return jnp.argmin(costs, axis=-1).astype(jnp.int32)
+def _outcome_argmin(cost_b, cost_d, cost_f, cost_r, cost_p=None):
+    """Per-slot argmin over the outcome costs, ties to the EARLIER outcome
+    (buddy, then degraded, then peer, then fetch, then drop) so an equally
+    priced transfer-free reroute always wins and a peer borrow beats an
+    equally-priced host fetch. Returns the CANONICAL int codes [T]
+    (runtime.costs numbering, 0..4) whether or not a peer row exists:
+    without ``cost_p`` only four costs are stacked — single-device graphs
+    stay four-wide — and the argmin is mapped through [0, 1, 3, 4]."""
+    if cost_p is None:
+        costs = jnp.stack([cost_b, cost_d, cost_f, cost_r], axis=-1)
+        codes = jnp.asarray([0, 1, 3, 4], jnp.int32)
+    else:
+        costs = jnp.stack([cost_b, cost_d, cost_p, cost_f, cost_r], axis=-1)
+        codes = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)
+    return jnp.take(codes, jnp.argmin(costs, axis=-1))
 
 
 def substitute(indices: jax.Array,
@@ -78,11 +98,16 @@ def substitute(indices: jax.Array,
                hop: Optional[jax.Array] = None,
                quant_ok: Optional[jax.Array] = None,
                fid_cost: Optional[jax.Array] = None,
-               fetch_cost: Optional[jax.Array] = None) -> SubstituteResult:
+               fetch_cost: Optional[jax.Array] = None,
+               peer_ok: Optional[jax.Array] = None,
+               peer_cost: Optional[jax.Array] = None) -> SubstituteResult:
     """indices [T, K] int32; topk_logits [T, K] f32 (for TAE);
     resident [E] bool; buddy_table [E, R] int32 (-1 padded, sorted by q desc);
     buddy_q [E, R] f32; router_logits [T, E] (optional, for eta term);
-    hop [E] int32 ICI hops to each expert's cache slot (optional);
+    hop [E] int32 ICI hops to each expert's cache slot (optional; negative
+    values are the cache's "not resident" sentinel and are clamped to 0 —
+    eligible buddies are always resident so the clamp never changes Psi of
+    a pickable candidate);
     quant_ok [E] bool (optional, precedence mode) — experts whose miss the
     runtime decided to serve from the resident quant-replica tier this step
     (the degraded fallback sits between buddy substitution and fetch/drop,
@@ -91,7 +116,14 @@ def substitute(indices: jax.Array,
     fid_cost [E] f32 (cost mode) — stall_per_quality * replica fidelity
     error, inf where no replica is usable (runtime/costs.py);
     fetch_cost [E] f32 (cost mode) — expected stall seconds of fetching
-    (in-flight ETA or modeled cold transfer), inf to forbid fetching."""
+    (in-flight ETA or modeled cold transfer), inf to forbid fetching;
+    peer_ok [E] bool (optional, precedence mode) — experts resident in some
+    peer device's HBM, whose miss the runtime serves by an ICI borrow
+    (slots in between degraded and fetch in the precedence chain);
+    peer_cost [E] f32 (cost mode) — expected stall seconds of the peer
+    borrow (MissCostModel.peer_eta), inf where no peer holds the expert.
+    Omitting both peer args (every single-device caller) compiles the
+    pre-mesh four-outcome graph unchanged."""
     from repro.core import gates
 
     t_n, k_n = indices.shape
@@ -110,7 +142,13 @@ def substitute(indices: jax.Array,
               else inf_e)
     f_cost = (fetch_cost.astype(jnp.float32) if fetch_cost is not None
               else inf_e)
+    p_cost = (peer_cost.astype(jnp.float32) if peer_cost is not None
+              else None)
     r_cost = jnp.float32(xr * policy.drop_loss)
+    if hop is not None:
+        # mask the cache's non-resident sentinel (-1): kappa must not turn
+        # "absent" into a Psi *bonus*; eligibility already excludes them
+        hop = jnp.maximum(hop, 0)
 
     allowed = gates.token_gate(topk_logits, policy.tau, policy.temperature,
                                policy.margin_gamma)                      # [T]
@@ -123,22 +161,34 @@ def substitute(indices: jax.Array,
         deg = miss & quant_ok[experts]
         return miss & ~deg, deg
 
+    def _split_peer(miss, experts):
+        """(residual_miss, peered): route peer-resident misses to an ICI
+        borrow. Sits after degraded in the precedence chain: a zero-stall
+        resident replica beats a (cheap but nonzero) peer transfer."""
+        if peer_ok is None:
+            return miss, jnp.zeros_like(miss)
+        peer = miss & peer_ok[experts]
+        return miss & ~peer, peer
+
     if policy.mode == "none":
         miss = ~resident[indices] & True
         if cost_mode:
-            # no rerouting: argmin over degraded / fetch / drop per slot
+            # no rerouting: argmin over degraded / peer / fetch / drop
             out = _outcome_argmin(jnp.full(indices.shape, jnp.inf),
                                   d_cost[indices], f_cost[indices],
-                                  jnp.full(indices.shape, r_cost))
+                                  jnp.full(indices.shape, r_cost),
+                                  None if p_cost is None
+                                  else p_cost[indices])
             deg = miss & (out == 1)
-            drp = miss & (out == 3)
+            drp = miss & (out == 4)
             return SubstituteResult(indices, jnp.zeros_like(miss),
-                                    miss & (out == 2), allowed, dist_ok,
-                                    deg, drp)
+                                    miss & (out == 3), allowed, dist_ok,
+                                    deg, drp, miss & (out == 2))
         miss, deg = _split_degraded(miss, indices)
+        miss, peer = _split_peer(miss, indices)
         return SubstituteResult(indices, jnp.zeros_like(miss), miss,
                                 allowed, dist_ok, deg,
-                                jnp.zeros_like(miss))
+                                jnp.zeros_like(miss), peer)
 
     gate = allowed & dist_ok                                             # [T]
 
@@ -153,6 +203,7 @@ def substitute(indices: jax.Array,
     missed = jnp.zeros((t_n, k_n), bool)
     degraded = jnp.zeros((t_n, k_n), bool)
     dropped = jnp.zeros((t_n, k_n), bool)
+    peered = jnp.zeros((t_n, k_n), bool)
     budget = jnp.where(gate, policy.rho, 0).astype(jnp.int32)            # [T]
 
     for k in range(k_n):
@@ -191,25 +242,29 @@ def substitute(indices: jax.Array,
                                xr * (1.0 - jnp.clip(psi_best, 0.0, 1.0)),
                                jnp.inf)
             out = _outcome_argmin(cost_b, d_cost[e], f_cost[e],
-                                  jnp.full((t_n,), r_cost))
+                                  jnp.full((t_n,), r_cost),
+                                  None if p_cost is None else p_cost[e])
             do_sub = miss_k & (out == 0)
             deg_col = miss_k & (out == 1)
-            res_miss = miss_k & (out == 2)
-            dropped = dropped.at[:, k].set(miss_k & (out == 3))
+            peer_col = miss_k & (out == 2)
+            res_miss = miss_k & (out == 3)
+            dropped = dropped.at[:, k].set(miss_k & (out == 4))
             new_col = jnp.where(do_sub, buddy, e)
         else:
             do_sub = miss_k & can_sub & found
             new_col = jnp.where(do_sub, buddy, e)
             res_miss = (~resident[new_col]) & ~do_sub
             res_miss, deg_col = _split_degraded(res_miss, new_col)
+            res_miss, peer_col = _split_peer(res_miss, new_col)
         new_idx = new_idx.at[:, k].set(new_col)
         substituted = substituted.at[:, k].set(do_sub)
         missed = missed.at[:, k].set(res_miss)
         degraded = degraded.at[:, k].set(deg_col)
+        peered = peered.at[:, k].set(peer_col)
         budget = budget - do_sub.astype(jnp.int32)
 
     return SubstituteResult(new_idx, substituted, missed, allowed, dist_ok,
-                            degraded, dropped)
+                            degraded, dropped, peered)
 
 
 def make_random_table(key, num_experts: int, r_max: int) -> tuple:

@@ -23,6 +23,11 @@
     PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
         --trace trace.jsonl --slots 4
 
+    # expert-parallel mesh: experts sharded across 4 devices; misses on
+    # peer-owned experts borrow over ICI instead of waiting on host PCIe
+    PYTHONPATH=src python -m repro.launch.serve --reduced --cache-rate 0.5 \
+        --n-devices 4 --steps 64
+
     # flight recorder: metrics + calibration in the summary, and a Perfetto
     # trace of the run (load serve_trace.json at https://ui.perfetto.dev)
     PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
@@ -168,6 +173,19 @@ def main():
                          " buddy, and degraded slots in ONE grouped step "
                          "(kernels/grouped_ffn.py) instead of three "
                          "dispatches; off = bit-identical pre-fused graph")
+    # -- expert-parallel mesh (peer-HBM borrowing over ICI) --------------
+    ap.add_argument("--n-devices", type=int, default=1,
+                    help="expert-parallel mesh size (1-8): experts shard "
+                         "round-robin across devices; a miss on an expert a "
+                         "peer holds borrows it over that device's ICI link "
+                         "— the fifth miss outcome (1: single-device, "
+                         "bit-identical to the pre-mesh engine)")
+    ap.add_argument("--ici-gbps", type=float, default=0.0,
+                    help="per-ICI-link bandwidth in GB/s (0: hardware "
+                         "model default)")
+    ap.add_argument("--no-peer-borrow", action="store_true",
+                    help="mesh ablation: shard experts but resolve misses "
+                         "with the four single-device outcomes only")
     # -- observability (runtime/telemetry.py + runtime/trace.py) ---------
     ap.add_argument("--telemetry", choices=["off", "on"], default="off",
                     help="attach the flight recorder: metrics registry, "
@@ -192,6 +210,8 @@ def main():
         ap.error("--prefill-chunk must be >= 1 (prompt tokens per fused step)")
     if args.trace and args.mode != "continuous":
         ap.error("--trace replays a request stream: use --mode continuous")
+    if not 1 <= args.n_devices <= 8:
+        ap.error("--n-devices must be in 1..8")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     assert cfg.is_moe, "serving engine targets MoE archs"
@@ -242,7 +262,10 @@ def main():
                       lookahead=args.lookahead, upgrade_degraded=upgrade,
                       prefetch_min_saving=(None if args.prefetch_min_saving
                                            < 0 else args.prefetch_min_saving),
-                      telemetry=tele)
+                      telemetry=tele,
+                      n_devices=args.n_devices,
+                      ici_gbps=args.ici_gbps if args.ici_gbps > 0 else None,
+                      peer_borrow=not args.no_peer_borrow)
 
     if args.mode == "continuous":
         _serve_continuous(args, cfg, eng, lm, prefetch_k)
@@ -262,8 +285,25 @@ def main():
               f"{t['bits']}-bit, {t['quant_bytes']/1e6:.1f}MB resident, "
               f"{t['tier_budget_split']['cache_slots_per_layer']} full "
               f"slots/layer left")
+    _report_mesh(s)
     print("sample output tokens:", out[0, -16:].tolist())
     _report_telemetry(eng.telemetry, args.trace_out)
+
+
+def _report_mesh(s):
+    """Per-link utilization digest for mesh runs (no-op at n_devices=1)."""
+    if "mesh" not in s:
+        return
+    m = s["mesh"]
+    print(f"[mesh] {m['n_devices']} devices, peer-borrow "
+          f"{'on' if m['peer_borrow'] else 'off'}: "
+          f"{m['n_peer_borrow']} borrows ({m['peer_share']*100:.1f}% of "
+          f"served slots), peer stall {m['peer_stall_s']*1e3:.2f}ms")
+    for link in m["links"]:
+        by = ", ".join(f"{k} {v/1e6:.2f}MB"
+                       for k, v in link["bytes_by_cause"].items())
+        print(f"[mesh]   {link['name']}: busy {link['busy_s']*1e3:.2f}ms, "
+              f"queue {link['queue_depth']}, {by or 'idle'}")
 
 
 def _report_telemetry(tele, trace_out):
@@ -339,6 +379,7 @@ def _serve_continuous(args, cfg, eng, lm, prefetch_k):
           f"{s['ttft_s']['p99']*1e3:.2f}ms  "
           f"goodput {s['goodput_rps']:.1f} req/s  "
           f"SLO-met {s['slo_met_frac']*100:.0f}%")
+    _report_mesh(s.get("engine", eng.summary()))
     _report_telemetry(eng.telemetry, args.trace_out)
 
 

@@ -34,6 +34,11 @@ class BuddyState(NamedTuple):
     #                       outcome (runtime/costs.py; miss_policy='cost')
     fetch_cost: Any = None  # [E] f32 — expected stall of fetching this step
     #                         (in-flight ETA or modeled cold transfer)
+    peer_ok: Any = None   # [E] bool — experts resident in a peer device's
+    #                       HBM (precedence mode routes their misses to an
+    #                       ICI borrow; None on single-device meshes)
+    peer_cost: Any = None  # [E] f32 — expected stall of the peer borrow
+    #                        (MissCostModel.peer_eta; miss_policy='cost')
 
 
 def full_residency(num_experts: int, r_max: int = 8) -> BuddyState:
@@ -101,6 +106,10 @@ class MoEAux(NamedTuple):
     n_miss_drop: jax.Array    # [] misses the cost argmin dropped
     drop_slots: jax.Array     # [T, K] bool — per-slot cost-drop mask
     #                           (weights renormalized; no transfer, no stall)
+    n_peered: jax.Array = None  # [] misses served by a peer-HBM borrow
+    peer_slots: jax.Array = None  # [T, K] bool — per-slot peer-borrow mask
+    #                               (full weight, fp compute at the true id;
+    #                               the engine stalls on the ICI transfer)
 
 
 def router_topk(router_w, x_flat, top_k: int, jitter_key=None, jitter=0.0):
@@ -274,23 +283,28 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         res: SubstituteResult = substitute(
             idx, topk_logits, buddy.resident, buddy.table, buddy.q, policy,
             router_logits=logits, hop=buddy.hop, quant_ok=quant_ok,
-            fid_cost=tier_fid_cost, fetch_cost=buddy.fetch_cost)
+            fid_cost=tier_fid_cost, fetch_cost=buddy.fetch_cost,
+            peer_ok=buddy.peer_ok, peer_cost=buddy.peer_cost)
         new_idx, substituted, missed = res.indices, res.substituted, res.missed
         degraded = res.degraded
         dropped = (res.dropped if res.dropped is not None
                    else jnp.zeros_like(missed))
+        peered = (res.peered if res.peered is not None
+                  else jnp.zeros_like(missed))
     elif buddy is not None:         # no policy: raw residency miss count
         missed = ~buddy.resident[idx]
         new_idx = idx
         substituted = jnp.zeros_like(missed)
         degraded = jnp.zeros_like(missed)
         dropped = jnp.zeros_like(missed)
+        peered = jnp.zeros_like(missed)
     else:
         new_idx = idx
         substituted = jnp.zeros(idx.shape, bool)
         missed = jnp.zeros(idx.shape, bool)
         degraded = jnp.zeros(idx.shape, bool)
         dropped = jnp.zeros(idx.shape, bool)
+        peered = jnp.zeros(idx.shape, bool)
     run_degraded = use_tier and (quant_ok is not None
                                  or tier_fid_cost is not None)
 
@@ -339,7 +353,7 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         aux = MoEAux(lb, new_idx, idx, probs, substituted.sum(),
                      missed.sum(), n_dropped, miss_per_expert,
                      substituted, missed, degraded.sum(), degraded,
-                     dropped.sum(), dropped)
+                     dropped.sum(), dropped, peered.sum(), peered)
         return y.reshape(orig_shape), aux
 
     # ---------------- active-expert gather (tiny-batch decode) -----------
@@ -379,7 +393,7 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
         aux = MoEAux(lb, new_idx, idx, probs, substituted.sum(), missed.sum(),
                      jnp.zeros((), jnp.int32), miss_per_expert,
                      substituted, missed, degraded.sum(), degraded,
-                     dropped.sum(), dropped)
+                     dropped.sum(), dropped, peered.sum(), peered)
         return y.reshape(orig_shape), aux
 
     # ---------------- capacity-based dispatch (row-local) ----------------
@@ -451,5 +465,5 @@ def moe_forward(params: dict, x: jax.Array, cfg: MoEConfig, *,
     aux = MoEAux(lb, new_idx, idx, probs,
                  substituted.sum(), missed.sum(), n_dropped, miss_per_expert,
                  substituted, missed, degraded.sum(), degraded,
-                 dropped.sum(), dropped)
+                 dropped.sum(), dropped, peered.sum(), peered)
     return y.reshape(orig_shape), aux

@@ -152,6 +152,7 @@ def _zero_moe_aux(cfg: ModelConfig):
             "n_drop": jnp.zeros((), jnp.int32),
             "n_degraded": jnp.zeros((), jnp.int32),
             "n_miss_drop": jnp.zeros((), jnp.int32),
+            "n_peer": jnp.zeros((), jnp.int32),
             "miss_per_expert": jnp.zeros((e,), jnp.int32)}
 
 
@@ -161,6 +162,7 @@ def _moe_aux_dict(cfg, aux: moe_mod.MoEAux, record: bool):
          "n_drop": aux.n_dropped.astype(jnp.int32),
          "n_degraded": aux.n_degraded.astype(jnp.int32),
          "n_miss_drop": aux.n_miss_drop.astype(jnp.int32),
+         "n_peer": aux.n_peered.astype(jnp.int32),
          "miss_per_expert": aux.miss_per_expert}
     if record:
         d["indices"] = aux.orig_indices
@@ -169,6 +171,7 @@ def _moe_aux_dict(cfg, aux: moe_mod.MoEAux, record: bool):
         d["missed"] = aux.miss_slots
         d["degraded"] = aux.deg_slots
         d["dropped"] = aux.drop_slots
+        d["peered"] = aux.peer_slots
     return d
 
 
@@ -316,12 +319,13 @@ def _run_group(kind: str, gparams, x, gcache, ctx: StepCtx, gbuddy=None,
     # reduce aux over layers; keep per-layer stacks when recording
     red = {k: auxs[k].sum(0) for k in
            ("lb", "n_sub", "n_miss", "n_drop", "n_degraded", "n_miss_drop",
-            "miss_per_expert")}
+            "n_peer", "miss_per_expert")}
     if ctx.record:
         red["per_layer"] = {k: v for k, v in auxs.items()
                             if k in ("indices", "probs", "n_sub", "n_miss",
                                      "miss_per_expert", "substituted",
-                                     "missed", "degraded", "dropped")}
+                                     "missed", "degraded", "dropped",
+                                     "peered")}
     return x, new_caches, red
 
 

@@ -12,11 +12,23 @@ Residency states (driven by the transfer scheduler's timeline):
              usable (the paper's late-prefetch case) and NOT evictable
   pinned     resident and in use by the layer currently computing — never
              chosen as an eviction victim mid-use
+  locked     statically placed (an expert-parallel home shard) — resident
+             forever, never an eviction victim. All-False until
+             ``enable_mesh`` runs, so single-device behavior is unchanged.
 
 Eviction is buddy-aware when a buddy table is attached: among the
 policy-worst candidates, prefer evicting an expert that still has resident
 buddies, so a future miss on it can be absorbed by substitution instead of a
 synchronous PCIe fetch.
+
+Multi-device (``enable_mesh(n_devices)``): experts are sharded
+round-robin — ``owner[e] = e % D`` — and the cache becomes the view FROM
+device 0, the simulated compute device. Device 0 seeds its own home shard
+first (locked), spending leftover capacity on dynamic slots; each peer
+device d >= 1 keeps its home shard statically resident in its own HBM
+(``peer_resident[d]``), which is what the peer-borrow miss outcome reads.
+Peer residency has the same per-device capacity/pin/evict discipline via
+``peer_insert``/``peer_evict``.
 """
 from __future__ import annotations
 
@@ -42,6 +54,11 @@ class ExpertCache:
         self.resident = np.zeros((num_layers, num_experts), bool)
         self.inflight = np.zeros((num_layers, num_experts), bool)
         self.pinned = np.zeros((num_layers, num_experts), bool)
+        self.locked = np.zeros((num_layers, num_experts), bool)
+        self.n_devices = 1
+        self.owner = None               # [E] home device, set by enable_mesh
+        self.peer_resident = None       # [D, L, E] bool, set by enable_mesh
+        self.peer_pinned = None         # [D, L, E] bool, set by enable_mesh
         self.last_used = np.zeros((num_layers, num_experts), np.int64)
         self.freq = np.zeros((num_layers, num_experts), np.float64)
         self.partition = np.zeros((num_layers, num_experts), np.int32)
@@ -66,13 +83,86 @@ class ExpertCache:
         return self.resident.copy()
 
     def hop_vector(self, layer: int, origin_partition: int = 0) -> np.ndarray:
-        """ICI hops from origin to each expert's slot partition (0 if local;
-        non-resident experts get 0 — they are never eligible buddies)."""
+        """ICI hops from origin to each expert's slot partition (0 if
+        local). Non-resident experts are -1 — a sentinel, NOT zero hops:
+        the old 0 made "absent" indistinguishable from "local", so any
+        consumer that forgot to mask with ``resident`` silently priced
+        missing experts as free. Eligible buddy candidates are always
+        resident, so substitution masks the sentinel away; direct callers
+        must treat negatives as "not on device"."""
         p = self.partition[layer]
         side = max(1, int(np.sqrt(self.num_partitions)))
         dx = np.abs(p % side - origin_partition % side)
         dy = np.abs(p // side - origin_partition // side)
-        return ((dx + dy) * self.resident[layer]).astype(np.int32)
+        hops = (dx + dy).astype(np.int32)
+        return np.where(self.resident[layer], hops, np.int32(-1))
+
+    # -- expert-parallel mesh (view from device 0) ----------------------
+    def enable_mesh(self, n_devices: int) -> None:
+        """Shard experts round-robin across ``n_devices`` and re-seed this
+        cache as device 0's HBM: its home shard first (locked — statically
+        placed experts are never eviction victims), then as many of the
+        previously-seeded dynamic slots as capacity still allows. Peers
+        hold their own home shards (``peer_resident``). ``n_devices <= 1``
+        is a no-op, keeping the single-device build bit-identical."""
+        if n_devices <= 1:
+            return
+        d_n = int(n_devices)
+        l_n, e_n = self.num_layers, self.num_experts
+        self.n_devices = d_n
+        self.owner = (np.arange(e_n) % d_n).astype(np.int32)
+        home0 = self.owner == 0
+        for l in range(l_n):
+            prev = np.flatnonzero(self.resident[l] & ~home0)
+            seeded = np.flatnonzero(home0)[:self.capacity]
+            self.resident[l] = False
+            self.resident[l, seeded] = True
+            self.locked[l, seeded] = True
+            room = self.capacity - len(seeded)
+            if room > 0:
+                self.resident[l, prev[:room]] = True
+            self._assign_partitions(l)
+        self.peer_resident = np.zeros((d_n, l_n, e_n), bool)
+        self.peer_pinned = np.zeros((d_n, l_n, e_n), bool)
+        for d in range(1, d_n):
+            self.peer_resident[d] = (self.owner == d)[None, :]
+
+    def peer_holders(self, layer: int, expert: int) -> np.ndarray:
+        """Peer device ids whose HBM holds ``expert`` right now."""
+        if self.peer_resident is None:
+            return np.empty(0, np.int64)
+        return np.flatnonzero(self.peer_resident[:, layer, expert])
+
+    def peer_insert(self, device: int, layer: int, expert: int) -> int:
+        """Replicate an expert into peer ``device``'s HBM, evicting its
+        policy-worst unpinned non-home slot when over capacity. Returns the
+        evicted expert id or -1."""
+        assert self.peer_resident is not None and device >= 1
+        row = self.peer_resident[device, layer]
+        if row[expert]:
+            return -1
+        row[expert] = True
+        evicted = -1
+        if int(row.sum()) > self.capacity:
+            home = self.owner == device
+            cand = np.flatnonzero(row & ~home
+                                  & ~self.peer_pinned[device, layer])
+            cand = cand[cand != expert]
+            if len(cand):
+                evicted = int(self._policy_order(layer, cand)[0])
+                row[evicted] = False
+        return evicted
+
+    def peer_evict(self, device: int, layer: int, expert: int) -> bool:
+        """Drop a replica from a peer's HBM; home-shard experts (the
+        mesh's statically-placed copies) and pinned replicas refuse."""
+        assert self.peer_resident is not None and device >= 1
+        if (self.owner[expert] == device
+                or self.peer_pinned[device, layer, expert]
+                or not self.peer_resident[device, layer, expert]):
+            return False
+        self.peer_resident[device, layer, expert] = False
+        return True
 
     # -- updates --------------------------------------------------------
     def touch(self, layer: int, experts, weight: float = 1.0) -> None:
@@ -127,8 +217,10 @@ class ExpertCache:
         """Choose an eviction victim: never pinned, never the incoming
         expert; among the policy-worst few, prefer one whose buddies are
         resident (its future misses are absorbable). Returns -1 if every
-        candidate is pinned (caller tolerates transient over-capacity)."""
-        cand = np.flatnonzero(self.resident[layer] & ~self.pinned[layer])
+        candidate is pinned (caller tolerates transient over-capacity).
+        Locked slots — an expert-parallel home shard — are never victims."""
+        cand = np.flatnonzero(self.resident[layer] & ~self.pinned[layer]
+                              & ~self.locked[layer])
         cand = cand[cand != exclude]
         if len(cand) == 0:
             return -1

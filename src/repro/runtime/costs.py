@@ -1,14 +1,17 @@
-"""Unified expected-cost model for the four-way miss decision.
+"""Unified expected-cost model for the five-way miss decision.
 
-Every prefetch miss has four possible outcomes — buddy substitution
+Every prefetch miss has five possible outcomes — buddy substitution
 (core/substitute.py), degraded compute from the resident quant-replica tier
-(runtime/tiers.py), a demand fetch over PCIe (runtime/transfers.py), or
-dropping the slot and renormalizing. Before this module the runtime resolved
-them with a FIXED precedence (buddy strictly before degraded before
-fetch/drop) and a per-mechanism threshold (``stall_per_fidelity``). Related
-systems (MELINOE's compressed experts, predictive-prefetch replication) show
-the choices only compose when they are scored on ONE scale, so this module
-puts all four outcomes in stall-second units via a single exchange rate:
+(runtime/tiers.py), borrowing the full-precision expert from a peer
+device's HBM over ICI (multi-device meshes), a demand fetch over PCIe
+(runtime/transfers.py), or dropping the slot and renormalizing. Before this
+module the runtime resolved them with a FIXED precedence (buddy strictly
+before degraded before fetch/drop) and a per-mechanism threshold
+(``stall_per_fidelity``). Related systems (MELINOE's compressed experts,
+predictive-prefetch replication, ExpertFlow's hierarchy-wide memory
+coordination) show the choices only compose when they are scored on ONE
+scale, so this module puts all five outcomes in stall-second units via a
+single exchange rate:
 
   ``stall_per_quality``  seconds of pipeline stall the deployment is willing
                          to pay to avoid one unit of quality loss.
@@ -17,6 +20,10 @@ puts all four outcomes in stall-second units via a single exchange rate:
                    loss shrinks with the buddy's co-activation score
   cost(degraded) = stall_per_quality * fidelity[l, e]    zero stall; quality
                    loss is the replica's calibrated round-trip error
+  cost(peer)     = peer_eta_s[l, e]                      pure stall: the
+                   owning device's ICI link queue plus the hop-priced
+                   transfer — usually ~100x cheaper than PCIe, and zero
+                   quality loss (it is the full-precision expert)
   cost(fetch)    = eta_s[l, e]                           pure stall: the
                    in-flight tail (TransferScheduler.eta_s) or the modeled
                    full cold transfer; zero quality loss
@@ -43,16 +50,19 @@ import numpy as np
 from repro.runtime.memory import DEFAULT_HW, HardwareModel
 
 # outcome codes (argmin tie-break order: quality-free fetch never beats an
-# equally-priced reroute — ties go to the earlier, transfer-free outcome)
-BUDDY, DEGRADED, FETCH, DROP = 0, 1, 2, 3
-OUTCOMES = ("buddy", "degraded", "fetch", "drop")
+# equally-priced reroute — ties go to the earlier, transfer-free outcome;
+# a peer-HBM borrow beats an equally-priced host fetch, the cheaper link)
+BUDDY, DEGRADED, PEER, FETCH, DROP = 0, 1, 2, 3, 4
+OUTCOMES = ("buddy", "degraded", "peer", "fetch", "drop")
 
 
 class MissCostModel:
-    """Scores the four miss outcomes of every (layer, expert) on one
+    """Scores the five miss outcomes of every (layer, expert) on one
     stall-seconds scale and ranks prefetch candidates by expected stall
     saved. Stateless apart from its constants — call sites pass the current
-    timeline (scheduler), residency, and calibration each step."""
+    timeline (scheduler + per-link ICI schedulers), residency, and
+    calibration each step. Single-device call sites simply never pass
+    ``peer_eta`` and the model is the pre-mesh four-way scorer."""
 
     def __init__(self, num_layers: int, num_experts: int, *,
                  expert_bytes: int, hw: HardwareModel = DEFAULT_HW,
@@ -115,31 +125,73 @@ class MissCostModel:
     def drop_cost(self) -> float:
         return self.stall_per_quality * self.drop_loss
 
+    def peer_eta(self, links, peer_resident) -> np.ndarray:
+        """[L, E] expected stall of borrowing each expert from a peer
+        device's HBM over ICI — priced FROM THE OWNING LINK'S QUEUE, not a
+        free-link idealization. For every peer link d:
+
+            eta_d[e] = backlog_s(d) + fixed_s(d) + bytes / bw(d)
+
+        where backlog is the remaining service of demand-class transfers
+        already on that link (a borrow queues behind them). An expert the
+        link is already carrying pays only its optimistic in-flight tail.
+        Experts no peer holds are inf — the argmin falls through to
+        host-PCIe fetch. ``links``: {device: TransferScheduler},
+        ``peer_resident``: [D, L, E] bool (ExpertCache.peer_resident)."""
+        eta = np.full((self.num_layers, self.num_experts), np.inf)
+        if not links:
+            return eta
+        peer_resident = np.asarray(peer_resident, bool)
+        for d, link in links.items():
+            cold = link.backlog_s() + link.transfer_time(self.expert_bytes)
+            eta = np.where(peer_resident[d], np.minimum(eta, cold), eta)
+            for t in link.pending():
+                if t.layer < self.num_layers:
+                    eta[t.layer, t.expert] = min(eta[t.layer, t.expert],
+                                                 link.eta_s(t))
+        return eta
+
     # -- the unified score ----------------------------------------------
-    def _outcome_stack(self, fetch_eta, fidelity, best_q) -> np.ndarray:
+    def _outcome_stack(self, fetch_eta, fidelity, best_q,
+                       peer_eta=None) -> np.ndarray:
+        """Rows are indexed by the outcome codes: peer_eta=None (any
+        single-device call site) prices the peer row at inf, so the stack
+        is always 5-deep and codes never shift."""
         fetch_eta = np.asarray(fetch_eta, np.float64)
+        if peer_eta is None:
+            peer = np.full(fetch_eta.shape, np.inf)
+        else:
+            peer = np.asarray(peer_eta, np.float64)
         return np.stack([
             self.buddy_cost(best_q, shape=fetch_eta.shape),
             self.degraded_cost(fidelity, shape=fetch_eta.shape),
+            peer,
             fetch_eta,
             np.full(fetch_eta.shape, self.drop_cost()),
         ])
 
     def miss_cost(self, fetch_eta: np.ndarray,
                   fidelity: Optional[np.ndarray] = None,
-                  best_q: Optional[np.ndarray] = None) -> np.ndarray:
+                  best_q: Optional[np.ndarray] = None,
+                  peer_eta: Optional[np.ndarray] = None) -> np.ndarray:
         """The stall-equivalent cost the runtime would actually pay if this
-        expert missed right now — the min over all four outcomes. This is
+        expert missed right now — the min over all five outcomes. This is
         the 'lateness risk' a prefetch removes. Shapes follow ``fetch_eta``
         ([L, E] or a single layer's [E])."""
-        return self._outcome_stack(fetch_eta, fidelity, best_q).min(axis=0)
+        return self._outcome_stack(fetch_eta, fidelity, best_q,
+                                   peer_eta).min(axis=0)
 
     def outcome_argmin(self, fetch_eta: np.ndarray,
                        fidelity: Optional[np.ndarray] = None,
-                       best_q: Optional[np.ndarray] = None) -> np.ndarray:
-        """Int outcome codes (BUDDY/DEGRADED/FETCH/DROP) — the host-side
-        mirror of the in-graph argmin, for introspection/tests."""
-        return self._outcome_stack(fetch_eta, fidelity, best_q).argmin(axis=0)
+                       best_q: Optional[np.ndarray] = None,
+                       peer_eta: Optional[np.ndarray] = None) -> np.ndarray:
+        """Int outcome codes (BUDDY/DEGRADED/PEER/FETCH/DROP) — the
+        host-side mirror of the in-graph argmin, for introspection/tests.
+        np.argmin takes the first minimal row, which encodes the tie-break
+        order: reroutes beat transfers at equal cost, and a peer borrow
+        beats an equally-priced host fetch (cheaper link, full fidelity)."""
+        return self._outcome_stack(fetch_eta, fidelity, best_q,
+                                   peer_eta).argmin(axis=0)
 
     # -- prefetch ranking -----------------------------------------------
     def prefetch_scores(self, p_use: np.ndarray, miss_cost: np.ndarray,

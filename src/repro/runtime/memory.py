@@ -17,12 +17,19 @@ class HardwareModel:
     """TPU v5e-adjacent single-chip constants (roofline + transfer model)."""
     peak_flops: float = 197e12          # bf16 FLOP/s per chip
     hbm_bw: float = 819e9               # bytes/s
-    ici_bw: float = 50e9                # bytes/s per link
+    ici_bw: float = 50e9                # bytes/s per device<->device link
+    ici_fixed_s: float = 25e-6          # per-hop launch cost on the ICI mesh
     pcie_bw: float = 24e9               # bytes/s host<->device (16-32 GB/s, §2.4)
     pcie_fixed_s: float = 0.5e-3        # per-transfer fixed cost (launch+pin)
 
     def transfer_time(self, nbytes: int) -> float:
         return self.pcie_fixed_s + nbytes / self.pcie_bw
+
+    def ici_transfer_time(self, nbytes: int, hops: int = 1) -> float:
+        """One expert over the device mesh: per-hop launch cost, then the
+        payload streams at link bandwidth (wormhole routing — bytes pay the
+        link once, not per hop)."""
+        return self.ici_fixed_s * max(1, hops) + nbytes / self.ici_bw
 
     def decode_compute_time(self, active_params: int, batch: int,
                             dtype_bytes: int = 2) -> float:
@@ -50,8 +57,17 @@ class TransferLedger:
           demand_stall_s        cold miss, nothing in flight (full fetch wait)
           late_prefetch_stall_s predicted but not yet ARRIVED — the paper's
                                 late-prefetch case; stall is only the tail
+          peer_stall_s          miss served by borrowing the expert from a
+                                peer device's HBM over ICI (multi-device
+                                meshes only; absent from the breakdown when
+                                zero so single-device summaries are
+                                unchanged)
           overlapped_s          transfer time hidden under earlier layers'
                                 compute (costs bytes, not latency)
+
+    The ledger is link-agnostic: attach it to every per-link scheduler of a
+    device mesh and the cause keys (``peer_borrow`` for ICI borrows) keep
+    host-PCIe and peer traffic separable in one byte count.
     """
 
     def __init__(self, hw: HardwareModel = DEFAULT_HW):
@@ -65,11 +81,12 @@ class TransferLedger:
         self.overlap_s = 0.0
         self.demand_stall_s = 0.0
         self.late_prefetch_stall_s = 0.0
+        self.peer_stall_s = 0.0
         self.overlapped_s = 0.0
 
     # -- scheduler event path -------------------------------------------
     _CAUSE_KEY = {"prefetch": "prefetch", "demand": "sync_fetch",
-                  "upgrade": "upgrade"}
+                  "upgrade": "upgrade", "peer": "peer_borrow"}
 
     def attach(self, scheduler) -> None:
         scheduler.add_listener(self.on_transfer_event)
@@ -89,11 +106,14 @@ class TransferLedger:
             self.events_by_cause["escalated"] += 1
 
     def stall(self, kind: str, seconds: float) -> None:
-        """Engine-attributed pipeline stall. kind: 'demand'|'late_prefetch'."""
-        assert kind in ("demand", "late_prefetch")
+        """Engine-attributed pipeline stall.
+        kind: 'demand'|'late_prefetch'|'peer'."""
+        assert kind in ("demand", "late_prefetch", "peer")
         seconds = max(0.0, seconds)
         if kind == "demand":
             self.demand_stall_s += seconds
+        elif kind == "peer":
+            self.peer_stall_s += seconds
         else:
             self.late_prefetch_stall_s += seconds
         self.sync_stall_s += seconds     # aggregate view stays coherent
@@ -141,17 +161,20 @@ class TransferLedger:
         return sum(self.bytes_by_cause.values())
 
     def summary(self) -> dict:
+        breakdown = {
+            "demand_stall_s": self.demand_stall_s,
+            "late_prefetch_stall_s": self.late_prefetch_stall_s,
+            "overlapped_s": self.overlapped_s,
+        }
+        if self.peer_stall_s:       # multi-device only: D=1 dict unchanged
+            breakdown["peer_stall_s"] = self.peer_stall_s
         return {
             "bytes": dict(self.bytes_by_cause),
             "events": dict(self.events_by_cause),
             "total_bytes": self.total_bytes,
             "sync_stall_s": self.sync_stall_s,
             "overlap_s": self.overlap_s,
-            "stall_breakdown": {
-                "demand_stall_s": self.demand_stall_s,
-                "late_prefetch_stall_s": self.late_prefetch_stall_s,
-                "overlapped_s": self.overlapped_s,
-            },
+            "stall_breakdown": breakdown,
         }
 
 

@@ -325,13 +325,14 @@ class CalibrationMeter:
 
     The engine records, at the instant a miss outcome is chosen, the cost
     model's predicted stall-seconds for that outcome (the fetch ETA for
-    fetch; 0 for the transfer-free buddy/degraded/drop outcomes) and the
-    realized stall the timeline then actually charged. The per-class
-    residual (realized - predicted) is the direct calibration signal for
-    ``HardwareModel`` (fetch class) and — via the recorded quality-cost
-    column — for the ``stall_per_quality`` exchange rate."""
+    fetch; the ICI-link ETA for peer-HBM borrows; 0 for the transfer-free
+    buddy/degraded/drop outcomes) and the realized stall the timeline then
+    actually charged. The per-class residual (realized - predicted) is the
+    direct calibration signal for ``HardwareModel`` (fetch and peer
+    classes) and — via the recorded quality-cost column — for the
+    ``stall_per_quality`` exchange rate."""
 
-    OUTCOMES = ("buddy", "degraded", "fetch", "drop")
+    OUTCOMES = ("buddy", "degraded", "peer", "fetch", "drop")
 
     def __init__(self) -> None:
         self.by_outcome: Dict[str, _OutcomeCal] = {

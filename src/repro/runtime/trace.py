@@ -17,6 +17,11 @@ caused it. This module records the timeline itself:
   track "transfers"  per-transfer spans (submit -> land/cancel) with cause,
                      bytes, and priority, plus start/escalate instants —
                      emitted by TransferScheduler. Lane = transfer id.
+                     Named links (the ICI links of a multi-device mesh) get
+                     their own lanes: track "transfers:<link>" per link, so
+                     host-PCIe and each peer's borrow traffic render as
+                     separate rows. The unnamed host link keeps the bare
+                     "transfers" track — single-device traces are unchanged.
   track "engine"     whole-step spans and controller/budget events.
 
 Every record carries a monotonic sequence id assigned at record time, so
@@ -70,8 +75,9 @@ class FlightRecorder:
     def __init__(self) -> None:
         self.events: List[dict] = []
         self._seq = 0
-        # open transfer spans keyed by transfer id (submit seen, no end yet)
-        self._open_transfers: Dict[int, dict] = {}
+        # open transfer spans keyed by (link, transfer id) — tids restart
+        # per scheduler, so the link name disambiguates mesh traffic
+        self._open_transfers: Dict[tuple, dict] = {}
 
     def __len__(self) -> int:
         return len(self.events)
@@ -98,25 +104,30 @@ class FlightRecorder:
         return self._record(track, lane, kind, name, t0, t1 - t0, args)
 
     # -- transfer listener (driven by TransferScheduler._emit) ----------
-    def transfer_event(self, kind: str, t, now: float) -> None:
+    def transfer_event(self, kind: str, t, now: float,
+                       link: Optional[str] = None) -> None:
         """Map scheduler events onto per-transfer spans + instants. The
         scheduler stamps ``t.event_seq`` before calling (satellite:
-        deterministic ordering), recorded as a label for cross-checking."""
+        deterministic ordering), recorded as a label for cross-checking.
+        ``link`` names the emitting scheduler's lane: ``None`` (the host
+        PCIe link) records on the bare "transfers" track exactly as the
+        single-link recorder always did; a named ICI link records on its
+        own "transfers:<link>" track."""
+        track = "transfers" if link is None else f"transfers:{link}"
         base = {"cause": t.cause, "bytes": int(t.nbytes), "layer": t.layer,
                 "expert": t.expert, "event_seq": getattr(t, "event_seq", 0)}
         if kind == "submit":
-            self._open_transfers[t.tid] = dict(base, issue_s=t.issue_s)
-            self.instant("transfers", t.tid, "start", "submit", now, **base)
+            self._open_transfers[(link, t.tid)] = dict(base,
+                                                       issue_s=t.issue_s)
+            self.instant(track, t.tid, "start", "submit", now, **base)
         elif kind == "start":
-            self.instant("transfers", t.tid, "start", "link_start", now,
-                         **base)
+            self.instant(track, t.tid, "start", "link_start", now, **base)
         elif kind == "escalate":
-            self.instant("transfers", t.tid, "escalate", "escalate", now,
-                         **base)
+            self.instant(track, t.tid, "escalate", "escalate", now, **base)
         elif kind in ("complete", "cancel"):
-            opened = self._open_transfers.pop(t.tid, None)
+            opened = self._open_transfers.pop((link, t.tid), None)
             t0 = opened["issue_s"] if opened else t.issue_s
-            self.span("transfers", t.tid, "transfer",
+            self.span(track, t.tid, "transfer",
                       f"{t.cause}:{t.layer}.{t.expert}", t0, now,
                       outcome=("land" if kind == "complete" else "cancel"),
                       **base)

@@ -1,4 +1,4 @@
-"""Event-driven PCIe transfer scheduler (the decode-side transfer engine).
+"""Event-driven transfer scheduler — one instance per link.
 
 The paper's regime is transfer-bound: one expert over PCIe is ~10 ms while a
 decode layer is ~100 us, so WHEN a transfer lands — not just how many bytes
@@ -6,8 +6,11 @@ moved — decides whether a prefetched expert is usable or is a miss that buddy
 substitution must absorb. This module models that timeline explicitly:
 
   * a simulated clock shared with the serving engine (``now``),
-  * a single PCIe link whose bandwidth is FAIR-SHARED among the transfers it
-    is currently serving,
+  * one link per scheduler whose bandwidth is FAIR-SHARED among the
+    transfers it is currently serving — by default the host→device PCIe
+    link, but ``bw``/``fixed_s``/``name`` parameterize any link: an
+    expert-parallel mesh instantiates one scheduler per device↔device ICI
+    link (``make_ici_links``) next to the host link, all on one clock,
   * two priority classes — DEMAND fetches preempt PREFETCHES entirely (a
     stalled layer must not queue behind speculative traffic),
   * per-transfer fixed launch cost (host pinning + descriptor setup) paid
@@ -28,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.runtime.memory import DEFAULT_HW, HardwareModel
@@ -55,7 +59,7 @@ class Transfer:
     layer: int
     expert: int
     nbytes: int
-    cause: str                      # "prefetch" | "demand"
+    cause: str                      # "prefetch"|"demand"|"upgrade"|"peer"
     priority: int
     issue_s: float                  # submission time
     remaining_fixed_s: float        # launch cost left (serial, per transfer)
@@ -75,17 +79,29 @@ class Transfer:
 
 
 class TransferScheduler:
-    """Single-link PCIe timeline with priorities and fair bandwidth sharing.
+    """Single-link timeline with priorities and fair bandwidth sharing.
 
     ``advance(t)`` plays the link forward to simulated time ``t``; transfers
     that complete in that window fire "complete" events at their exact finish
     times. ``run_until_done(tr)`` is the stall primitive: it advances time
     until ``tr`` lands and returns the completion timestamp.
+
+    The default link is the host→device PCIe lane (``hw.pcie_bw`` /
+    ``hw.pcie_fixed_s``). Pass ``bw``/``fixed_s`` to model any other link —
+    a device↔device ICI hop for peer-HBM borrows — and ``name`` to label its
+    trace lane (``transfers:<name>``) and per-link accounting; ``name=None``
+    keeps the pre-mesh single-link trace output byte-identical.
     """
 
     def __init__(self, hw: HardwareModel = DEFAULT_HW,
-                 max_inflight_prefetch: int = 4):
+                 max_inflight_prefetch: int = 4, *,
+                 bw: Optional[float] = None,
+                 fixed_s: Optional[float] = None,
+                 name: Optional[str] = None):
         self.hw = hw
+        self.bw = hw.pcie_bw if bw is None else float(bw)
+        self.fixed_s = hw.pcie_fixed_s if fixed_s is None else float(fixed_s)
+        self.name = name
         self.now = 0.0
         self.busy_s = 0.0           # cumulative time the link was serving
         self.max_inflight_prefetch = max_inflight_prefetch
@@ -95,6 +111,7 @@ class TransferScheduler:
         self._listeners: List[Callable[[str, Transfer], None]] = []
         self._next_tid = 0
         self._event_seq = 0
+        self.bytes_by_cause: Dict[str, int] = {}    # per-link utilization
         self.trace = None           # optional FlightRecorder (runtime/trace)
 
     # -- wiring ---------------------------------------------------------
@@ -110,7 +127,7 @@ class TransferScheduler:
         for fn in self._listeners:
             fn(kind, t)
         if self.trace is not None:
-            self.trace.transfer_event(kind, t, self.now)
+            self.trace.transfer_event(kind, t, self.now, link=self.name)
 
     # -- submission / lookup -------------------------------------------
     def in_flight(self, layer: int, expert: int) -> Optional[Transfer]:
@@ -124,21 +141,26 @@ class TransferScheduler:
         request is more urgent). ``cause`` 'upgrade' is the degraded-then-
         upgrade background fetch (runtime/costs.py): speculative priority —
         it shares the prefetch class and cap — but exempt from stale-
-        prediction cancellation, and its bytes are ledgered separately."""
-        assert cause in ("prefetch", "demand", "upgrade")
+        prediction cancellation, and its bytes are ledgered separately.
+        ``cause`` 'peer' is a peer-HBM borrow over an ICI link: a stalled
+        slot is waiting on it, so it rides at demand priority."""
+        assert cause in ("prefetch", "demand", "upgrade", "peer")
         existing = self.in_flight(layer, expert)
         if existing is not None:
-            if cause == "demand" and existing.priority > PRIO_DEMAND:
+            if cause in ("demand", "peer") and \
+                    existing.priority > PRIO_DEMAND:
                 self.escalate(existing)
             return existing
         prio = priority if priority is not None else (
-            PRIO_DEMAND if cause == "demand" else PRIO_PREFETCH)
+            PRIO_DEMAND if cause in ("demand", "peer") else PRIO_PREFETCH)
         t = Transfer(tid=self._next_tid, layer=layer, expert=expert,
                      nbytes=int(nbytes), cause=cause, priority=prio,
                      issue_s=self.now,
-                     remaining_fixed_s=self.hw.pcie_fixed_s,
+                     remaining_fixed_s=self.fixed_s,
                      remaining_bytes=float(nbytes))
         self._next_tid += 1
+        self.bytes_by_cause[cause] = \
+            self.bytes_by_cause.get(cause, 0) + int(nbytes)
         self._by_key[(layer, expert)] = t
         heapq.heappush(self._queued, (t.priority, t.tid, t))
         self._emit("submit", t)
@@ -217,7 +239,7 @@ class TransferScheduler:
         if not serving:
             return float("inf")
         streaming = [t for t in serving if t.remaining_fixed_s <= _EPS_S]
-        share = self.hw.pcie_bw / max(1, len(streaming))
+        share = self.bw / max(1, len(streaming))
         dts = []
         for t in serving:
             if t.remaining_fixed_s > _EPS_S:
@@ -236,7 +258,7 @@ class TransferScheduler:
             step = min(dt, to_time - self.now)
             serving = self._serving()
             streaming = [t for t in serving if t.remaining_fixed_s <= _EPS_S]
-            share = self.hw.pcie_bw / max(1, len(streaming))
+            share = self.bw / max(1, len(streaming))
             if serving:
                 self.busy_s += step
             for t in serving:
@@ -273,7 +295,24 @@ class TransferScheduler:
         if t.state == DONE:
             return 0.0
         return max(0.0, t.remaining_fixed_s) \
-            + t.remaining_bytes / self.hw.pcie_bw
+            + t.remaining_bytes / self.bw
+
+    def transfer_time(self, nbytes: int) -> float:
+        """Cold (unqueued, unshared) service time of one transfer on THIS
+        link — the per-link analogue of ``HardwareModel.transfer_time``."""
+        return self.fixed_s + nbytes / self.bw
+
+    def backlog_s(self) -> float:
+        """Pessimistic wait before a NEW demand-class transfer would get
+        bandwidth: total remaining service of demand-priority transfers
+        already on the link (prefetches don't count — a new demand preempts
+        them). Used to price peer-borrow ETAs off a busy ICI link."""
+        s = 0.0
+        for t in self.pending():
+            if t.priority <= PRIO_DEMAND:
+                s += max(0.0, t.remaining_fixed_s) \
+                    + t.remaining_bytes / self.bw
+        return s
 
     def run_until_done(self, t: Transfer) -> float:
         """Advance the clock until ``t`` completes; returns its finish time.
@@ -320,3 +359,39 @@ class TransferScheduler:
                 seen.add(t.tid)
                 out.append(t)
         return out
+
+    def utilization(self) -> dict:
+        """Per-link digest: cumulative busy time, queue depth right now, and
+        the bytes submitted per cause (demand / prefetch / upgrade / peer)."""
+        return {
+            "name": self.name or "pcie",
+            "busy_s": self.busy_s,
+            "queue_depth": self.n_in_flight,
+            "bytes_by_cause": dict(sorted(self.bytes_by_cause.items())),
+            "total_bytes": sum(self.bytes_by_cause.values()),
+        }
+
+
+def device_hops(d: int, n_devices: int) -> int:
+    """Manhattan distance from device 0 to device ``d`` on the smallest
+    square grid holding ``n_devices`` chips — the same shape
+    ``launch/mesh.py`` builds and ``ExpertCache.hop_vector`` models."""
+    side = max(1, int(math.ceil(math.sqrt(n_devices))))
+    return abs(d % side - 0) + abs(d // side - 0)
+
+
+def make_ici_links(n_devices: int, hw: HardwareModel = DEFAULT_HW, *,
+                   ici_bw: Optional[float] = None
+                   ) -> Dict[int, "TransferScheduler"]:
+    """One ICI scheduler per peer device (1..D-1), each pricing the
+    Manhattan hop count from device 0 into its fixed launch cost. Returns
+    ``{device: scheduler}``; the caller advances them alongside the host
+    PCIe link so every link shares one simulated clock."""
+    bw = hw.ici_bw if ici_bw is None else float(ici_bw)
+    return {
+        d: TransferScheduler(
+            hw, bw=bw,
+            fixed_s=hw.ici_fixed_s * device_hops(d, n_devices),
+            name=f"ici{d}")
+        for d in range(1, n_devices)
+    }

@@ -41,7 +41,7 @@ from repro.runtime.memory import (DEFAULT_HW, HardwareModel, TransferLedger,
                                   expert_nbytes)
 from repro.runtime.telemetry import ExpertStats, Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
-from repro.runtime.transfers import TransferScheduler
+from repro.runtime.transfers import TransferScheduler, make_ici_links
 
 
 @dataclasses.dataclass
@@ -80,7 +80,10 @@ class ServeEngine:
                  tier: Optional[TieredExpertStore] = None,
                  upgrade_degraded: Optional[bool] = None,
                  prefetch_min_saving: Optional[float] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 n_devices: int = 1,
+                 ici_gbps: Optional[float] = None,
+                 peer_borrow: bool = True):
         """latency_cfg: full-scale config whose expert sizes / active params
         drive the transfer + compute latency model (the accuracy testbed can
         be a reduced model while latencies reflect the deployment target —
@@ -110,6 +113,22 @@ class ServeEngine:
         ~transfer_time, so a saving far below that cannot pay for its own
         bytes (misses a good buddy or replica absorbs score ~stall_per_
         quality x their tiny quality loss and fall under this bar).
+
+        n_devices: expert-parallel mesh size (1-8). Each layer's experts
+        are sharded round-robin across the devices (owner[e] = e % D);
+        device 0 is the simulated compute device, devices 1..D-1 are peer
+        HBM pools reachable over per-device ICI links (one TransferScheduler
+        per link, hop-priced on a 2D grid). A miss on an expert a peer
+        holds can be resolved by BORROWING it over ICI — the fifth miss
+        outcome, usually ~100x cheaper than a host PCIe fetch — and the
+        borrowed expert is inserted into device 0's cache on landing.
+        n_devices=1 (default) is bit-identical to the single-device engine.
+
+        ici_gbps: ICI per-link bandwidth override in GB/s (None: hw.ici_bw).
+
+        peer_borrow: gate the peer-borrow outcome (mesh misses fall back to
+        the four single-device outcomes when False) — the ablation arm of
+        the mesh benchmark.
 
         telemetry: an optional runtime.telemetry.Telemetry bundle. When
         attached, the engine emits flight-recorder spans on the simulated
@@ -149,6 +168,14 @@ class ServeEngine:
         # residency commits and byte counts are driven by the same timeline
         self.scheduler.add_listener(self.cache.on_transfer_event)
         self.ledger.attach(self.scheduler)
+        assert 1 <= int(n_devices) <= 8, "n_devices: 1-8 device mesh"
+        self.n_devices = int(n_devices)
+        self.peer_borrow = bool(peer_borrow)
+        self._ici_bw = (hw.ici_bw if ici_gbps is None
+                        else float(ici_gbps) * 1e9)
+        self.cache.enable_mesh(self.n_devices)
+        self.peer_links = self._build_peer_links()
+        self._n_peer_borrow = 0
         if tier is not None:
             self.ledger.tier_upload(tier.quant_bytes)
         self.stats = EngineStats()
@@ -198,6 +225,33 @@ class ServeEngine:
             static_argnames=())
 
     # ------------------------------------------------------------------
+    def _build_peer_links(self) -> dict:
+        """One ICI TransferScheduler per peer device (empty at D=1). Every
+        link shares the engine's event clock, commits borrowed experts into
+        device 0's cache on completion (same listener protocol as the host
+        PCIe link), and books its bytes/stalls into the shared ledger."""
+        if self.n_devices <= 1:
+            return {}
+        links = make_ici_links(self.n_devices, self.hw, ici_bw=self._ici_bw)
+        for link in links.values():
+            link.add_listener(self.cache.on_transfer_event)
+            self.ledger.attach(link)
+        return links
+
+    def advance_clock(self, to_time: float) -> None:
+        """Advance EVERY link of the mesh (host PCIe + all ICI links) to the
+        same simulated instant — the single event clock the serving
+        schedulers use for idle time between steps. At D=1 this is exactly
+        ``scheduler.advance``."""
+        self.scheduler.advance(to_time)
+        for link in self.peer_links.values():
+            link.advance(to_time)
+
+    def _links_busy_s(self) -> float:
+        return (self.scheduler.busy_s
+                + sum(l.busy_s for l in self.peer_links.values()))
+
+    # ------------------------------------------------------------------
     def _wire_telemetry(self) -> None:
         """Attach the (optional) telemetry bundle to the CURRENT scheduler —
         called from __init__ and again by reset_runtime (which rebuilds the
@@ -210,6 +264,10 @@ class ServeEngine:
             return
         self.scheduler.trace = tele.trace
         self.scheduler.add_listener(tele.prefetch.on_transfer_event)
+        for link in self.peer_links.values():
+            # per-link trace lanes ("transfers:ici<d>"); peer borrows are
+            # demand-class, so the prefetch meter does not listen here
+            link.trace = tele.trace
         if self.tier is not None:
             self.tier.telemetry = tele
         if tele.expert_stats is None:
@@ -231,7 +289,8 @@ class ServeEngine:
         res = self.cache.residency_mask()
         hop = np.stack([self.cache.hop_vector(l)
                         for l in range(self.num_moe_layers)])
-        quant_ok = fid_cost = fetch_cost = None
+        quant_ok = fid_cost = fetch_cost = peer_ok = peer_cost = None
+        peer_on = self.peer_borrow and bool(self.peer_links)
         if self._cost_mode:
             # unified cost mode: the in-graph argmin consumes per-expert
             # stall-equivalent costs instead of the precedence quant_ok mask
@@ -239,16 +298,27 @@ class ServeEngine:
             fid_cost = jnp.asarray(self.costs.degraded_cost(
                 self._tier_fidelity(), shape=eta.shape), jnp.float32)
             fetch_cost = jnp.asarray(eta, jnp.float32)
-        elif self.tier is not None:
-            quant_ok = jnp.asarray(
-                self.tier.degraded_ok(res, self._miss_eta()))
+            if peer_on:
+                # peer-borrow priced from the owning links' live queues
+                peer_cost = jnp.asarray(self.costs.peer_eta(
+                    self.peer_links, self.cache.peer_resident), jnp.float32)
+        else:
+            if self.tier is not None:
+                quant_ok = jnp.asarray(
+                    self.tier.degraded_ok(res, self._miss_eta()))
+            if peer_on:
+                # precedence mode: any expert a peer holds is borrowable
+                # (chain: buddy -> degraded -> peer -> fetch/drop)
+                peer_ok = jnp.asarray(self.cache.peer_resident.any(axis=0))
         return BuddyState(resident=jnp.asarray(res),
                           table=jnp.asarray(self._table),
                           q=jnp.asarray(self._q),
                           hop=jnp.asarray(hop),
                           quant_ok=quant_ok,
                           fid_cost=fid_cost,
-                          fetch_cost=fetch_cost)
+                          fetch_cost=fetch_cost,
+                          peer_ok=peer_ok,
+                          peer_cost=peer_cost)
 
     def init_caches(self, batch: int, seq_len: int):
         return transformer.init_caches(
@@ -339,7 +409,7 @@ class ServeEngine:
         trace = tele.trace if tele is not None else None
         sched = self.scheduler
         step_t0 = sched.now
-        busy0 = sched.busy_s
+        busy0 = self._links_busy_s()
         compute_total = self.hw.decode_compute_time(
             self._active_params, n_active)
         per_layer = compute_total / max(1, self.num_moe_layers)
@@ -356,10 +426,12 @@ class ServeEngine:
                       if "degraded" in rec else None)
             drop_sl = (np.asarray(rec["dropped"])             # [L, T, K]
                        if "dropped" in rec else None)
+            peer_sl = (np.asarray(rec["peered"])              # [L, T, K]
+                       if "peered" in rec else None)
             for li in range(idx.shape[0]):
                 layer = layer_off + li
                 # transfers in flight overlap all earlier layers' compute
-                sched.advance(cursor)
+                self.advance_clock(cursor)
                 rows = idx[li][active]                        # [T_act, K]
                 used = rows.reshape(-1)
                 self._observe_layer(layer, used)
@@ -391,16 +463,30 @@ class ServeEngine:
                         self.stats.n_miss_drop += n_dr
                 miss_row = np.bincount(rows[miss_sl[li][active]],
                                        minlength=e_n)
+                peer_row = None
+                n_peer = 0
+                if peer_sl is not None and peer_sl[li][active].any():
+                    # slots the argmin resolved by peer-HBM borrow: a
+                    # demand-class ICI transfer from the owning device
+                    peer_row = np.bincount(rows[peer_sl[li][active]],
+                                           minlength=e_n)
+                    n_peer = int(peer_row.sum())
                 if tele is not None:
                     self._record_layer_telemetry(
                         layer, rows, used, res_used, miss_row, cursor,
-                        n_sub=n_sub, n_deg=n_deg, n_dr=n_dr,
+                        n_sub=n_sub, n_deg=n_deg, n_dr=n_dr, n_peer=n_peer,
                         sub_slots=sub_sl[li][active],
                         deg_slots=(deg_sl[li][active]
                                    if deg_sl is not None else None))
                 stall_t0 = cursor
-                cursor, stall = self._resolve_misses(layer, miss_row,
-                                                     cursor)
+                stall = 0.0
+                if peer_row is not None:
+                    cursor, pstall = self._resolve_peer(layer, peer_row,
+                                                        cursor)
+                    stall += pstall
+                cursor, fstall = self._resolve_misses(layer, miss_row,
+                                                      cursor)
+                stall += fstall
                 step_stall += stall
                 if trace is not None:
                     if stall > 0.0:
@@ -414,9 +500,9 @@ class ServeEngine:
                 self.cache.unpin(layer)
             layer_off += idx.shape[0]
 
-        sched.advance(cursor)               # drain overlap to end of step
+        self.advance_clock(cursor)          # drain overlap to end of step
         step_time = cursor - step_t0
-        overlapped = max(0.0, (sched.busy_s - busy0) - step_stall)
+        overlapped = max(0.0, (self._links_busy_s() - busy0) - step_stall)
         self.ledger.overlapped(overlapped)
 
         self.stats.steps += 1
@@ -448,7 +534,7 @@ class ServeEngine:
     def _record_layer_telemetry(self, layer: int, rows, used, res_used,
                                 miss_row, t_layer: float, *, n_sub: int,
                                 n_deg: int, n_dr: int, sub_slots,
-                                deg_slots) -> None:
+                                deg_slots, n_peer: int = 0) -> None:
         """Per-(layer, step) telemetry: the miss-outcome breakdown (trace
         instant + counters), per-expert EMA updates, the prefetch meter's
         used-in-time credit, and the zero-stall calibration rows for the
@@ -468,6 +554,7 @@ class ServeEngine:
         m = tele.metrics
         m.counter("slots", outcome="hit").inc(len(res_used))
         for outcome, n in (("buddy", n_sub), ("degraded", n_deg),
+                           ("peer", n_peer),
                            ("fetch", int(miss_row.sum())), ("drop", n_dr)):
             if n:
                 m.counter("slots", outcome=outcome).inc(n)
@@ -491,10 +578,11 @@ class ServeEngine:
             cal.record("drop", 0.0, 0.0, n=n_dr,
                        quality_cost=self.costs.drop_cost())
         if tele.trace is not None:
+            extra = {"peer": n_peer} if self.n_devices > 1 else {}
             tele.trace.instant(
                 "layers", layer, "outcomes", f"L{layer}", t_layer,
                 hit=len(res_used), buddy=n_sub, degraded=n_deg,
-                fetch=int(miss_row.sum()), drop=n_dr)
+                fetch=int(miss_row.sum()), drop=n_dr, **extra)
 
     def _resolve_misses(self, layer: int, miss_row: np.ndarray,
                         cursor: float):
@@ -554,6 +642,58 @@ class ServeEngine:
             self.stats.n_miss_fetch += 1
         return cursor, stall
 
+    def _resolve_peer(self, layer: int, peer_row: np.ndarray,
+                      cursor: float):
+        """Peer-HBM borrows block THIS layer until the ICI transfer lands.
+        Each borrowed expert is fetched from the cheapest live holder's
+        link (priced exactly as costs.peer_eta: in-flight tail, else queue
+        backlog + hop-priced transfer) and inserted into device 0's cache
+        on completion via the link's cache listener — a hot borrowed expert
+        converges to a plain hit. Experts no reachable peer holds fall back
+        to a host demand fetch so the slot is never silently lost."""
+        tele = self.telemetry
+        stall = 0.0
+        for e in np.flatnonzero(peer_row > 0):
+            e = int(e)
+            if self.cache.resident[layer, e]:
+                # landed after this step's mask snapshot — already on device
+                continue
+            best_d = best_eta = t = None
+            for d in self.cache.peer_holders(layer, e):
+                link = self.peer_links.get(int(d))
+                if link is None:
+                    continue
+                tf = link.in_flight(layer, e)
+                eta = (link.eta_s(tf) if tf is not None else
+                       link.backlog_s()
+                       + link.transfer_time(self._expert_bytes))
+                if best_eta is None or eta < best_eta:
+                    best_d, best_eta, t = int(d), eta, tf
+            if best_d is None:
+                # raced out of every peer (eviction churn): demand-fetch
+                t = self.scheduler.submit(layer, e, self._expert_bytes,
+                                          "demand")
+                done = self.scheduler.run_until_done(t)
+                s = max(0.0, done - cursor)
+                self.ledger.stall("demand", s)
+                stall += s
+                cursor = max(cursor, done)
+                self.stats.n_miss_fetch += 1
+                continue
+            link = self.peer_links[best_d]
+            if t is None:
+                t = link.submit(layer, e, self._expert_bytes, "peer")
+            done = link.run_until_done(t)
+            s = max(0.0, done - cursor)
+            self.ledger.stall("peer", s)
+            if tele is not None:
+                tele.calibration.record("peer", best_eta, s)
+                tele.metrics.histogram("stall_s", kind="peer").observe(s)
+            stall += s
+            cursor = max(cursor, done)
+            self._n_peer_borrow += 1
+        return cursor, stall
+
     def _upgrade_degraded(self, layer: int, experts: np.ndarray) -> None:
         """Degraded-then-upgrade: background-fetch the TRUE experts that the
         quant tier just served, so later steps compute them at full
@@ -604,7 +744,13 @@ class ServeEngine:
         best_q = (None if self.policy.mode == "none" else
                   best_resident_q(self._table[tgt], self._q[tgt],
                                   self.cache.resident[tgt]))
-        risk = self.costs.miss_cost(eta, fid_row, best_q)
+        # a mesh miss a peer can absorb over ICI is cheap — its prefetch
+        # saving shrinks to the peer ETA, freeing PCIe bytes for experts
+        # only the host can supply
+        peer_row = (self.costs.peer_eta(self.peer_links,
+                                        self.cache.peer_resident)[tgt]
+                    if self.peer_borrow and self.peer_links else None)
+        risk = self.costs.miss_cost(eta, fid_row, best_q, peer_eta=peer_row)
         score = self.costs.prefetch_scores(p_use, risk,
                                            self.cache.resident[tgt])
         new_score = np.where(self.cache.inflight[tgt], 0.0, score)
@@ -686,6 +832,12 @@ class ServeEngine:
         self.scheduler = TransferScheduler(self.hw)
         self.scheduler.add_listener(self.cache.on_transfer_event)
         self.ledger.attach(self.scheduler)
+        if self.cache.n_devices != self.n_devices:
+            # a caller-supplied cache arrives un-sharded: seed the home
+            # shard and peer pools exactly as __init__ did
+            self.cache.enable_mesh(self.n_devices)
+        self.peer_links = self._build_peer_links()
+        self._n_peer_borrow = 0
         if self.tier is not None:
             self.ledger.tier_upload(self.tier.quant_bytes)
         self.stats = EngineStats()
@@ -765,12 +917,17 @@ class ServeEngine:
         return nll / n
 
     def stall_breakdown(self) -> dict:
-        """Single source of truth: the ledger's event-timeline attribution."""
-        return {
+        """Single source of truth: the ledger's event-timeline attribution.
+        The peer key appears only on a mesh (D>1) so single-device
+        summaries stay bit-identical to the pre-mesh engine."""
+        d = {
             "demand_stall_s": self.ledger.demand_stall_s,
             "late_prefetch_stall_s": self.ledger.late_prefetch_stall_s,
             "overlapped_s": self.ledger.overlapped_s,
         }
+        if self.n_devices > 1:
+            d["peer_stall_s"] = self.ledger.peer_stall_s
+        return d
 
     def summary(self) -> dict:
         s = {
@@ -795,6 +952,21 @@ class ServeEngine:
                 "n_upgrade_issued": self.stats.n_upgrade_issued,
                 "upgrade_degraded": self.upgrade_degraded,
                 "prefetch_worthwhile_last": self.last_prefetch_worthwhile,
+            }
+        if self.n_devices > 1:
+            # only present on a mesh: n_devices=1 summaries stay
+            # bit-identical to the pre-mesh engine
+            total = self.stats.n_hit + self.stats.n_sub + \
+                self.stats.n_miss_fetch + self._n_peer_borrow
+            s["mesh"] = {
+                "n_devices": self.n_devices,
+                "ici_bw": self._ici_bw,
+                "peer_borrow": self.peer_borrow,
+                "n_peer_borrow": self._n_peer_borrow,
+                "peer_share": (self._n_peer_borrow / total if total else 0.0),
+                "peer_stall_s": self.ledger.peer_stall_s,
+                "links": [self.peer_links[d].utilization()
+                          for d in sorted(self.peer_links)],
             }
         if self.telemetry is not None:
             # only present with a telemetry bundle attached: telemetry=off

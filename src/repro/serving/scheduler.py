@@ -527,7 +527,7 @@ class ContinuousScheduler:
                 nxt = queue.next_arrival()
                 if nxt is None:
                     break                       # drained: all work done
-                eng.scheduler.advance(max(eng.scheduler.now, nxt))
+                eng.advance_clock(max(eng.scheduler.now, nxt))
                 continue
 
             # ---- one fused step: prefill + decode rows together -------
@@ -574,7 +574,7 @@ class ContinuousScheduler:
                 nxt = queue.next_arrival()
                 if nxt is None:
                     break                       # drained: all work done
-                eng.scheduler.advance(max(eng.scheduler.now, nxt))
+                eng.advance_clock(max(eng.scheduler.now, nxt))
                 continue
 
             # ---- one fused step: prefill chunks + decode rows ---------
@@ -678,7 +678,7 @@ class StaticServer:
             chunk = [by_rid[q.rid] for q in bchunk if q.rid >= 0]
             # batch-formation barrier: wait for the last member
             form_t = max(r.arrival_s for r in chunk)
-            eng.scheduler.advance(max(eng.scheduler.now, form_t))
+            eng.advance_clock(max(eng.scheduler.now, form_t))
 
             plen = mat.shape[1]
             max_new = max(q.max_new_tokens for q in bchunk)

@@ -1,0 +1,75 @@
+"""Frozen single-device serving scenario for the mesh bit-identity gate.
+
+``golden_summary`` runs a small deterministic generate() and returns the
+engine summary. ``tests/data/pre_mesh_summary.json`` was written by this
+module BEFORE the multi-device refactor landed; ``tests/test_mesh.py``
+re-runs the identical scenario with ``n_devices=1`` and requires the
+summary to match byte-for-byte — the contract that a single-device mesh
+is the exact pre-refactor engine.
+
+Regenerate (only if the scenario itself must change, never to paper over
+a diff):  PYTHONPATH=src python -m tests._mesh_golden
+"""
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "pre_mesh_summary.json")
+
+
+def jsonify(x):
+    """Summary -> plain JSON types (exact: ints stay ints, floats floats)."""
+    if isinstance(x, dict):
+        return {str(k): jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [jsonify(v) for v in x]
+    if isinstance(x, (bool, np.bool_)):
+        return bool(x)
+    if isinstance(x, (int, np.integer)):
+        return int(x)
+    if isinstance(x, (float, np.floating)):
+        return float(x)
+    return x
+
+
+def golden_summary(miss_policy: str = "precedence", n_devices=None) -> dict:
+    """The frozen scenario. ``n_devices=None`` omits the kwarg entirely
+    (how every pre-refactor caller constructed the engine)."""
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    q = np.random.default_rng(0).random((l, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    policy = BuddyPolicy(tau=0.0, beta=1.1, rho=4, H=3,
+                         miss_policy=miss_policy)
+    kw = {} if n_devices is None else {"n_devices": n_devices}
+    eng = ServeEngine(cfg, params, tables=tables, policy=policy,
+                      cache=ExpertCache(l, e, 0.5, seed=0),
+                      predictor=PrevStepPredictor(l, e),
+                      prefetch_k=4, seed=0, **kw)
+    eng.generate(lm.sample(2, 6), max_new_tokens=8)
+    return jsonify(eng.summary())
+
+
+def main():
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    golden = {mp: golden_summary(mp) for mp in ("precedence", "cost")}
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -58,8 +58,12 @@ def test_lfu_evicts_least_frequent():
 
 
 def test_hop_vector_zero_single_partition():
+    # residents on a single partition are all local (0 hops); non-residents
+    # get the -1 sentinel — never 0, which would read as "local and free"
     c = ExpertCache(1, 8, 0.5, num_partitions=1)
-    assert (c.hop_vector(0) == 0).all()
+    h = c.hop_vector(0)
+    assert (h[c.resident[0]] == 0).all()
+    assert (h[~c.resident[0]] == -1).all()
 
 
 def test_hop_vector_multi_partition():

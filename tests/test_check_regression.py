@@ -10,6 +10,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.check_regression import (FLOORS, KIND_PATHS,  # noqa: E402
                                          compare, extract_kernel_metrics,
+                                         extract_mesh_metrics,
                                          extract_metrics, inject_regression)
 
 
@@ -136,6 +137,59 @@ def test_kernel_baseline_committed_and_consistent():
     for name, val in baseline.items():
         assert name.startswith("decode_step.step_time_ratio.")
         assert 0.0 < val < 2.0, (name, val)
+
+
+def _mesh_results():
+    """Minimal results['mesh'] section as bench_serving --n-devices writes."""
+    return {
+        "seed": 0,
+        "mesh": {"n_devices": 4,
+                 "p99_tok_ms": {"peer_on": 0.15, "peer_off": 2.8},
+                 "peer_share": 0.014},
+    }
+
+
+def test_extract_mesh_metrics_shapes():
+    m = extract_mesh_metrics(_mesh_results())
+    assert m == {"mesh_d4.p99_token_latency_ms.peer_on": 0.15,
+                 "mesh_d4.p99_token_latency_ms.peer_off": 2.8,
+                 "mesh_d4.peer_share": 0.014}
+    # a single-device serving.json has no mesh section -> nothing to gate
+    assert extract_mesh_metrics({"seed": 0}) == {}
+
+
+def test_mesh_peer_share_direction_and_floor():
+    """peer_share gates HIGHER-is-better: a collapse of the fifth outcome
+    fails even when the latency numbers hold; tiny absolute wobbles under
+    the 0.002 floor pass."""
+    m = extract_mesh_metrics(_mesh_results())
+    share = "mesh_d4.peer_share"
+    cur = dict(m)
+    cur[share] = 0.0                   # borrows stopped firing entirely
+    rows, bad = compare(m, cur)
+    assert bad
+    assert dict((r[0], r[4]) for r in rows)[share] == "REGRESSION"
+    cur[share] = m[share] - 0.001      # -7% rel but under the abs floor
+    assert FLOORS["peer_share"] > 0.001
+    _, bad2 = compare(m, cur)
+    assert not bad2
+    # and the self-test injection trips every mesh metric
+    rows3, bad3 = compare(m, inject_regression(m, 1.3))
+    assert bad3 and all(r[4] == "REGRESSION" for r in rows3)
+
+
+def test_mesh_baseline_committed_and_consistent():
+    import json
+    baseline_path = KIND_PATHS["mesh"][1]
+    assert os.path.exists(baseline_path), baseline_path
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    assert set(baseline) == set(extract_mesh_metrics(_mesh_results()))
+    # the committed A/B must show peer borrowing WINNING on p99 — that is
+    # the acceptance contract the gate then protects
+    assert baseline["mesh_d4.p99_token_latency_ms.peer_on"] < \
+        baseline["mesh_d4.p99_token_latency_ms.peer_off"]
+    assert baseline["mesh_d4.peer_share"] > 0.0
 
 
 def test_missing_metric_fails():

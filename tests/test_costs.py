@@ -11,14 +11,14 @@ from repro.core import BuddyPolicy, build_buddy_lists
 from repro.core.substitute import substitute
 from repro.models import transformer
 from repro.runtime.cache import ExpertCache
-from repro.runtime.costs import (BUDDY, DEGRADED, DROP, FETCH, MissCostModel,
-                                 best_resident_q)
+from repro.runtime.costs import (BUDDY, DEGRADED, DROP, FETCH, PEER,
+                                 MissCostModel, best_resident_q)
 from repro.runtime.memory import DEFAULT_HW
 from repro.runtime.prefetch import (AdaptiveBudgetController,
                                     CrossLayerPredictor, NoisyOraclePredictor,
                                     PrevStepPredictor, TopFreqPredictor)
 from repro.runtime.tiers import TieredExpertStore
-from repro.runtime.transfers import TransferScheduler
+from repro.runtime.transfers import TransferScheduler, make_ici_links
 from repro.serving.engine import ServeEngine
 from repro.training.data import MarkovLM
 
@@ -158,6 +158,74 @@ def test_best_resident_q():
     b3 = best_resident_q(np.stack([table] * 2), np.stack([q] * 2), res2)
     np.testing.assert_allclose(b3[0], [0.9, -1.0, 0.7, -1.0])
     np.testing.assert_allclose(b3[1], [-1.0, 0.3, 0.8, -1.0])
+
+
+# ---------------------------------------------------------------------------
+# the fifth outcome: peer-HBM borrow
+# ---------------------------------------------------------------------------
+def test_five_way_argmin_tie_breaks():
+    """Canonical precedence at EQUAL cost: buddy > degraded > peer > fetch >
+    drop (np.argmin takes the first minimal row; reroutes beat transfers,
+    the cheaper link beats the host)."""
+    # 0.5 is exactly representable, so 1 - bq == fid == drop_cost bit-for-bit
+    m = MissCostModel(1, 2, expert_bytes=1000, stall_per_quality=1.0,
+                      drop_loss=0.5)
+    c = m.drop_cost()           # 0.5 — make every outcome cost exactly this
+    fetch = np.full((1, 2), c)
+    peer = np.full((1, 2), c)
+    fid = np.full((1, 2), 0.5)
+    bq = np.full((1, 2), 0.5)
+    assert (m.outcome_argmin(fetch, fid, bq, peer) == BUDDY).all()
+    assert (m.outcome_argmin(fetch, fid, None, peer) == DEGRADED).all()
+    assert (m.outcome_argmin(fetch, None, None, peer) == PEER).all(), \
+        "a peer borrow beats an equally-priced host fetch"
+    assert (m.outcome_argmin(fetch, None, None, None) == FETCH).all()
+    assert (m.outcome_argmin(np.full((1, 2), np.inf)) == DROP).all()
+    # peer_eta=None (single-device call sites) prices the peer row at inf:
+    # codes never shift, so FETCH is still 3 on a 4-outcome stack
+    assert (m.outcome_argmin(np.full((1, 2), 1e-6)) == FETCH).all()
+
+
+def test_peer_eta_vs_pcie_fetch_crossover():
+    """The economics of the fifth outcome: an idle ICI link wins against a
+    PCIe fetch, but enough queued demand traffic on the owning link pushes
+    the borrow past the host ETA and the argmin falls back to FETCH."""
+    nbytes = 4 << 20
+    m = MissCostModel(1, 4, expert_bytes=nbytes)
+    links = make_ici_links(2, DEFAULT_HW)
+    peer_res = np.zeros((2, 1, 4), bool)
+    peer_res[1, 0, :] = True            # device 1 owns everything
+    fetch = m.fetch_eta(None)           # cold PCIe everywhere
+    eta = m.peer_eta(links, peer_res)
+    assert (eta[0] < fetch[0]).all(), "idle ICI beats cold PCIe"
+    assert (m.outcome_argmin(fetch, peer_eta=eta) == PEER).all()
+    # pile demand transfers onto the owning link until the queue backlog
+    # alone exceeds the full host transfer: the borrow now loses
+    backlog_needed = DEFAULT_HW.transfer_time(nbytes)
+    n = int(np.ceil(backlog_needed / links[1].transfer_time(nbytes))) + 1
+    for i in range(n):
+        links[1].submit(5, i, nbytes, "peer")    # other layer: no discount
+    eta2 = m.peer_eta(links, peer_res)
+    assert (eta2[0] > fetch[0]).all(), "a saturated ICI queue loses to PCIe"
+    assert (m.outcome_argmin(fetch, peer_eta=eta2) == FETCH).all()
+    # an expert ALREADY in flight on the link pays only its remaining tail
+    t = links[1].submit(0, 2, nbytes, "peer")
+    eta3 = m.peer_eta(links, peer_res)
+    assert eta3[0, 2] == pytest.approx(links[1].eta_s(t))
+    assert eta3[0, 2] < eta2[0, 2]
+
+
+def test_peer_eta_unheld_expert_is_inf():
+    m = MissCostModel(1, 4, expert_bytes=1000)
+    links = make_ici_links(3, DEFAULT_HW)
+    peer_res = np.zeros((3, 1, 4), bool)
+    peer_res[1, 0, 1] = True
+    peer_res[2, 0, 2] = True
+    eta = m.peer_eta(links, peer_res)
+    assert np.isfinite(eta[0, 1]) and np.isfinite(eta[0, 2])
+    assert np.isinf(eta[0, 0]) and np.isinf(eta[0, 3])
+    # no links at all (single device): everything inf
+    assert np.isinf(m.peer_eta({}, peer_res)).all()
 
 
 # ---------------------------------------------------------------------------

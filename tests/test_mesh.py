@@ -1,0 +1,217 @@
+"""Expert-parallel multi-device serving: the n_devices=1 bit-identity
+contract, partition-aware cache invariants (enable_mesh / peer residency),
+hop-priced ICI links, and the D=4 engine path where peer-HBM borrows fire.
+
+The bit-identity test is the load-bearing one: tests/data/pre_mesh_summary
+.json was written by tests/_mesh_golden.py BEFORE the mesh refactor landed,
+and an n_devices=1 engine must still reproduce it byte-for-byte."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.memory import DEFAULT_HW
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.runtime.telemetry import Telemetry
+from repro.runtime.transfers import device_hops, make_ici_links
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+from tests._mesh_golden import GOLDEN_PATH, golden_summary, jsonify
+
+
+# ---------------------------------------------------------------------------
+# single-device bit-identity (the refactor's hard contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("miss_policy", ["precedence", "cost"])
+def test_single_device_bit_identity(miss_policy):
+    """An n_devices=1 engine IS the pre-refactor engine: the frozen golden
+    scenario's summary must match the committed pre-mesh capture exactly —
+    every counter, every float bit. No tolerance: any drift means the mesh
+    plumbing leaked into the single-device path."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    assert golden_summary(miss_policy, n_devices=1) == golden[miss_policy]
+
+
+# ---------------------------------------------------------------------------
+# satellite: hop_vector non-resident sentinel
+# ---------------------------------------------------------------------------
+def test_hop_vector_nonresident_sentinel():
+    """Regression: hop_vector used to return 0 for NON-RESIDENT experts,
+    indistinguishable from 'resident at the origin partition' — consumers
+    that forgot to mask with residency priced missing experts as free. It
+    must now return -1 exactly on the non-resident set."""
+    cache = ExpertCache(2, 8, 0.5, seed=0)
+    for l in range(2):
+        hv = cache.hop_vector(l)
+        np.testing.assert_array_equal(hv < 0, ~cache.resident[l])
+        assert (hv[cache.resident[l]] >= 0).all()
+        assert (hv[~cache.resident[l]] == -1).all()
+    # origin shift never turns the sentinel into a valid hop count
+    hv = cache.hop_vector(0, origin_partition=cache.num_partitions - 1)
+    assert (hv[~cache.resident[0]] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# partition-aware cache: enable_mesh / peer residency
+# ---------------------------------------------------------------------------
+def test_enable_mesh_invariants():
+    cache = ExpertCache(3, 8, 0.5, seed=1)
+    cache.enable_mesh(4)
+    e = np.arange(8)
+    np.testing.assert_array_equal(cache.owner, e % 4)
+    home0 = cache.owner == 0
+    for l in range(3):
+        # device 0's home shard is statically placed and eviction-proof
+        assert cache.resident[l, home0].all()
+        assert cache.locked[l, home0].all()
+        assert not cache.locked[l, ~home0].any()
+        assert int(cache.resident[l].sum()) <= cache.capacity
+    # peers statically hold exactly their home shards; device 0's row in
+    # peer_resident stays empty (its residency lives in `resident`)
+    assert not cache.peer_resident[0].any()
+    for d in range(1, 4):
+        np.testing.assert_array_equal(
+            cache.peer_resident[d], np.broadcast_to(cache.owner == d, (3, 8)))
+
+
+def test_enable_mesh_single_device_noop():
+    a = ExpertCache(2, 8, 0.5, seed=3)
+    b = ExpertCache(2, 8, 0.5, seed=3)
+    b.enable_mesh(1)
+    assert b.n_devices == 1 and b.owner is None and b.peer_resident is None
+    np.testing.assert_array_equal(a.resident, b.resident)
+    np.testing.assert_array_equal(a.locked, b.locked)
+    np.testing.assert_array_equal(a.partition, b.partition)
+
+
+def test_peer_insert_evict_holders():
+    cache = ExpertCache(1, 8, 0.5, seed=0)      # capacity 4
+    cache.enable_mesh(4)                         # home shards of size 2
+    # expert 0 lives on device 0; replicate it into device 1's HBM
+    assert list(cache.peer_holders(0, 0)) == []
+    assert cache.peer_insert(1, 0, 0) == -1      # 3 <= capacity, no victim
+    assert list(cache.peer_holders(0, 0)) == [1]
+    assert cache.peer_insert(1, 0, 0) == -1      # idempotent re-insert
+    assert cache.peer_insert(1, 0, 2) == -1      # 4 == capacity, still fits
+    # a fifth insert overflows: the victim must be a non-home replica
+    evicted = cache.peer_insert(1, 0, 3)
+    assert evicted in (0, 2)
+    assert not cache.peer_resident[1, 0, evicted]
+    # home-shard experts refuse eviction; live replicas drop
+    home_e = int(np.flatnonzero(cache.owner == 1)[0])
+    assert not cache.peer_evict(1, 0, home_e)
+    assert cache.peer_resident[1, 0, home_e]
+    kept = 3 if evicted != 3 else (2 if evicted != 2 else 0)
+    assert cache.peer_evict(1, 0, kept)
+    assert not cache.peer_resident[1, 0, kept]
+    # pinned replicas refuse too
+    cache.peer_insert(2, 0, 1)
+    cache.peer_pinned[2, 0, 1] = True
+    assert not cache.peer_evict(2, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# per-link transfer schedulers (ICI)
+# ---------------------------------------------------------------------------
+def test_device_hops_and_ici_links():
+    # 4 devices -> 2x2 grid: d1 and d2 are one hop out, d3 is the corner
+    assert [device_hops(d, 4) for d in range(4)] == [0, 1, 1, 2]
+    links = make_ici_links(4, DEFAULT_HW)
+    assert sorted(links) == [1, 2, 3]
+    for d, link in links.items():
+        assert link.name == f"ici{d}"
+        assert link.bw == DEFAULT_HW.ici_bw
+        assert link.fixed_s == pytest.approx(
+            DEFAULT_HW.ici_fixed_s * device_hops(d, 4))
+    # the corner device pays strictly more launch cost than its neighbours
+    nb = 4 << 20
+    assert links[3].transfer_time(nb) > links[1].transfer_time(nb)
+    # bandwidth override rescales the streaming term
+    slow = make_ici_links(2, DEFAULT_HW, ici_bw=DEFAULT_HW.ici_bw / 4)
+    assert slow[1].transfer_time(nb) > links[1].transfer_time(nb)
+
+
+def test_peer_link_completion_inserts_into_cache():
+    """The borrow lifecycle at the link level: a 'peer' transfer completing
+    on an ICI link lands the expert in device 0's cache via the listener —
+    a hot borrowed expert converges to a plain hit."""
+    cache = ExpertCache(2, 8, 0.5, seed=0)
+    cache.enable_mesh(2)
+    links = make_ici_links(2, DEFAULT_HW)
+    links[1].add_listener(cache.on_transfer_event)
+    held = np.flatnonzero((cache.owner == 1) & ~cache.resident[0])
+    assert len(held), "seed must leave some peer-owned expert non-resident"
+    e = int(held[0])
+    t = links[1].submit(0, e, 4 << 20, "peer")
+    assert cache.inflight[0, e]
+    links[1].run_until_done(t)
+    assert cache.resident[0, e] and not cache.inflight[0, e]
+
+
+# ---------------------------------------------------------------------------
+# the D=4 engine path
+# ---------------------------------------------------------------------------
+def _mesh_engine(n_devices, miss_policy="cost", telemetry=None):
+    """The golden scenario's engine, opened up to a device mesh."""
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    q = np.random.default_rng(0).random((l, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    policy = BuddyPolicy(tau=0.0, beta=1.1, rho=4, H=3,
+                         miss_policy=miss_policy)
+    return ServeEngine(cfg, params, tables=tables, policy=policy,
+                       cache=ExpertCache(l, e, 0.5, seed=0),
+                       predictor=PrevStepPredictor(l, e),
+                       prefetch_k=4, seed=0, n_devices=n_devices,
+                       telemetry=telemetry)
+
+
+@pytest.fixture(scope="module")
+def mesh_run():
+    eng = _mesh_engine(4, telemetry=Telemetry())
+    lm = MarkovLM(eng.cfg.vocab_size, seed=0)
+    eng.generate(lm.sample(2, 6), max_new_tokens=8)
+    return eng, jsonify(eng.summary())
+
+
+def test_mesh_engine_peer_borrows_fire(mesh_run):
+    eng, s = mesh_run
+    m = s["mesh"]
+    assert m["n_devices"] == 4 and m["peer_borrow"] is True
+    assert m["n_peer_borrow"] > 0, "the fifth outcome never fired at D=4"
+    assert 0.0 < m["peer_share"] <= 1.0
+    assert m["n_peer_borrow"] == eng._n_peer_borrow
+    assert m["peer_stall_s"] > 0.0
+    assert s["stall_breakdown"]["peer_stall_s"] == m["peer_stall_s"]
+    # one utilization digest per ICI link, and the borrows moved real bytes
+    assert [u["name"] for u in m["links"]] == ["ici1", "ici2", "ici3"]
+    peer_bytes = sum(u["bytes_by_cause"].get("peer", 0) for u in m["links"])
+    assert peer_bytes == m["n_peer_borrow"] * eng._expert_bytes
+    # the calibration meter learned a 'peer' outcome class
+    assert s["telemetry"]["calibration"]["peer"]["n"] == m["n_peer_borrow"]
+
+
+def test_mesh_reset_runtime_preserves_mesh(mesh_run):
+    eng, _ = mesh_run
+    eng.reset_runtime()
+    assert eng.cache.n_devices == 4
+    assert sorted(eng.peer_links) == [1, 2, 3]
+    for link in eng.peer_links.values():
+        assert link.busy_s == 0.0
+    assert eng._n_peer_borrow == 0
+    assert eng.summary()["mesh"]["n_peer_borrow"] == 0
+
+
+def test_single_device_summary_has_no_mesh_section():
+    eng = _mesh_engine(1)
+    s = eng.summary()
+    assert "mesh" not in s
+    assert "peer_stall_s" not in eng.stall_breakdown()

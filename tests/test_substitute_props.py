@@ -1,12 +1,12 @@
-"""Property-style invariants of substitute()'s four-way outcome masks.
+"""Property-style invariants of substitute()'s five-way outcome masks.
 
 The fused dispatch consumes these masks as a PARTITION — every non-resident
-routed slot must resolve to exactly one of {substituted, degraded, missed
-(fetch), dropped}, and a substituted slot's final id must be resident.
-Checked under both miss_policy='precedence' and 'cost' over randomized
-shapes/residency/tables (hypothesis, or the seeded fallback in
-tests/_hypothesis_stub.py), plus deterministic tie-break edge cases of the
-cost argmin."""
+routed slot must resolve to exactly one of {substituted, degraded, peered
+(peer-HBM borrow), missed (fetch), dropped}, and a substituted slot's final
+id must be resident. Checked under both miss_policy='precedence' and 'cost'
+over randomized shapes/residency/tables (hypothesis, or the seeded fallback
+in tests/_hypothesis_stub.py), plus deterministic tie-break edge cases of
+the cost argmin."""
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
@@ -42,25 +42,28 @@ def _masks(res):
     deg = np.asarray(res.degraded)
     drp = (np.asarray(res.dropped) if res.dropped is not None
            else np.zeros_like(missed))
-    return sub, missed, deg, drp
+    peer = (np.asarray(res.peered) if res.peered is not None
+            else np.zeros_like(missed))
+    return sub, missed, deg, drp, peer
 
 
 def _check_partition(res, idx, resident, rho):
     """The shared invariant block for every drawn case."""
-    sub, missed, deg, drp = _masks(res)
+    sub, missed, deg, drp, peer = _masks(res)
     nonres = ~resident[idx]
     # pairwise disjoint
-    for i, a in enumerate((sub, missed, deg, drp)):
-        for b in (sub, missed, deg, drp)[i + 1:]:
+    for i, a in enumerate((sub, missed, deg, drp, peer)):
+        for b in (sub, missed, deg, drp, peer)[i + 1:]:
             assert not (a & b).any(), "outcome masks overlap"
     # union covers every non-resident slot and nothing else
-    np.testing.assert_array_equal(sub | missed | deg | drp, nonres)
+    np.testing.assert_array_equal(sub | missed | deg | drp | peer, nonres)
     # substituted => final id is resident; untouched otherwise
     final = np.asarray(res.indices)
     assert resident[final[sub]].all()
     np.testing.assert_array_equal(final[~sub], idx[~sub])
-    # degraded / dropped slots keep their TRUE (non-resident) id
+    # degraded / peered / dropped slots keep their TRUE (non-resident) id
     assert (~resident[final[deg]]).all() if deg.any() else True
+    assert (~resident[final[peer]]).all() if peer.any() else True
     # the rho budget bounds substitutions per token
     assert (sub.sum(axis=1) <= rho).all()
 
@@ -74,17 +77,30 @@ def test_precedence_masks_partition(data):
     r = data.draw(st.integers(1, 6))
     rho = data.draw(st.integers(0, k))
     with_tier = data.draw(st.booleans())
+    with_peer = data.draw(st.booleans())
     idx, logits, resident, table, q = _random_case(rng, t, e, k, r)
     quant_ok = (rng.random(e) < 0.5) if with_tier else None
+    peer_ok = (rng.random(e) < 0.5) if with_peer else None
     pol = BuddyPolicy(tau=0.0, beta=1.1, rho=rho, H=max(r, 1))
     res = substitute(jnp.asarray(idx), jnp.asarray(logits),
                      jnp.asarray(resident), jnp.asarray(table),
                      jnp.asarray(q), pol,
                      quant_ok=None if quant_ok is None
-                     else jnp.asarray(quant_ok))
+                     else jnp.asarray(quant_ok),
+                     peer_ok=None if peer_ok is None
+                     else jnp.asarray(peer_ok))
     _check_partition(res, idx, resident, rho)
     if quant_ok is None:
         assert not np.asarray(res.degraded).any()
+    if peer_ok is None:
+        assert res.peered is None or not np.asarray(res.peered).any()
+    elif np.asarray(res.peered).any():
+        # precedence chain: a peered slot is borrowable and NOT degradable
+        # (degraded sits earlier in the chain and claims its slots first)
+        peer = np.asarray(res.peered)
+        assert peer_ok[idx[peer]].all()
+        if quant_ok is not None:
+            assert not quant_ok[idx[peer]].any()
 
 
 @given(st.data())
@@ -166,17 +182,17 @@ def test_cost_tiebreak_prefers_earlier_outcome():
     wins a tie; fetch beats a lossy drop)."""
     # q=0 -> buddy cost = 0.05 exactly; all four options cost 0.05
     res = _one_slot_cost_case(q_top=0.0, fid=0.05, fetch=0.05, drop_loss=1.0)
-    sub, missed, deg, drp = _masks(res)
+    sub, missed, deg, drp, peer = _masks(res)
     assert sub[0, 0] and not (missed | deg | drp)[0, 0]
     # no eligible buddy: degraded wins the three-way tie
     res = _one_slot_cost_case(q_top=0.0, fid=0.05, fetch=0.05,
                               resident_buddy=False)
-    sub, missed, deg, drp = _masks(res)
+    sub, missed, deg, drp, peer = _masks(res)
     assert deg[0, 0] and not (sub | missed | drp)[0, 0]
     # no replica either: fetch beats drop at equal cost
     res = _one_slot_cost_case(q_top=0.0, fid=float("inf"), fetch=0.05,
                               resident_buddy=False)
-    sub, missed, deg, drp = _masks(res)
+    sub, missed, deg, drp, peer = _masks(res)
     assert missed[0, 0] and not (sub | deg | drp)[0, 0]
 
 
@@ -184,10 +200,10 @@ def test_cost_strict_preference_overrides_order():
     """A strictly cheaper LATER outcome must win (the tie-break is only a
     tie-break): a nearly-landed prefetch beats a worse buddy."""
     res = _one_slot_cost_case(q_top=0.4, fid=float("inf"), fetch=0.001)
-    sub, missed, deg, drp = _masks(res)
+    sub, missed, deg, drp, peer = _masks(res)
     assert missed[0, 0] and not (sub | deg | drp)[0, 0]
     # and an effectively-free drop beats an expensive fetch
     res = _one_slot_cost_case(q_top=0.0, fid=float("inf"), fetch=1.0,
                               drop_loss=0.001, resident_buddy=False)
-    sub, missed, deg, drp = _masks(res)
+    sub, missed, deg, drp, peer = _masks(res)
     assert drp[0, 0] and not (sub | missed | deg)[0, 0]
