@@ -43,6 +43,15 @@ lower p99 token latency than the peer-off twin, whose misses all pay host
 PCIe. Per-link utilization and the peer-borrow share are recorded under
 results["mesh"] and gated by check_regression.py --kind mesh.
 
+--prefix-ab adds the PREFIX arm: two identical paged-KV engines (equal HBM
+— the pool defaults to the exact ring-buffer footprint), radix-tree prefix
+cache on vs off, serving the same multi-turn session workload (turn j's
+prompt extends turn j-1's; ``session``/``parent`` threaded onto requests).
+The on arm admits follow-up turns by adopting the cached prefix blocks and
+prefilling only the novel suffix; gated on follow-up-turn p99 TTFT and the
+prefix-hit token share under results["prefix"] (check_regression.py
+--kind prefix).
+
 --seed makes sweeps reproducible run-to-run: it drives the workload draw,
 the cache placement, and every engine PRNG, and is recorded per arm in
 results/bench/serving.json.
@@ -71,8 +80,8 @@ from repro.runtime.telemetry import Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
 from repro.serving.engine import ServeEngine
 from repro.serving.scheduler import (ContinuousScheduler, PoissonArrivals,
-                                     RequestQueue, SLOConfig, StaticServer,
-                                     make_requests)
+                                     RequestQueue, ServeRequest, SLOConfig,
+                                     StaticServer, make_requests, percentiles)
 from repro.training.data import MarkovLM
 
 
@@ -148,6 +157,36 @@ def _workload(lm, n: int, rate: float, max_new: int, slo: SLOConfig,
                          new_toks, slo)
 
 
+def _session_workload(lm, *, n_sessions: int, n_turns: int, opener: int,
+                      turn_lo: int, turn_hi: int, gap_s: float,
+                      stagger_s: float, max_new: int, slo: SLOConfig,
+                      seed: int):
+    """Multi-turn chat sessions: turn j's prompt extends turn j-1's prompt
+    verbatim (shared opener + growing history) and arrives one think-time
+    ``gap_s`` later — the shared-prefix traffic the radix cache targets.
+    ``session``/``parent`` are threaded onto each request (the same fields
+    ``requests_from_trace`` accepts on trace-replay rows). Requests are
+    returned in arrival order with their original rids, so ``parent`` links
+    stay valid."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for s in range(n_sessions):
+        hist = list(lm.sample(1, opener)[0])
+        parent = None
+        for t in range(n_turns):
+            hist = hist + list(
+                lm.sample(1, int(rng.integers(turn_lo, turn_hi)))[0])
+            r = ServeRequest(rid=len(reqs),
+                             prompt=np.array(hist, np.int64),
+                             max_new_tokens=max_new,
+                             arrival_s=t * gap_s + s * stagger_s,
+                             slo=slo, session=s, parent=parent)
+            reqs.append(r)
+            parent = r.rid
+    reqs.sort(key=lambda r: (r.arrival_s, r.rid))
+    return reqs
+
+
 def _probe_step_s(eng: ServeEngine, lm, slots: int) -> float:
     """Measured per-step time (compute + stalls) of an unloaded engine —
     the anchor for both the arrival-rate sweep and the SLO targets. The
@@ -162,7 +201,8 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
         max_new: int = 8, prefetch_k: int = 2,
         prefill_chunk: int = 8, seed: int = 0,
         quant_tier: str = "off", cost_policy: bool = False,
-        n_devices: int = 1, ici_gbps=None) -> dict:
+        n_devices: int = 1, ici_gbps=None,
+        prefix_ab: bool = False, kv_block: int = 8) -> dict:
     t0 = time.time()
     assert not cost_policy or quant_tier != "off", \
         "--cost-policy compares the four-way miss tree: pick a --quant-tier"
@@ -485,6 +525,78 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
                          m_on["peer_share"],
                          f"n_borrow={m_on['n_peer_borrow']}"))
 
+    if prefix_ab:
+        # -- shared-prefix A/B: identical paged-KV engines at EQUAL HBM
+        # (same pool size — the default sizes the pool to the exact ring
+        # footprint), radix prefix cache on vs off, on an identical
+        # multi-turn session workload. The headline metric is p99 TTFT over
+        # FOLLOW-UP turns (requests with a parent — the traffic the cache
+        # targets); the session openers pay the engine's one-time streaming
+        # warm-up in both arms and would pin the percentile at an identical
+        # cold value. Sessions == slots so a follow-up can only admit after
+        # a turn retired — i.e. after its parent donated its blocks.
+        # A FRESH MarkovLM per arm keeps the workload identical without
+        # advancing the shared ``lm`` RNG (same discipline as the mesh arm).
+        px_sessions, px_turns, px_chunk = 3, 5, 4
+        cr = cache_rates[0]
+        l, e = cfg.num_layers, cfg.moe.num_experts
+        slo = SLOConfig(ttft_s=0.5, tpot_s=0.05, deadline_s=2.0)
+
+        def _px_workload():
+            return _session_workload(
+                MarkovLM(cfg.vocab_size, seed=seed + 307),
+                n_sessions=px_sessions, n_turns=px_turns, opener=8,
+                turn_lo=9, turn_hi=13, gap_s=4e-3, stagger_s=1e-3,
+                max_new=4, slo=slo, seed=seed + 308)
+
+        def _px_run(on: bool):
+            eng = ServeEngine(
+                cfg, params, tables=tables,
+                policy=BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8),
+                cache=ExpertCache(l, e, cr, seed=seed),
+                predictor=PrevStepPredictor(l, e),
+                prefetch_k=prefetch_k, seed=seed,
+                paged_kv=True, kv_block=kv_block, prefix_cache=on)
+            cs = ContinuousScheduler(eng, slots=px_sessions,
+                                     prefill_chunk=px_chunk)
+            s = cs.run(RequestQueue(_px_workload()))
+            follow = percentiles([r.ttft() for r in cs.completed
+                                  if r.parent is not None])
+            return s, follow
+
+        s_px_off, f_off = _px_run(False)
+        s_px_on, f_on = _px_run(True)
+        px = s_px_on["engine"]["prefix"]
+        tot = px["hit_tokens"] + px["novel_tokens"]
+        hit_share = px["hit_tokens"] / tot if tot else 0.0
+        results["prefix"] = {
+            "cache_rate": cr, "kv_block": kv_block, "seed": seed,
+            "n_sessions": px_sessions, "n_turns": px_turns,
+            "prefill_chunk": px_chunk,
+            "on": s_px_on, "off": s_px_off,
+            "followup_ttft_ms": {
+                "on": {k: v * 1e3 for k, v in f_on.items()},
+                "off": {k: v * 1e3 for k, v in f_off.items()}},
+            "hits": px["hits"], "hit_tokens": px["hit_tokens"],
+            "novel_tokens": px["novel_tokens"],
+            "hit_token_share": hit_share,
+            "pool": px["pool"], "tree": px.get("tree"),
+            "prefix_lower_p99": bool(f_on["p99"] < f_off["p99"]),
+        }
+        print(f"  [prefix kb={kv_block}] follow-up TTFT p99 on/off "
+              f"{f_on['p99']*1e3:.3f}/{f_off['p99']*1e3:.3f}ms  mean "
+              f"{f_on['mean']*1e3:.3f}/{f_off['mean']*1e3:.3f}ms  hits "
+              f"{px['hits']} ({hit_share*100:.0f}% of prefill tokens)  "
+              f"prefix lowers p99: {results['prefix']['prefix_lower_p99']}")
+        out_rows.append(("serving.prefix.followup_ttft_p99_ms",
+                         f_on["p99"] * 1e3,
+                         f"off={f_off['p99']*1e3:.3f}"))
+        out_rows.append(("serving.prefix.followup_ttft_p99_ms_off",
+                         f_off["p99"] * 1e3,
+                         f"on={f_on['p99']*1e3:.3f}"))
+        out_rows.append(("serving.prefix.hit_token_share", hit_share,
+                         f"hits={px['hits']}"))
+
     # -- telemetry overhead A/B: the flight recorder is a pure observer of
     # the SIMULATED timeline, so a telemetry-on engine must agree with a
     # telemetry-off twin on the simulated clock EXACTLY (sim_step_ratio ==
@@ -561,6 +673,12 @@ if __name__ == "__main__":
     ap.add_argument("--ici-gbps", type=float, default=0.0,
                     help="per-ICI-link bandwidth in GB/s for the mesh arm "
                          "(0: hardware model default)")
+    ap.add_argument("--prefix-ab", action="store_true",
+                    help="adds the shared-prefix arm: paged-KV engines at "
+                         "equal HBM, radix prefix cache on vs off, on a "
+                         "multi-turn session workload (follow-up-turn TTFT)")
+    ap.add_argument("--kv-block", type=int, default=8,
+                    help="paged-KV block size (tokens) for the prefix arm")
     args = ap.parse_args()
     if args.cost_policy and args.quant_tier == "off":
         ap.error("--cost-policy compares the four-way miss tree: "
@@ -574,7 +692,7 @@ if __name__ == "__main__":
             num_requests=16, max_new=6, prefill_chunk=args.prefill_chunk,
             seed=args.seed, quant_tier=args.quant_tier,
             cost_policy=args.cost_policy, n_devices=args.n_devices,
-            ici_gbps=ici)
+            ici_gbps=ici, prefix_ab=args.prefix_ab, kv_block=args.kv_block)
     else:
         run(rows,
             loads=tuple(float(x) for x in args.rates.split(",")),
@@ -583,7 +701,7 @@ if __name__ == "__main__":
             max_new=args.max_new, prefill_chunk=args.prefill_chunk,
             seed=args.seed, quant_tier=args.quant_tier,
             cost_policy=args.cost_policy, n_devices=args.n_devices,
-            ici_gbps=ici)
+            ici_gbps=ici, prefix_ab=args.prefix_ab, kv_block=args.kv_block)
     print("\nname,value,derived")
     for name, v, derived in rows:
         print(f"{name},{v:.2f},{derived}")

@@ -21,6 +21,20 @@
                                collapse means the fifth outcome stopped
                                firing)
 
+  prefix — compares the ``results["prefix"]`` section of a fresh
+    ``results/bench/serving.json`` (from ``bench_serving --smoke
+    --prefix-ab``) against ``benchmarks/baselines/prefix_smoke.json``:
+
+      prefix.followup_ttft_p99_ms.{on,off}
+                               follow-up-turn TTFT of the prefix-cache
+                               A/B arms at equal HBM (lower is better)
+      prefix.hit_token_share   fraction of prefill tokens served from the
+                               radix cache (higher is better — a collapse
+                               means admission stopped matching)
+      prefix.strict_p99_win    1.0 when the on arm's p99 is STRICTLY below
+                               the off arm's (higher is better; a flip to
+                               0.0 fails the gate outright)
+
   kernels — compares a fresh ``results/bench/kernels.json`` (from
     ``bench_kernels --smoke``) against
     ``benchmarks/baselines/kernels_smoke.json``. Only the fused-vs-unfused
@@ -73,6 +87,8 @@ KIND_PATHS = {
                 os.path.join(HERE, "baselines", "serving_smoke.json")),
     "mesh": (os.path.join(HERE, "..", "results", "bench", "serving.json"),
              os.path.join(HERE, "baselines", "mesh_smoke.json")),
+    "prefix": (os.path.join(HERE, "..", "results", "bench", "serving.json"),
+               os.path.join(HERE, "baselines", "prefix_smoke.json")),
     "kernels": (os.path.join(HERE, "..", "results", "bench", "kernels.json"),
                 os.path.join(HERE, "baselines", "kernels_smoke.json")),
 }
@@ -92,6 +108,9 @@ FLOORS = {
                                      # deterministic clock, must stay 1.0 —
                                      # the floor only absorbs float residue
     "peer_share": 0.002,             # fraction of served slots peer-borrowed
+    "followup_ttft_p99_ms": 0.005,   # modeled ms (deterministic clock)
+    "hit_token_share": 0.01,         # fraction of prefill tokens from cache
+    "strict_p99_win": 0.1,           # boolean gate — any flip is a fail
 }
 
 
@@ -104,7 +123,8 @@ def _family(metric: str) -> str:
 
 def _direction(metric: str) -> str:
     return (HIGHER_IS_BETTER
-            if _family(metric) in ("goodput_rps", "peer_share")
+            if _family(metric) in ("goodput_rps", "peer_share",
+                                   "hit_token_share", "strict_p99_win")
             else LOWER_IS_BETTER)
 
 
@@ -173,8 +193,29 @@ def extract_mesh_metrics(results: dict) -> Dict[str, float]:
     return out
 
 
+def extract_prefix_metrics(results: dict) -> Dict[str, float]:
+    """Gateable metrics from the shared-prefix A/B arm of a bench_serving
+    results dict (present when run with --prefix-ab): follow-up-turn p99
+    TTFT of both arms, the prefix-hit token share (a collapse means
+    admission stopped matching the radix tree even if latency holds on a
+    small workload), and the strict-win boolean itself — the on arm must
+    beat the off arm OUTRIGHT at equal HBM, not merely stay within the
+    relative threshold of its own baseline."""
+    out: Dict[str, float] = {}
+    p = results.get("prefix")
+    if not isinstance(p, dict):
+        return out
+    out["prefix.followup_ttft_p99_ms.on"] = p["followup_ttft_ms"]["on"]["p99"]
+    out["prefix.followup_ttft_p99_ms.off"] = \
+        p["followup_ttft_ms"]["off"]["p99"]
+    out["prefix.hit_token_share"] = p["hit_token_share"]
+    out["prefix.strict_p99_win"] = 1.0 if p["prefix_lower_p99"] else 0.0
+    return out
+
+
 EXTRACTORS = {"serving": extract_metrics, "mesh": extract_mesh_metrics,
-              "kernels": extract_kernel_metrics}
+              "kernels": extract_kernel_metrics,
+              "prefix": extract_prefix_metrics}
 
 
 def inject_regression(metrics: Dict[str, float],

@@ -66,7 +66,10 @@ def build_engine(args):
         predictor=PrevStepPredictor(cfg.num_layers, cfg.moe.num_experts),
         prefetch_k=args.prefetch, lookahead=args.lookahead, seed=0,
         telemetry=tele, n_devices=args.n_devices,
-        ici_gbps=args.ici_gbps if args.ici_gbps > 0 else None)
+        ici_gbps=args.ici_gbps if args.ici_gbps > 0 else None,
+        paged_kv=args.paged_kv, kv_block=args.kv_block,
+        kv_blocks=args.kv_blocks if args.kv_blocks > 0 else None,
+        prefix_cache=args.prefix_cache)
     return cfg, lm, eng
 
 
@@ -112,6 +115,24 @@ def main():
                          "experts by borrowing over ICI (1 = single device)")
     ap.add_argument("--ici-gbps", type=float, default=0.0,
                     help="per-ICI-link bandwidth in GB/s (0: model default)")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="block-granular paged KV cache (runtime/paged_kv.py)"
+                         " instead of per-slot ring buffers: ref-counted "
+                         "fixed-size blocks, copy-on-write, per-row block "
+                         "tables (off = the exact ring-buffer code path)")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="paged-KV block size in tokens (--paged-kv)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="total pool blocks (--paged-kv; 0 sizes the pool "
+                         "to the exact ring-buffer HBM footprint)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache over the paged pool "
+                         "(--continuous): admission matches prompts against "
+                         "retired requests' block chains and prefills only "
+                         "the novel suffix (requires --paged-kv)")
+    ap.add_argument("--adaptive-chunk", action="store_true",
+                    help="shrink the prefill chunk while co-resident decode "
+                         "rows are under TPOT pressure (--continuous)")
     ap.add_argument("--telemetry", choices=["off", "on"], default="off",
                     help="attach the flight recorder: calibration + prefetch "
                          "meters printed after the run ('off' is the exact "
@@ -121,6 +142,9 @@ def main():
                          "'*.jsonl' = JSONL, else Chrome/Perfetto "
                          "trace_event JSON for https://ui.perfetto.dev")
     args = ap.parse_args()
+    if args.prefix_cache and not args.paged_kv:
+        ap.error("--prefix-cache shares KV at block granularity: "
+                 "it requires --paged-kv")
 
     cfg, lm, eng = build_engine(args)
     rng = np.random.default_rng(0)
@@ -140,11 +164,22 @@ def main():
                 max_lookahead=max(4, args.lookahead))
         sched = ContinuousScheduler(eng, slots=args.batch_size,
                                     controller=ctrl,
-                                    prefill_chunk=args.prefill_chunk)
+                                    prefill_chunk=args.prefill_chunk,
+                                    adaptive_chunk=args.adaptive_chunk)
         s = sched.run(RequestQueue(reqs))
         print(f"\ncontinuous: {s['completed']}/{s['num_requests']} done, "
               f"{s['steps']} steps (prefill chunk {args.prefill_chunk}), "
               f"mean occupancy {s['mean_occupancy']:.2f}/{args.batch_size}")
+        if "prefix" in s["engine"]:
+            px = s["engine"]["prefix"]
+            occ = px["pool"]
+            print(f"paged KV: block {px['kv_block']}, pool "
+                  f"{occ['used_blocks']}/{occ['n_blocks']} blocks used, "
+                  f"{occ['cow_copies']} CoW copies"
+                  + (f"; prefix cache: {px['hits']} hits, "
+                     f"{px['hit_tokens']} tokens adopted, tree "
+                     f"{px['tree']['nodes']} nodes"
+                     if px.get("tree") is not None else ""))
         print(f"TTFT p50/p95/p99: {s['ttft_s']['p50']*1e3:.2f}/"
               f"{s['ttft_s']['p95']*1e3:.2f}/{s['ttft_s']['p99']*1e3:.2f}ms")
         print(f"goodput {s['goodput_rps']:.1f} req/s "

@@ -32,6 +32,12 @@
     # trace of the run (load serve_trace.json at https://ui.perfetto.dev)
     PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
         --num-requests 16 --slots 4 --telemetry on --trace-out serve_trace.json
+
+    # paged KV + radix prefix cache: shared-prefix requests adopt the
+    # donated block chain and prefill only their novel suffix
+    PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
+        --num-requests 16 --slots 4 --paged-kv --kv-block 16 \
+        --prefix-cache --prefill-chunk 8
 """
 from __future__ import annotations
 
@@ -173,6 +179,26 @@ def main():
                          " buddy, and degraded slots in ONE grouped step "
                          "(kernels/grouped_ffn.py) instead of three "
                          "dispatches; off = bit-identical pre-fused graph")
+    # -- paged KV + radix-tree prefix cache (runtime/paged_kv.py) --------
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="block-pooled KV cache: rows map fixed-size blocks "
+                         "through per-row tables (ref-counted, copy-on-"
+                         "write); off = the ring layout, bit-identical")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="tokens per KV block (--paged-kv)")
+    ap.add_argument("--kv-blocks", type=int, default=0,
+                    help="pool size in blocks (0: exact ring-cache "
+                         "footprint, so paged vs ring runs at equal HBM)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache over the paged pool: "
+                         "retiring requests donate their block chains; "
+                         "admitted requests adopt the longest cached prefix "
+                         "and prefill only the novel suffix (requires "
+                         "--paged-kv)")
+    ap.add_argument("--adaptive-chunk", action="store_true",
+                    help="per-request prefill chunk policy: halve the "
+                         "chunk while the estimated chunk-step time would "
+                         "blow co-resident decode rows' TPOT budget")
     # -- expert-parallel mesh (peer-HBM borrowing over ICI) --------------
     ap.add_argument("--n-devices", type=int, default=1,
                     help="expert-parallel mesh size (1-8): experts shard "
@@ -212,6 +238,9 @@ def main():
         ap.error("--trace replays a request stream: use --mode continuous")
     if not 1 <= args.n_devices <= 8:
         ap.error("--n-devices must be in 1..8")
+    if args.prefix_cache and not args.paged_kv:
+        ap.error("--prefix-cache shares KV at block granularity: it "
+                 "requires --paged-kv")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     assert cfg.is_moe, "serving engine targets MoE archs"
@@ -265,7 +294,10 @@ def main():
                       telemetry=tele,
                       n_devices=args.n_devices,
                       ici_gbps=args.ici_gbps if args.ici_gbps > 0 else None,
-                      peer_borrow=not args.no_peer_borrow)
+                      peer_borrow=not args.no_peer_borrow,
+                      paged_kv=args.paged_kv, kv_block=args.kv_block,
+                      kv_blocks=args.kv_blocks if args.kv_blocks > 0 else None,
+                      prefix_cache=args.prefix_cache)
 
     if args.mode == "continuous":
         _serve_continuous(args, cfg, eng, lm, prefetch_k)
@@ -370,7 +402,8 @@ def _serve_continuous(args, cfg, eng, lm, prefetch_k):
             max_k=max(2 * prefetch_k, 4),
             max_lookahead=max(4, args.lookahead))
     sched = ContinuousScheduler(eng, slots=args.slots, controller=ctrl,
-                                prefill_chunk=args.prefill_chunk)
+                                prefill_chunk=args.prefill_chunk,
+                                adaptive_chunk=args.adaptive_chunk)
     s = sched.run(queue)
     print(json.dumps(s, indent=1, default=str))
     print(f"completed {s['completed']}/{s['num_requests']} "
@@ -380,7 +413,25 @@ def _serve_continuous(args, cfg, eng, lm, prefetch_k):
           f"goodput {s['goodput_rps']:.1f} req/s  "
           f"SLO-met {s['slo_met_frac']*100:.0f}%")
     _report_mesh(s.get("engine", eng.summary()))
+    _report_prefix(s.get("engine", {}))
     _report_telemetry(eng.telemetry, args.trace_out)
+
+
+def _report_prefix(s):
+    """Pool/CoW/tree digest for paged-KV runs (absent on ring engines)."""
+    if "prefix" not in s:
+        return
+    px = s["prefix"]
+    occ = px["pool"]
+    line = (f"[paged-kv] block {px['kv_block']}: "
+            f"{occ['used_blocks']}/{occ['n_blocks']} blocks used, "
+            f"{occ['cow_copies']} CoW copies, {occ['evictions']} evictions")
+    if px.get("tree") is not None:
+        line += (f"; prefix cache: {px['hits']} hits, "
+                 f"{px['hit_tokens']} tokens adopted / "
+                 f"{px['novel_tokens']} novel, tree "
+                 f"{px['tree']['nodes']} nodes")
+    print(line)
 
 
 if __name__ == "__main__":

@@ -263,6 +263,134 @@ def attn_prefill_chunk(params, x_chunk, cache, base_pos, tok_valid, *,
     return y, {"k": k_cache, "v": v_cache}
 
 
+# ---------------------------------------------------------------------------
+# Paged KV: block-pool storage + per-row block tables (runtime/paged_kv.py)
+# ---------------------------------------------------------------------------
+def init_paged_kv_cache(n_blocks: int, block_size: int, num_kv_heads: int,
+                        head_dim: int, dtype) -> dict:
+    """Shared block pool replacing the per-row ring: k/v [P, bs, KV, hd].
+    Which row owns which block lives host-side in ``PagedKVPool.tables``
+    and is shipped per step as a ``[B, MB]`` int32 block table (-1 =
+    unmapped). One pool serves every row, so blocks freed by a retired
+    request are immediately reusable by any other."""
+    return {
+        "k": jnp.zeros((n_blocks, block_size, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((n_blocks, block_size, num_kv_heads, head_dim), dtype),
+    }
+
+
+def _gather_pages(arr, bt, block_size):
+    """arr [P, bs, KV, hd], bt [B, MB] -> per-row views [B, MB*bs, KV, hd].
+    Unmapped entries (-1) gather block 0's data; callers mask them out via
+    the `mapped` validity term."""
+    p, bs, kv_h, hd = arr.shape
+    pages = arr[jnp.maximum(bt, 0)]                     # [B, MB, bs, KV, hd]
+    b, mb = bt.shape
+    return pages.reshape(b, mb * bs, kv_h, hd)
+
+
+def _paged_scatter(cache, phys, k_new, v_new):
+    """Scatter new KV into the flat pool at per-token physical indices.
+    ``phys`` must already aim invalid tokens at ``P * bs`` (out of range,
+    dropped) — NEVER at -1: JAX wraps negative scatter indices."""
+    p, bs = cache["k"].shape[:2]
+    kv_h, hd = cache["k"].shape[2:]
+    k_flat = cache["k"].reshape(p * bs, kv_h, hd)
+    v_flat = cache["v"].reshape(p * bs, kv_h, hd)
+    k_flat = k_flat.at[phys].set(k_new, mode="drop")
+    v_flat = v_flat.at[phys].set(v_new, mode="drop")
+    return {"k": k_flat.reshape(p, bs, kv_h, hd),
+            "v": v_flat.reshape(p, bs, kv_h, hd)}
+
+
+def attn_decode_paged(params, x_tok, cache, pos, block_tables, *, num_heads,
+                      num_kv_heads, head_dim, rope_theta):
+    """One decode step against paged KV. x_tok [B, 1, D]; cache k/v
+    [P, bs, KV, hd]; pos [B] absolute positions (paged decode is always
+    per-row — the engine broadcasts a lockstep scalar); block_tables
+    [B, MB] int32, -1 = unmapped. Content position of a mapped slot is its
+    index (blocks never wrap), so validity is simply mapped & idx <= pos.
+    Returns (y [B, 1, D], new_cache)."""
+    b = x_tok.shape[0]
+    p_blocks, bs = cache["k"].shape[:2]
+    bt = jnp.asarray(block_tables, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x_tok, x_tok, num_heads,
+                                   num_kv_heads, head_dim)
+    pos_b = jnp.asarray(pos, jnp.int32)[:, None]                     # [B, 1]
+    rope_pos = jnp.broadcast_to(pos_b, (b, 1))
+    q = apply_rope(q, rope_pos, rope_theta)
+    k_new = apply_rope(k_new, rope_pos, rope_theta)
+    k_new = shard(k_new, "batch", None, "cache_heads", "cache_hd")
+    v_new = shard(v_new, "batch", None, "cache_heads", "cache_hd")
+    p0 = pos_b[:, 0]
+    blk = bt[jnp.arange(b), p0 // bs]                                # [B]
+    phys = jnp.where(blk >= 0, blk * bs + p0 % bs, p_blocks * bs)
+    cache = _paged_scatter(cache, phys, k_new[:, 0], v_new[:, 0])
+
+    k_rows = _gather_pages(cache["k"], bt, bs)
+    v_rows = _gather_pages(cache["v"], bt, bs)
+    idx = jnp.arange(bt.shape[1] * bs, dtype=jnp.int32)[None, :]
+    mapped = jnp.repeat(bt >= 0, bs, axis=1)                    # [B, MB*bs]
+    valid = mapped & (idx <= pos_b)
+
+    out = _attend_single(q, k_rows, v_rows, valid, None, num_kv_heads,
+                         head_dim)
+    g = num_heads // num_kv_heads
+    d_model = params["wo"].shape[1]
+    wo4 = params["wo"].reshape(num_kv_heads, g, head_dim, d_model)
+    wo4 = shard(wo4, "cache_heads", None, "cache_hd", None)
+    out4 = out.reshape(b, 1, num_kv_heads, g, head_dim)
+    y = jnp.einsum("bqkgh,kghd->bqd", out4, wo4,
+                   preferred_element_type=jnp.float32).astype(x_tok.dtype)
+    return y, cache
+
+
+def attn_prefill_chunk_paged(params, x_chunk, cache, base_pos, tok_valid,
+                             block_tables, *, num_heads, num_kv_heads,
+                             head_dim, rope_theta):
+    """Chunked prefill into paged KV — the paged twin of attn_prefill_chunk.
+    No ring-wrap hazard: a block's slot index IS its content position, so
+    arbitrarily long prompts chunk-prefill as long as the pool has blocks
+    (the host-side guard moves from ring capacity to pool pressure).
+    Returns (y [B, C, D], new_cache)."""
+    b, c, _ = x_chunk.shape
+    p_blocks, bs = cache["k"].shape[:2]
+    bt = jnp.asarray(block_tables, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x_chunk, x_chunk, num_heads,
+                                   num_kv_heads, head_dim)
+    base = jnp.asarray(base_pos, jnp.int32)
+    pos = base[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]    # [B, C]
+    q = apply_rope(q, pos, rope_theta)
+    k_new = apply_rope(k_new, pos, rope_theta)
+    k_new = shard(k_new, "batch", None, "cache_heads", "cache_hd")
+    v_new = shard(v_new, "batch", None, "cache_heads", "cache_hd")
+    # clamp: invalid tail tokens can point past MB; their reads are voided
+    # by the tok_valid sentinel below, but the gather index must be in range
+    blk_idx = jnp.clip(pos // bs, 0, bt.shape[1] - 1)
+    blk = jnp.take_along_axis(bt, blk_idx, axis=1)                   # [B, C]
+    phys = jnp.where(tok_valid & (blk >= 0), blk * bs + pos % bs,
+                     p_blocks * bs)
+    cache = _paged_scatter(cache, phys, k_new, v_new)
+
+    k_rows = _gather_pages(cache["k"], bt, bs)
+    v_rows = _gather_pages(cache["v"], bt, bs)
+    idx = jnp.arange(bt.shape[1] * bs, dtype=jnp.int32)[None, :]
+    mapped = jnp.repeat(bt >= 0, bs, axis=1)                    # [B, MB*bs]
+    # mapped slot content position == slot index; idx <= query position
+    # masks unwritten tail slots AND the row's own future chunk tokens
+    valid = mapped[:, None, :] & (idx[:, None, :] <= pos[:, :, None])
+
+    out = _attend_chunk(q, k_rows, v_rows, valid)
+    g = num_heads // num_kv_heads
+    d_model = params["wo"].shape[1]
+    wo4 = params["wo"].reshape(num_kv_heads, g, head_dim, d_model)
+    wo4 = shard(wo4, "cache_heads", None, "cache_hd", None)
+    out4 = out.reshape(b, c, num_kv_heads, g, head_dim)
+    y = jnp.einsum("bqkgh,kghd->bqd", out4, wo4,
+                   preferred_element_type=jnp.float32).astype(x_chunk.dtype)
+    return y, cache
+
+
 def _attend_chunk(q, k, v, valid):
     """q [B, C, H, hd] vs full cache k, v [B, Cap, KV, hd]; valid [B, C, Cap]
     per-(row, query) slot mask. The C == 1 case reduces elementwise to

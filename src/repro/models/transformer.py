@@ -123,6 +123,7 @@ class StepCtx(NamedTuple):
     record: bool
     remat: bool = False            # checkpoint each scanned block (training)
     tok_valid: Any = None          # [B, C] prefix validity mask (chunk mode)
+    block_tables: Any = None       # [B, MB] paged-KV block table (None = ring)
 
 
 def _attn_kwargs(cfg: ModelConfig):
@@ -136,9 +137,17 @@ def _self_attn(p, x, cache, ctx: StepCtx):
                               **_attn_kwargs(ctx.cfg))
         return y, cache
     if ctx.mode == "chunk":
+        if ctx.block_tables is not None:
+            return attn.attn_prefill_chunk_paged(
+                p, x, cache, ctx.positions, ctx.tok_valid, ctx.block_tables,
+                **_attn_kwargs(ctx.cfg))
         return attn.attn_prefill_chunk(p, x, cache, ctx.positions,
                                        ctx.tok_valid, window=ctx.window,
                                        **_attn_kwargs(ctx.cfg))
+    if ctx.block_tables is not None:
+        return attn.attn_decode_paged(p, x, cache, ctx.positions,
+                                      ctx.block_tables,
+                                      **_attn_kwargs(ctx.cfg))
     y, cache = attn.attn_decode(p, x, cache, ctx.positions,
                                 window=ctx.window, **_attn_kwargs(ctx.cfg))
     return y, cache
@@ -398,6 +407,24 @@ def init_caches(cfg: ModelConfig, batch: int, seq_len: int, *,
     return tuple(caches)
 
 
+def init_paged_caches(cfg: ModelConfig, n_blocks: int, block_size: int, *,
+                      dtype=None):
+    """Paged decode caches: one shared [P, bs, KV, hd] block pool per layer
+    (stacked on the group repeat axis like init_caches), addressed through
+    the host-side PagedKVPool block tables instead of a per-row ring.
+    Attention-only stacks (same restriction as chunked prefill — SSM state
+    is sequential and has no pages)."""
+    assert all(k in (ATTN_DENSE, ATTN_MOE) for k, _ in cfg.stack()), \
+        f"paged KV supports attention stacks only, got {cfg.stack()}"
+    dtype = dtype or jnp.dtype(cfg.dtype)
+
+    def kv():
+        return attn.init_paged_kv_cache(n_blocks, block_size,
+                                        cfg.num_kv_heads, cfg.head_dim, dtype)
+
+    return tuple({"kv": _stack_n(kv, repeat)} for _, repeat in cfg.stack())
+
+
 def _stack_n(fn, n):
     return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn() for _ in range(n)])
 
@@ -479,17 +506,20 @@ def forward_train(params, cfg: ModelConfig, tokens, *, cond_embeds=None,
 def decode_step(params, cfg: ModelConfig, token, caches, pos, *,
                 cond_embeds=None, policy: Optional[BuddyPolicy] = None,
                 buddies=None, rng=None, window: int = -1,
-                record: bool = False):
+                record: bool = False, block_tables=None):
     """One-token decode. token [B] int32; pos int32 — a scalar (lockstep
     batch) or a [B] vector of per-row absolute positions (continuous
-    batching), including any audio conditioning prefix. Returns
+    batching), including any audio conditioning prefix. block_tables
+    [B, MB] routes attention through the paged-KV pool instead of the
+    per-row ring (pos must then be [B]). Returns
     (logits [B, V], new_caches, aux)."""
     if window < 0:
         window = cfg.sliding_window
     x = params["embed"][token][:, None, :]            # [B, 1, D]
     if cfg.family == "audio" and cfg.num_cond_tokens:
         pos = pos + cfg.num_cond_tokens
-    ctx = StepCtx(cfg, "step", window, policy, pos, rng, record)
+    ctx = StepCtx(cfg, "step", window, policy, pos, rng, record,
+                  block_tables=block_tables)
 
     total_aux = _zero_moe_aux(cfg)
     rec = []
@@ -516,7 +546,7 @@ def decode_step(params, cfg: ModelConfig, token, caches, pos, *,
 def prefill_chunk(params, cfg: ModelConfig, tokens, caches, base_pos,
                   tok_valid, *, policy: Optional[BuddyPolicy] = None,
                   buddies=None, rng=None, window: int = -1,
-                  record: bool = False):
+                  record: bool = False, block_tables=None):
     """Fused multi-token step for chunked prefill (continuous batching).
 
     tokens [B, C] int32; base_pos [B] int32 — absolute position of each
@@ -541,7 +571,7 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, caches, base_pos,
     if cfg.family == "audio" and cfg.num_cond_tokens:
         base_pos = base_pos + cfg.num_cond_tokens
     ctx = StepCtx(cfg, "chunk", window, policy, base_pos, rng, record,
-                  tok_valid=tok_valid)
+                  tok_valid=tok_valid, block_tables=block_tables)
 
     total_aux = _zero_moe_aux(cfg)
     rec = []

@@ -51,10 +51,10 @@ TRACKS = ("requests", "layers", "transfers", "engine")
 
 # Span/event kinds (the ``kind`` field; one vocabulary for both exports)
 REQUEST_KINDS = ("arrive", "queued", "prefill", "decode", "token",
-                 "retire", "shed")
+                 "retire", "shed", "prefix_hit")
 LAYER_KINDS = ("compute", "stall", "outcomes")
 TRANSFER_KINDS = ("transfer", "start", "escalate")
-ENGINE_KINDS = ("step", "budget")
+ENGINE_KINDS = ("step", "budget", "prefix_hit")
 
 
 class FlightRecorder:

@@ -39,9 +39,11 @@ from repro.runtime.cache import ExpertCache
 from repro.runtime.costs import MissCostModel, best_resident_q
 from repro.runtime.memory import (DEFAULT_HW, HardwareModel, TransferLedger,
                                   expert_nbytes)
+from repro.runtime.paged_kv import PagedKVPool
 from repro.runtime.telemetry import ExpertStats, Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
 from repro.runtime.transfers import TransferScheduler, make_ici_links
+from repro.serving.prefix import PrefixTree
 
 
 @dataclasses.dataclass
@@ -83,7 +85,11 @@ class ServeEngine:
                  telemetry: Optional[Telemetry] = None,
                  n_devices: int = 1,
                  ici_gbps: Optional[float] = None,
-                 peer_borrow: bool = True):
+                 peer_borrow: bool = True,
+                 paged_kv: bool = False,
+                 kv_block: int = 16,
+                 kv_blocks: Optional[int] = None,
+                 prefix_cache: bool = False):
         """latency_cfg: full-scale config whose expert sizes / active params
         drive the transfer + compute latency model (the accuracy testbed can
         be a reduced model while latencies reflect the deployment target —
@@ -136,7 +142,24 @@ class ServeEngine:
         cost calibration samples (predicted vs realized stall per outcome
         class), and feeds the prefetch precision/recall meter — all read-
         only observers of engine state (no PRNG draws, no timeline
-        mutation), so a telemetry=None run is bit-identical."""
+        mutation), so a telemetry=None run is bit-identical.
+
+        paged_kv: replace the per-slot ring-buffer KV with a shared pool of
+        fixed-size blocks (runtime/paged_kv.py) addressed through per-row
+        block tables. Attention-only stacks, no sliding window. paged_kv=
+        False (default) is bit-identical to the pre-paged engine (frozen-
+        capture test in tests/test_paged.py).
+
+        kv_block: tokens per KV block (paged mode). kv_blocks: pool size
+        override; None sizes the pool to exactly the ring footprint —
+        batch x ceil(capacity / kv_block) blocks — so paged-vs-ring A/Bs
+        run at equal HBM.
+
+        prefix_cache: radix-tree prefix reuse over the paged pool
+        (serving/prefix.py): ContinuousScheduler admission matches each
+        prompt against previously-served prefixes, adopts the shared block
+        chain (refcount bump + copy-on-write at the write frontier), and
+        prefills only the novel suffix. Requires paged_kv."""
         assert cfg.is_moe, "ServeEngine's expert cache applies to MoE archs"
         assert lookahead >= 1, "lookahead: layers ahead to prefetch (>= 1)"
         self.cfg = cfg
@@ -201,6 +224,28 @@ class ServeEngine:
         self._step_worthwhile: Optional[int] = None
         self.telemetry = telemetry
         self._wire_telemetry()
+
+        self._paged = bool(paged_kv)
+        self._kv_block = int(kv_block)
+        self._kv_blocks = kv_blocks
+        self._prefix_on = bool(prefix_cache)
+        self.kv_pool = None
+        self.prefix_tree = None
+        self._prefix_hits = 0
+        self._prefix_hit_tokens = 0
+        self._prefix_novel_tokens = 0
+        if self._paged:
+            assert self._kv_block >= 1, "kv_block must be >= 1"
+            assert all(k in ("attn_dense", "attn_moe")
+                       for k, _ in cfg.stack()), \
+                f"paged KV needs an attention-only stack, got {cfg.stack()}"
+            assert cfg.sliding_window == 0 and self.window <= 0, \
+                "paged KV blocks never wrap; sliding-window decode is " \
+                "ring-only"
+            assert cfg.num_cond_tokens == 0, \
+                "paged KV does not model conditioning-prefix positions"
+        else:
+            assert not prefix_cache, "prefix_cache requires paged_kv"
 
         if tables is None:
             r = 8
@@ -321,9 +366,33 @@ class ServeEngine:
                           peer_cost=peer_cost)
 
     def init_caches(self, batch: int, seq_len: int):
+        if self._paged:
+            bs = self._kv_block
+            cap = seq_len + self.cfg.num_cond_tokens
+            max_blocks = -(-cap // bs)
+            n_blocks = (int(self._kv_blocks) if self._kv_blocks
+                        else batch * max_blocks)
+            self.kv_pool = PagedKVPool(n_blocks, bs, batch, max_blocks)
+            self._prefix_hits = 0
+            self._prefix_hit_tokens = 0
+            self._prefix_novel_tokens = 0
+            if self._prefix_on:
+                self.prefix_tree = PrefixTree(self.kv_pool)
+            return transformer.init_paged_caches(self.cfg, n_blocks, bs)
         return transformer.init_caches(
             self.cfg, batch, seq_len,
             window=0 if self.window < 0 else self.window)
+
+    def _apply_kv_copies(self, caches):
+        """Batched device copy of the pool's pending CoW pairs — must land
+        before the next scatter so a shared block's content survives the
+        remap. Leaves are [repeat, P, bs, KV, hd]: block axis 1."""
+        pairs = self.kv_pool.drain_copies()
+        if not pairs:
+            return caches
+        src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), caches)
 
     # ------------------------------------------------------------------
     def step(self, token, caches, pos, active: Optional[np.ndarray] = None):
@@ -335,9 +404,21 @@ class ServeEngine:
         Returns (logits [B, V], new_caches)."""
         buddies = self._buddy_state()
         self._key, sub = jax.random.split(self._key)
+        kw = {}
+        if self._paged:
+            b = int(token.shape[0])
+            # paged decode is always per-row: broadcast a lockstep scalar
+            pos = np.broadcast_to(np.asarray(pos, np.int32), (b,))
+            act = (np.ones(b, bool) if active is None
+                   else np.asarray(active, bool))
+            for i in np.flatnonzero(act):
+                p = int(pos[i])
+                self.kv_pool.ensure_range(i, p, p + 1)
+            caches = self._apply_kv_copies(caches)
+            kw["block_tables"] = jnp.asarray(self.kv_pool.tables)
         logits, caches, aux = self._step_fn(
             params=self.params, token=token, caches=caches,
-            pos=jnp.asarray(pos, jnp.int32), buddies=buddies, rng=sub)
+            pos=jnp.asarray(pos, jnp.int32), buddies=buddies, rng=sub, **kw)
         if active is None:
             active = np.ones(int(token.shape[0]), bool)
         self._account(aux, active=np.asarray(active, bool))
@@ -371,22 +452,35 @@ class ServeEngine:
         tok_valid = np.asarray(tok_valid, bool) & rows[:, None]
         base = np.asarray(base_pos, np.int32)
         counts = tok_valid.sum(axis=1)
-        # ring-wrap guard: a multi-token chunk is scattered into the KV cache
-        # before its queries attend, so it must not wrap the ring buffer
-        # (attn_prefill_chunk); single-token rows are plain decode writes
-        cap = jax.tree.leaves(caches)[0].shape[2]
-        multi = counts > 1
-        assert not multi.any() or int((base[multi] + counts[multi]).max()) <= cap, \
-            "chunked prefill would wrap the KV ring buffer: size caches to " \
-            "the full prompt (prompt end %d > capacity %d)" % (
-                int((base[multi] + counts[multi]).max()), cap)
+        kw = {}
+        if self._paged:
+            # no ring to wrap: a block's slot index IS its content position.
+            # Map/CoW the write range of every live row, land pending block
+            # copies, and ship the block table with the launch.
+            for i in np.flatnonzero(counts > 0):
+                self.kv_pool.ensure_range(int(i), int(base[i]),
+                                          int(base[i] + counts[i]))
+            caches = self._apply_kv_copies(caches)
+            kw["block_tables"] = jnp.asarray(self.kv_pool.tables)
+        else:
+            # ring-wrap guard: a multi-token chunk is scattered into the KV
+            # cache before its queries attend, so it must not wrap the ring
+            # buffer (attn_prefill_chunk); single-token rows are plain
+            # decode writes
+            cap = jax.tree.leaves(caches)[0].shape[2]
+            multi = counts > 1
+            assert not multi.any() or \
+                int((base[multi] + counts[multi]).max()) <= cap, \
+                "chunked prefill would wrap the KV ring buffer: size " \
+                "caches to the full prompt (prompt end %d > capacity %d)" % (
+                    int((base[multi] + counts[multi]).max()), cap)
 
         buddies = self._buddy_state()
         self._key, sub = jax.random.split(self._key)
         logits, caches, aux = self._chunk_fn(
             params=self.params, tokens=tokens, caches=caches,
             base_pos=jnp.asarray(base, jnp.int32),
-            tok_valid=jnp.asarray(tok_valid), buddies=buddies, rng=sub)
+            tok_valid=jnp.asarray(tok_valid), buddies=buddies, rng=sub, **kw)
         self._account(aux, active=tok_valid.reshape(-1))
         return logits, caches
 
@@ -850,17 +944,84 @@ class ServeEngine:
         self._wire_telemetry()
 
     def reset_rows(self, caches, rows):
-        """Zero the decode caches of ``rows`` (batch indices) so a freed slot
-        can be re-used by a newly admitted request. Only attention-stack
-        caches keep batch on axis 1 of every leaf ([repeat, B, ...]); super
-        groups (hybrid/vlm) nest another layer axis first, so guard rather
-        than silently zero the wrong axis."""
+        """Free the decode caches of ``rows`` (batch indices) so a freed slot
+        can be re-used by a newly admitted request. Ring mode zeroes the
+        rows' cache slices; paged mode releases the rows' block-table
+        entries back to the pool (shared prefix blocks survive via their
+        radix-tree refcounts) and leaves device storage untouched. Only
+        attention-stack caches keep batch on axis 1 of every ring leaf
+        ([repeat, B, ...]); super groups (hybrid/vlm) nest another layer
+        axis first, so guard rather than silently zero the wrong axis."""
         assert all(k in ("attn_dense", "attn_moe") for k, _ in
                    self.cfg.stack()), \
             "reset_rows assumes [repeat, B, ...] cache leaves (attention " \
             f"stacks only), got {self.cfg.stack()}"
+        if self._paged:
+            for r in np.atleast_1d(rows):
+                self.kv_pool.free_row(int(r))
+            return caches
         rows = jnp.asarray(np.atleast_1d(rows), jnp.int32)
         return jax.tree.map(lambda a: a.at[:, rows].set(0), caches)
+
+    def release_kv_row(self, row: int) -> None:
+        """Return a row's KV pages to the pool without touching the caches —
+        the preemption hook (ContinuousScheduler.preempt). No-op on the
+        ring path, where the row's slots are zeroed on re-admission."""
+        if self._paged:
+            self.kv_pool.free_row(int(row))
+
+    # -- prefix cache ---------------------------------------------------
+    def adopt_prefix(self, row: int, prompt) -> int:
+        """Match ``prompt`` against the radix tree and map the longest
+        cached prefix into ``row``'s block table (refcount bump; CoW of the
+        shared tail happens lazily in ensure_range before the first write).
+        Returns the number of adopted tokens m — the scheduler then feeds
+        prompt[m] first and chunk-prefills only the novel suffix."""
+        tree = self.prefix_tree
+        assert tree is not None, "adopt_prefix needs prefix_cache=True"
+        toks = [int(t) for t in prompt]
+        m, blocks = tree.match(toks, cap=len(toks) - 1)
+        if m > 0:
+            self.kv_pool.adopt(row, blocks)
+            self._prefix_hits += 1
+        self._prefix_hit_tokens += m
+        self._prefix_novel_tokens += len(toks) - m
+        tele = self.telemetry
+        if tele is not None:
+            tele.metrics.counter("prefix_tokens", kind="hit").inc(m)
+            tele.metrics.counter("prefix_tokens",
+                                 kind="novel").inc(len(toks) - m)
+            self._prefix_gauges(tele)
+            if m > 0 and tele.trace is not None:
+                tele.trace.instant("engine", 0, "prefix_hit", f"row{row}",
+                                   self.scheduler.now, row=int(row),
+                                   hit_tokens=int(m),
+                                   novel_tokens=int(len(toks) - m))
+        return m
+
+    def insert_prefix(self, row: int, prompt) -> None:
+        """Donate a fully-prefilled row's prompt KV to the radix tree,
+        trimmed to full blocks — the final partial block stays private so
+        the donor keeps decoding into it without a CoW."""
+        tree = self.prefix_tree
+        if tree is None:
+            return
+        bs = self.kv_pool.block_size
+        covered = (len(prompt) // bs) * bs
+        if covered == 0:
+            return
+        toks = [int(t) for t in prompt[:covered]]
+        tree.insert(toks, self.kv_pool.row_blocks(row, covered))
+        if self.telemetry is not None:
+            self._prefix_gauges(self.telemetry)
+
+    def _prefix_gauges(self, tele) -> None:
+        occ = self.kv_pool.occupancy()
+        tele.metrics.gauge("kv_pool_used_blocks").set(occ["used_blocks"])
+        tele.metrics.gauge("kv_pool_free_blocks").set(occ["free_blocks"])
+        if self.prefix_tree is not None:
+            tele.metrics.gauge("prefix_tree_nodes").set(
+                self.prefix_tree.n_nodes)
 
     def sample_tokens(self, logits, greedy: bool, temperature: float = 1.0):
         """Next-token choice from [B, V] logits: argmax, or seeded temperature
@@ -968,6 +1129,21 @@ class ServeEngine:
                 "links": [self.peer_links[d].utilization()
                           for d in sorted(self.peer_links)],
             }
+        if self._paged:
+            # only present in paged mode: paged_kv=off summaries stay
+            # bit-identical to the pre-paged engine
+            s["prefix"] = {
+                "paged_kv": True,
+                "kv_block": self._kv_block,
+                "prefix_cache": self._prefix_on,
+                "pool": (self.kv_pool.occupancy()
+                         if self.kv_pool is not None else None),
+                "hits": self._prefix_hits,
+                "hit_tokens": self._prefix_hit_tokens,
+                "novel_tokens": self._prefix_novel_tokens,
+            }
+            if self.prefix_tree is not None:
+                s["prefix"]["tree"] = self.prefix_tree.stats()
         if self.telemetry is not None:
             # only present with a telemetry bundle attached: telemetry=off
             # summaries stay bit-identical to the pre-telemetry engine

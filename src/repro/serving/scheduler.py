@@ -117,8 +117,11 @@ class ReplayArrivals(ArrivalProcess):
 def load_trace(path: str) -> List[dict]:
     """Load a serving trace: JSONL rows of
     ``{"t_arrival": <simulated s>, "prompt_len": P, "max_new_tokens": M}``
-    (blank lines and ``#`` comments skipped). Rows are returned sorted by
-    arrival time — the ReplayArrivals contract."""
+    (blank lines and ``#`` comments skipped). Rows may carry optional
+    ``session`` / ``parent`` ints so a recorded trace can express prefix
+    structure (multi-turn sessions sharing a system prompt; ``parent`` is
+    the previous turn's row). Rows are returned sorted by arrival time —
+    the ReplayArrivals contract."""
     rows = []
     with open(path) as f:
         for ln, line in enumerate(f, 1):
@@ -127,9 +130,14 @@ def load_trace(path: str) -> List[dict]:
                 continue
             try:
                 d = json.loads(line)
-                rows.append({"t_arrival": float(d["t_arrival"]),
-                             "prompt_len": int(d["prompt_len"]),
-                             "max_new_tokens": int(d["max_new_tokens"])})
+                row = {"t_arrival": float(d["t_arrival"]),
+                       "prompt_len": int(d["prompt_len"]),
+                       "max_new_tokens": int(d["max_new_tokens"])}
+                if "session" in d:
+                    row["session"] = int(d["session"])
+                if "parent" in d:
+                    row["parent"] = int(d["parent"])
+                rows.append(row)
             except (KeyError, TypeError, ValueError) as e:
                 # TypeError covers valid-JSON non-object rows ('[0.1, 5, 3]')
                 raise ValueError(f"{path}:{ln}: bad trace row {line!r}") from e
@@ -154,9 +162,13 @@ def requests_from_trace(path: str, sample_prompt: Callable[[int], np.ndarray],
     for p, r in zip(prompts, rows):
         assert p.ndim == 1 and len(p) == r["prompt_len"], \
             f"sample_prompt returned {p.shape} for prompt_len {r['prompt_len']}"
-    return make_requests(prompts,
+    reqs = make_requests(prompts,
                          ReplayArrivals([r["t_arrival"] for r in rows]),
                          [r["max_new_tokens"] for r in rows], slo)
+    for q, r in zip(reqs, rows):
+        q.session = r.get("session")
+        q.parent = r.get("parent")
+    return reqs
 
 
 # ===========================================================================
@@ -178,6 +190,8 @@ class ServeRequest:
     max_new_tokens: int
     arrival_s: float
     slo: Optional[SLOConfig] = None
+    session: Optional[int] = None       # shared-prefix session id (traces)
+    parent: Optional[int] = None        # previous turn's rid in the session
     # -- runtime state (filled by the scheduler) ------------------------
     state: str = WAITING
     admitted_s: float = -1.0
@@ -185,6 +199,7 @@ class ServeRequest:
     finished_s: float = -1.0
     rejected_s: float = -1.0            # shed time (SLO admission)
     cursor: int = 0                     # next prompt token to feed
+    prefix_hit_tokens: int = 0          # prompt tokens served from the cache
     tokens: list = dataclasses.field(default_factory=list)
     token_times: list = dataclasses.field(default_factory=list)
 
@@ -297,6 +312,11 @@ class RequestQueue:
             return r
         return None
 
+    def requeue(self, r: ServeRequest) -> None:
+        """Put a preempted request back at the FRONT of the backlog (it is
+        the oldest admitted work, so FCFS order is preserved)."""
+        self._pending.insert(0, r)
+
 
 # ===========================================================================
 # Request-lifecycle trace spans (flight recorder, "requests" track)
@@ -333,6 +353,12 @@ def emit_request_spans(trace, requests: Sequence[ServeRequest],
             continue                        # never admitted (truncated run)
         trace.span("requests", r.rid, "queued", "queued",
                    r.arrival_s, r.admitted_s)
+        if r.prefix_hit_tokens > 0:
+            # admit-with-prefix-hit: this many prompt tokens were adopted
+            # from the radix cache instead of being prefilled
+            trace.instant("requests", r.rid, "prefix_hit", "prefix_hit",
+                          r.admitted_s, hit_tokens=r.prefix_hit_tokens,
+                          prompt_len=len(r.prompt))
         if r.first_token_s >= 0:
             trace.span("requests", r.rid, "prefill", "prefill",
                        r.admitted_s, r.first_token_s)
@@ -425,7 +451,8 @@ class ContinuousScheduler:
     def __init__(self, engine, slots: int, *,
                  greedy: bool = True, temperature: float = 1.0,
                  controller: Optional[AdaptiveBudgetController] = None,
-                 max_steps: int = 1_000_000, prefill_chunk: int = 1):
+                 max_steps: int = 1_000_000, prefill_chunk: int = 1,
+                 adaptive_chunk: bool = False):
         assert slots >= 1
         assert prefill_chunk >= 1
         self.engine = engine
@@ -435,15 +462,46 @@ class ContinuousScheduler:
         self.controller = controller
         self.max_steps = max_steps
         self.prefill_chunk = prefill_chunk
+        # shrink a joining prompt's chunk while co-resident decode rows are
+        # under TPOT pressure (carried-over ROADMAP item); off by default —
+        # the fixed-chunk path is byte-identical
+        self.adaptive_chunk = adaptive_chunk
         self.completed: List[ServeRequest] = []
         self.occupancy: List[int] = []
         self.steps = 0
         self._trace_emitted: set = set()    # rids already on the trace
+        # live references into the running loop's slot/pos/tok state so
+        # preempt() can be driven mid-run (e.g. from a controller)
+        self._slot: Optional[List[Optional[ServeRequest]]] = None
+        self._pos: Optional[np.ndarray] = None
+        self._tok: Optional[np.ndarray] = None
 
     # -- service-time estimate for SLO-aware admission ------------------
     def _est_service(self, r: ServeRequest, est_step_s: float) -> float:
         prefill_steps = -(-len(r.prompt) // self.prefill_chunk)
         return (prefill_steps + r.max_new_tokens) * est_step_s
+
+    def _effective_chunk(self, slot, pos) -> int:
+        """Per-step prefill chunk size. With ``adaptive_chunk``, halve the
+        chunk while the EWMA step time exceeds the tightest TPOT budget of
+        a co-resident DECODE row — a joining prompt's long fused steps are
+        exactly what inflates its neighbours' inter-token gaps. Step time
+        is ~linear in fed tokens at the margin (the weight-streaming term
+        is per-step), so each halving roughly halves the projection;
+        power-of-two shrinks also bound jit retraces to log2(C) shapes."""
+        c = self.prefill_chunk
+        if not self.adaptive_chunk or c <= 1:
+            return c
+        budgets = [r.slo.tpot_s for i, r in enumerate(slot)
+                   if r is not None and r.slo is not None
+                   and r.slo.tpot_s is not None and pos[i] >= len(r.prompt)]
+        if not budgets:
+            return c
+        budget, est = min(budgets), self._est_step_s
+        while c > 1 and est > budget:
+            c //= 2
+            est /= 2.0
+        return max(1, c)
 
     # -- scaffolding shared by the token-by-token and chunked loops -----
     def _admit(self, queue: RequestQueue, slot, pos, tok, caches):
@@ -468,6 +526,18 @@ class ContinuousScheduler:
             newly.append(i)
         if newly:
             caches = eng.reset_rows(caches, newly)
+        if getattr(eng, "prefix_tree", None) is not None:
+            # radix-cache admission: adopt the longest cached prefix and
+            # start prefill at the first novel token — a full-prefix hit
+            # leaves exactly one token to feed (near-zero TTFT)
+            for i in newly:
+                r = slot[i]
+                m = eng.adopt_prefix(i, r.prompt)
+                if m > 0:
+                    r.prefix_hit_tokens = m
+                    pos[i] = m
+                    tok[i] = int(r.prompt[m])
+                    r.cursor = m + 1
         return caches, np.array([s is not None for s in slot], bool)
 
     def _tick(self, t0: float, n_active: int) -> float:
@@ -493,6 +563,39 @@ class ContinuousScheduler:
             r.finished_s = t1
             self.completed.append(r)
             slot[i] = None
+            # paged KV: hand the retired row's pages back immediately (its
+            # donated prefix blocks stay alive via radix-tree refcounts);
+            # no-op for a ring engine
+            self.engine.release_kv_row(i)
+
+    def _maybe_insert_prefix(self, i: int, r: ServeRequest) -> None:
+        """Donate a row's prompt KV to the radix cache the step its prefill
+        completes (both serving loops call this exactly once per request —
+        the step where pos crosses len(prompt))."""
+        if getattr(self.engine, "prefix_tree", None) is not None:
+            self.engine.insert_prefix(i, r.prompt)
+
+    def preempt(self, i: int, queue: RequestQueue) -> None:
+        """Evict a still-PREFILLING row under pressure: release its KV pages
+        (the prefix it donated — or matched — stays warm in the radix tree)
+        and put the request back at the head of the backlog for
+        re-admission, where the prefix cache makes the lost work cheap to
+        recover. Only callable mid-run (run()/._run_chunked stash live
+        state); rows that have emitted tokens cannot be preempted — their
+        sampled continuation would be lost."""
+        assert self._slot is not None, "preempt() only applies mid-run"
+        r = self._slot[i]
+        assert r is not None, f"slot {i} is empty"
+        assert not r.tokens, "cannot preempt a decoding row (tokens emitted)"
+        self.engine.release_kv_row(i)
+        r.state = WAITING
+        r.admitted_s = -1.0
+        r.cursor = 0
+        r.prefix_hit_tokens = 0
+        self._slot[i] = None
+        self._pos[i] = 0
+        self._tok[i] = 0
+        queue.requeue(r)
 
     def _feedback(self, queue: RequestQueue) -> None:
         """Resize the prefetch budget from stall attribution + queue depth
@@ -517,6 +620,7 @@ class ContinuousScheduler:
         slot: List[Optional[ServeRequest]] = [None] * b
         pos = np.zeros(b, np.int32)
         tok = np.zeros(b, np.int64)
+        self._slot, self._pos, self._tok = slot, pos, tok
         t_start = eng.scheduler.now
         # seed the step-time estimate from the hardware model (refined online)
         self._est_step_s = eng.hw.decode_compute_time(eng._active_params, b)
@@ -546,6 +650,8 @@ class ContinuousScheduler:
                     tok[i] = int(r.prompt[r.cursor])
                     r.cursor += 1
                     continue
+                if pos[i] == len(r.prompt):     # prefill just completed
+                    self._maybe_insert_prefix(i, r)
                 self._emit(slot, i, int(sampled[i]), t1, tok)
             self._feedback(queue)
 
@@ -559,12 +665,13 @@ class ContinuousScheduler:
         sampled token. A fused step only launches while some row prefills —
         pure-decode steps use the cheaper single-token graph."""
         eng = self.engine
-        b, chunk = self.slots, self.prefill_chunk
+        b = self.slots
         ctx = max_context or queue.max_context()
         caches = eng.init_caches(b, ctx)
         slot: List[Optional[ServeRequest]] = [None] * b
         pos = np.zeros(b, np.int32)
         tok = np.zeros(b, np.int64)
+        self._slot, self._pos, self._tok = slot, pos, tok
         t_start = eng.scheduler.now
         self._est_step_s = eng.hw.decode_compute_time(eng._active_params, b)
 
@@ -584,6 +691,7 @@ class ContinuousScheduler:
                              and pos[i] < len(slot[i].prompt)
                              for i in range(b))
             if prefilling:
+                chunk = self._effective_chunk(slot, pos)
                 tokens = np.zeros((b, chunk), np.int64)
                 valid = np.zeros((b, chunk), bool)
                 for i in range(b):
@@ -619,6 +727,8 @@ class ContinuousScheduler:
                 pos[i] += n_feed[i]
                 if pos[i] < len(r.prompt):      # still prefilling this row
                     continue
+                if pos[i] == len(r.prompt):     # prefill just completed
+                    self._maybe_insert_prefix(i, r)
                 self._emit(slot, i, int(sampled[i]), t1, tok)
             self._feedback(queue)
 

@@ -1,0 +1,77 @@
+"""Frozen ring-buffer serving scenario for the paged-KV bit-identity gate.
+
+``golden_summary`` runs a small deterministic continuous-batching scenario
+(both serving loops: token-by-token and chunked prefill) and returns the
+scheduler summary. ``tests/data/pre_paged_serving.json`` was written by
+this module BEFORE the paged-KV refactor landed; ``tests/test_paged.py``
+re-runs the identical scenario with ``paged_kv=False`` and requires the
+summary to match byte-for-byte — the contract that the ring-buffer path
+is the exact pre-refactor engine (same discipline as the mesh gate in
+tests/_mesh_golden.py).
+
+Regenerate (only if the scenario itself must change, never to paper over
+a diff):  PYTHONPATH=src python -m tests._paged_golden
+"""
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.serving.engine import ServeEngine
+from repro.serving.scheduler import (ContinuousScheduler, PoissonArrivals,
+                                     RequestQueue, SLOConfig, make_requests)
+from repro.training.data import MarkovLM
+
+from tests._mesh_golden import jsonify
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "pre_paged_serving.json")
+
+
+def golden_summary(prefill_chunk: int = 4, paged_kv=None,
+                   prefix_cache=None) -> dict:
+    """The frozen scenario. ``paged_kv=None`` / ``prefix_cache=None`` omit
+    the kwargs entirely (how every pre-refactor caller constructed the
+    engine); the bit-identity test passes explicit ``False`` instead."""
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    q = np.random.default_rng(0).random((l, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    policy = BuddyPolicy(tau=0.1, beta=0.9, rho=3, H=8)
+    kw = {}
+    if paged_kv is not None:
+        kw["paged_kv"] = paged_kv
+    if prefix_cache is not None:
+        kw["prefix_cache"] = prefix_cache
+    eng = ServeEngine(cfg, params, tables=tables, policy=policy,
+                      cache=ExpertCache(l, e, 0.5, seed=0),
+                      predictor=PrevStepPredictor(l, e),
+                      prefetch_k=2, seed=0, **kw)
+    rng = np.random.default_rng(7)
+    prompts = [lm.sample(1, int(rng.integers(6, 14)))[0] for _ in range(10)]
+    new_toks = rng.integers(3, 9, 10)
+    slo = SLOConfig(ttft_s=0.5, tpot_s=0.05, deadline_s=2.0)
+    reqs = make_requests(prompts, PoissonArrivals(1500.0, seed=3),
+                         new_toks, slo)
+    cs = ContinuousScheduler(eng, slots=3, prefill_chunk=prefill_chunk)
+    return jsonify(cs.run(RequestQueue(reqs)))
+
+
+def main():
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    golden = {f"chunk{c}": golden_summary(c) for c in (1, 4)}
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

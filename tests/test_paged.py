@@ -1,0 +1,388 @@
+"""Paged KV + radix-tree prefix cache.
+
+Four contracts:
+
+  * OFF-KNOB BIT-IDENTITY — ``paged_kv=False`` is the exact pre-refactor
+    ring-buffer engine: the frozen serving scenario in
+    ``tests/data/pre_paged_serving.json`` (written before the paged path
+    existed) must match byte-for-byte, token-by-token AND chunked.
+  * PAGED-VS-RING PARITY — the paged read/write path computes the same
+    attention: ``generate`` emits identical tokens, prefill logits agree.
+  * PREFIX-HIT EXACTNESS — admitting by adopting cached prefix blocks and
+    prefilling only the novel suffix yields BITWISE-identical logits to
+    recomputing the whole prompt (adopted KV is the same values the row
+    would have written; CoW keeps tree contents frozen).
+  * ALLOCATOR/TREE INVARIANTS — property tests over random request
+    lifecycles: refcount conservation (row tables + tree listings),
+    free-list consistency, no leaks after retire/preempt/evict.
+"""
+import json
+import os
+from types import SimpleNamespace
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.paged_kv import PagedKVPool
+from repro.runtime.prefetch import PrefetchBudget
+from repro.runtime.telemetry import Telemetry
+from repro.serving.engine import ServeEngine
+from repro.serving.prefix import PrefixTree
+from repro.serving.scheduler import (ContinuousScheduler, RequestQueue,
+                                     SLOConfig, ServeRequest)
+
+from tests._paged_golden import GOLDEN_PATH, golden_summary
+
+settings.register_profile("paged", max_examples=12)
+settings.load_profile("paged")
+
+
+def _cfg_params():
+    cfg = reduced()
+    return cfg, transformer.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, *, paged: bool, prefix: bool = False,
+            kv_block: int = 8, cache_rate: float = 1.0) -> ServeEngine:
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    return ServeEngine(cfg, params,
+                       cache=ExpertCache(l, e, cache_rate, seed=0), seed=0,
+                       paged_kv=paged, kv_block=kv_block,
+                       prefix_cache=prefix)
+
+
+# ===========================================================================
+# off-knob bit-identity vs the frozen pre-refactor capture
+# ===========================================================================
+def test_off_knob_bit_identical_to_frozen_capture():
+    """paged_kv=False must BE the pre-paged engine — the committed golden
+    summaries (written at the commit before this subsystem landed) match
+    byte-for-byte for both serving loops."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    for c in (1, 4):
+        got = golden_summary(c, paged_kv=False, prefix_cache=False)
+        assert got == golden[f"chunk{c}"], (
+            f"ring path diverged from the pre-paged capture at chunk={c}")
+
+
+# ===========================================================================
+# paged vs ring numerical parity
+# ===========================================================================
+def test_paged_generate_matches_ring():
+    cfg, params = _cfg_params()
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab_size, (3, 9))
+    out_ring = _engine(cfg, params, paged=False).generate(
+        prompts, max_new_tokens=6)
+    out_paged = _engine(cfg, params, paged=True).generate(
+        prompts, max_new_tokens=6)
+    assert np.array_equal(np.asarray(out_ring), np.asarray(out_paged))
+
+
+def test_paged_prefill_logits_match_ring():
+    cfg, params = _cfg_params()
+    rng = np.random.default_rng(6)
+    b, n, c = 2, 12, 4
+    prompts = rng.integers(0, cfg.vocab_size, (b, n))
+    active = np.ones(b, bool)
+    logits = {}
+    for paged in (False, True):
+        eng = _engine(cfg, params, paged=paged)
+        caches = eng.init_caches(b, n)
+        out = []
+        for s in range(0, n, c):
+            toks = jnp.asarray(prompts[:, s:s + c], jnp.int32)
+            lg, caches = eng.prefill_rows(
+                toks, active, caches,
+                base_pos=np.full(b, s, np.int32),
+                tok_valid=np.ones((b, c), bool))
+            out.append(np.asarray(lg))
+        logits[paged] = np.concatenate(out, axis=1)
+    assert np.max(np.abs(logits[True] - logits[False])) < 1e-5
+
+
+# ===========================================================================
+# prefix-hit admission: bitwise-identical logits vs full recompute
+# ===========================================================================
+def _chunked_prefill_row(eng, caches, row, b, prompt, start, chunk=4):
+    """Feed prompt[start:] into ``row`` in fused chunks; returns (caches,
+    last-token logits)."""
+    last = None
+    pos = start
+    n = len(prompt)
+    while pos < n:
+        c = min(chunk, n - pos)
+        toks = np.zeros((b, chunk), np.int64)
+        valid = np.zeros((b, chunk), bool)
+        toks[row, :c] = prompt[pos:pos + c]
+        valid[row, :c] = True
+        active = np.zeros(b, bool)
+        active[row] = True
+        base = np.zeros(b, np.int32)
+        base[row] = pos
+        lg, caches = eng.prefill_rows(jnp.asarray(toks, jnp.int32), active,
+                                      caches, base_pos=base, tok_valid=valid)
+        last = np.asarray(lg[row, c - 1])
+        pos += c
+    return caches, last
+
+
+def test_prefix_hit_logits_bitwise_equal_recompute():
+    cfg, params = _cfg_params()
+    rng = np.random.default_rng(9)
+    b, cap, bs = 2, 32, 8
+    donor = rng.integers(0, cfg.vocab_size, 24)          # 3 full blocks
+    adopter = np.concatenate([donor[:20],
+                              rng.integers(0, cfg.vocab_size, 4)])
+
+    # arm 1: donor prefills + donates; adopter admits via the radix tree
+    eng = _engine(cfg, params, paged=True, prefix=True, kv_block=bs)
+    caches = eng.init_caches(b, cap)
+    caches, _ = _chunked_prefill_row(eng, caches, 0, b, donor, 0)
+    eng.insert_prefix(0, donor)
+    m = eng.adopt_prefix(1, adopter)
+    assert m == 20, f"expected a 20-token prefix hit, got {m}"
+    caches, lg_hit = _chunked_prefill_row(eng, caches, 1, b, adopter, m)
+    assert eng.kv_pool.cow_copies >= 1     # shared mid-fill block was CoW'd
+
+    # arm 2: identical engine recomputes the whole adopter prompt
+    eng2 = _engine(cfg, params, paged=True, prefix=True, kv_block=bs)
+    caches2 = eng2.init_caches(b, cap)
+    caches2, lg_cold = _chunked_prefill_row(eng2, caches2, 1, b, adopter, 0)
+
+    assert np.array_equal(lg_hit, lg_cold), (
+        "prefix-hit admission must be bitwise-identical to full recompute")
+    # the donated chain is still intact in the tree
+    eng.kv_pool.check(eng.prefix_tree.block_holders())
+
+
+# ===========================================================================
+# end-to-end: scheduler admission, preemption, telemetry
+# ===========================================================================
+def _session_requests(cfg, rng, slo):
+    base = rng.integers(0, cfg.vocab_size, 16)
+    reqs = []
+    for i in range(4):
+        p = np.concatenate([base, rng.integers(0, cfg.vocab_size, 4 + i)])
+        reqs.append(ServeRequest(rid=i, prompt=p.astype(np.int64),
+                                 max_new_tokens=3,
+                                 arrival_s=i * 5e-3, slo=slo))
+    return reqs
+
+
+def test_scheduler_prefix_admission_and_trace():
+    cfg, params = _cfg_params()
+    rng = np.random.default_rng(13)
+    slo = SLOConfig(ttft_s=0.5, tpot_s=0.05, deadline_s=2.0)
+    eng = _engine(cfg, params, paged=True, prefix=True)
+    eng.telemetry = Telemetry.with_trace(
+        predictor_label="prev_step", num_layers=cfg.num_layers,
+        num_experts=cfg.moe.num_experts)
+    eng._wire_telemetry()
+    cs = ContinuousScheduler(eng, slots=2, prefill_chunk=4)
+    s = cs.run(RequestQueue(_session_requests(cfg, rng, slo)))
+    assert s["completed"] == 4
+    px = s["engine"]["prefix"]
+    assert px["hits"] >= 1 and px["hit_tokens"] >= 16
+    assert px["tree"]["nodes"] >= 1
+    # telemetry: counters + gauges + both trace instants fired
+    snap = eng.telemetry.metrics.snapshot()
+    assert {"prefix_tokens", "kv_pool_used_blocks",
+            "prefix_tree_nodes"} <= set(snap)
+    assert sum(snap["prefix_tokens"].values()) == \
+        px["hit_tokens"] + px["novel_tokens"]
+    kinds = {(e["track"], e["kind"]) for e in eng.telemetry.trace.events}
+    assert ("engine", "prefix_hit") in kinds
+    assert ("requests", "prefix_hit") in kinds
+    # retired rows returned their pages; only tree listings keep blocks
+    eng.kv_pool.check(eng.prefix_tree.block_holders())
+    assert eng.kv_pool.used_blocks == len(eng.prefix_tree.block_holders())
+
+
+class _PreemptOnce:
+    """Controller stub: preempts the target rid the first step it is seen
+    mid-prefill (the AdaptiveBudgetController protocol surface the
+    scheduler's _feedback hook calls)."""
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self.sched = None
+        self.queue = None
+        self.fired = False
+        self.budget = PrefetchBudget(0, 1, 0)   # summary() snapshots these
+        self.trace = []
+
+    def observe_step(self, *a, **k):
+        pass
+
+    def apply(self, eng):
+        if self.fired:
+            return
+        s = self.sched
+        for i, r in enumerate(s._slot):
+            if (r is not None and r.rid == self.rid and not r.tokens
+                    and s._pos[i] < len(r.prompt)):
+                s.preempt(i, self.queue)
+                self.fired = True
+                return
+
+
+def test_preempt_and_readmit_with_warm_prefix():
+    cfg, params = _cfg_params()
+    rng = np.random.default_rng(17)
+    slo = SLOConfig(ttft_s=0.5, tpot_s=0.05, deadline_s=2.0)
+    base = rng.integers(0, cfg.vocab_size, 16)
+    reqs = [
+        ServeRequest(rid=0, prompt=base.astype(np.int64), max_new_tokens=3,
+                     arrival_s=0.0, slo=slo),
+        # arrives after rid 0 retires (and donates); long enough to still
+        # be prefilling after its first fused step
+        ServeRequest(rid=1,
+                     prompt=np.concatenate(
+                         [base, rng.integers(0, cfg.vocab_size, 12)]
+                     ).astype(np.int64),
+                     max_new_tokens=3, arrival_s=20e-3, slo=slo),
+    ]
+    eng = _engine(cfg, params, paged=True, prefix=True)
+    ctrl = _PreemptOnce(rid=1)
+    cs = ContinuousScheduler(eng, slots=2, prefill_chunk=4, controller=ctrl)
+    queue = RequestQueue(reqs)
+    ctrl.sched, ctrl.queue = cs, queue
+    s = cs.run(queue)
+    assert ctrl.fired, "the stub never found rid 1 mid-prefill"
+    assert s["completed"] == 2
+    r1 = next(r for r in cs.completed if r.rid == 1)
+    assert r1.prefix_hit_tokens >= 16   # re-admitted against the warm tree
+    assert len(r1.tokens) == 3
+    eng.kv_pool.check(eng.prefix_tree.block_holders())
+
+
+def test_effective_chunk_shrinks_under_tpot_pressure():
+    sched = ContinuousScheduler(SimpleNamespace(), slots=2,
+                                prefill_chunk=8, adaptive_chunk=True)
+    decode = ServeRequest(rid=0, prompt=np.arange(4), max_new_tokens=4,
+                          arrival_s=0.0,
+                          slo=SLOConfig(ttft_s=1.0, tpot_s=0.05))
+    joiner = ServeRequest(rid=1, prompt=np.arange(16), max_new_tokens=4,
+                          arrival_s=0.0, slo=None)
+    slot, pos = [decode, joiner], np.array([4, 0])   # rid 0 is decoding
+    sched._est_step_s = 0.16                         # 3.2x the TPOT budget
+    assert sched._effective_chunk(slot, pos) == 2    # halved twice
+    sched._est_step_s = 0.64
+    assert sched._effective_chunk(slot, pos) == 1    # floors at 1
+    sched._est_step_s = 0.04
+    assert sched._effective_chunk(slot, pos) == 8    # under budget: full
+    sched.adaptive_chunk = False
+    sched._est_step_s = 0.64
+    assert sched._effective_chunk(slot, pos) == 8    # knob off: unchanged
+    # no decode rows resident -> nothing to protect
+    sched.adaptive_chunk = True
+    assert sched._effective_chunk([None, joiner], np.array([0, 0])) == 8
+
+
+# ===========================================================================
+# allocator + radix-tree property tests
+# ===========================================================================
+def _serve_once(pool, tree, rng, row, vocab, live):
+    """One full request lifecycle against the pool/tree pair, mirroring the
+    engine: match -> adopt -> CoW-write the suffix -> donate -> maybe keep
+    resident (returned in ``live``) or retire immediately."""
+    bs = pool.block_size
+    n = int(rng.integers(1, pool.max_blocks * bs + 1))
+    toks = [int(t) for t in rng.integers(0, vocab, n)]
+    m, chain = tree.match(toks, cap=n - 1)
+    assert m <= n - 1 and len(chain) == -(-m // bs) if m else not chain
+    if m:
+        pool.adopt(row, chain)
+    pool.ensure_range(row, m, n)
+    pool.drain_copies()
+    covered = (n // bs) * bs
+    if covered:
+        tree.insert(toks[:covered], pool.row_blocks(row, covered))
+    if rng.random() < 0.5:
+        pool.free_row(row)
+    else:
+        live.add(row)
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_pool_tree_refcount_conservation(seed):
+    rng = np.random.default_rng(seed)
+    bs = int(rng.integers(2, 6))
+    batch = int(rng.integers(2, 5))
+    max_blocks = int(rng.integers(2, 6))
+    pool = PagedKVPool(batch * max_blocks + 8, bs, batch, max_blocks)
+    tree = PrefixTree(pool)
+    vocab = 3                                  # tiny vocab: prefixes collide
+    live = set()
+    for _ in range(25):
+        free_rows = [r for r in range(batch) if r not in live]
+        op = rng.random()
+        if op < 0.2 and live:                  # retire a resident row
+            r = int(rng.choice(sorted(live)))
+            pool.free_row(r)
+            live.discard(r)
+        elif op < 0.3:
+            tree.evict_lru_leaf()
+        elif free_rows:
+            _serve_once(pool, tree, rng, int(rng.choice(free_rows)),
+                        vocab, live)
+        pool.check(tree.block_holders())       # every op preserves it
+    # teardown: retire everything, evict the tree dry -> zero leaks
+    for r in list(live):
+        pool.free_row(r)
+    while tree.evict_lru_leaf():
+        pool.check(tree.block_holders())
+    assert tree.n_nodes == 0 and not tree.block_holders()
+    assert pool.used_blocks == 0 and pool.free_blocks == pool.n_blocks
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_tree_match_returns_inserted_prefix(seed):
+    rng = np.random.default_rng(seed)
+    bs = int(rng.integers(2, 5))
+    pool = PagedKVPool(64, bs, 4, 8)
+    tree = PrefixTree(pool)
+    n = int(rng.integers(bs, 8 * bs + 1))
+    toks = [int(t) for t in rng.integers(0, 4, n)]
+    pool.ensure_range(0, 0, n)
+    covered = (n // bs) * bs
+    donated = pool.row_blocks(0, covered)
+    tree.insert(toks[:covered], donated)
+    pool.free_row(0)
+    # an identical prompt matches every donated token (cap permitting)
+    m, chain = tree.match(toks, cap=n - 1)
+    assert m == min(covered, n - 1)
+    assert chain == donated[:len(chain)]
+    # a prompt diverging at position d matches exactly d tokens
+    d = int(rng.integers(0, covered))
+    probe = toks[:d] + [(toks[d] + 1) % 4] + toks[d + 1:]
+    m2, _ = tree.match(probe, cap=n - 1)
+    assert m2 == d
+    pool.check(tree.block_holders())
+
+
+def test_pool_exhaustion_raises_and_eviction_recovers():
+    pool = PagedKVPool(2, 4, 2, 4)
+    pool.ensure_range(0, 0, 8)                 # both blocks to row 0
+    try:
+        pool.ensure_range(1, 0, 4)
+        assert False, "expected exhaustion"
+    except RuntimeError as e:
+        assert "exhausted" in str(e)
+    # with a tree holding the blocks instead, pressure evicts and recovers
+    pool2 = PagedKVPool(2, 4, 2, 4)
+    tree = PrefixTree(pool2)
+    pool2.ensure_range(0, 0, 8)
+    tree.insert([0, 1, 2, 3, 0, 1, 2, 3], pool2.row_blocks(0, 8))
+    pool2.free_row(0)
+    pool2.ensure_range(1, 0, 8)                # evicts the leaf, reuses
+    assert pool2.evictions >= 1 and tree.n_evicted == 1
+    pool2.check(tree.block_holders())
