@@ -52,6 +52,19 @@ prefilling only the novel suffix; gated on follow-up-turn p99 TTFT and the
 prefix-hit token share under results["prefix"] (check_regression.py
 --kind prefix).
 
+--placement-ab adds the PLACEMENT arm: two identical int8-tier engines at
+equal HBM (same displaced-budget split, partial replica coverage) on a
+DRIFTING workload — mid-run the traffic becomes a calibrated "hot prompt
+storm" whose routing mass lands on a covered (replica-only) expert the
+initial placement left cold, so the hot expert set the placement was
+right for moves away. The live arm runs a PlacementController
+(runtime/placement.py: coverage re-picks + background replication on the
+event clock) that installs a full-precision replica of the newly-hot
+expert while the int8 replica absorbs its misses; the frozen arm keeps
+the initial placement and serves it degraded forever. Live must hold p99
+token latency no worse and serve a strictly lower degraded-token share;
+gated under results["placement"] by check_regression.py --kind placement.
+
 --seed makes sweeps reproducible run-to-run: it drives the workload draw,
 the cache placement, and every engine PRNG, and is recorded per arm in
 results/bench/serving.json.
@@ -74,6 +87,7 @@ from repro.configs.deepseek_v2_lite_buddy import reduced
 from repro.core import BuddyPolicy, build_buddy_lists
 from repro.models import transformer
 from repro.runtime.cache import ExpertCache
+from repro.runtime.placement import PlacementController
 from repro.runtime.prefetch import (AdaptiveBudgetController,
                                     PrevStepPredictor)
 from repro.runtime.telemetry import Telemetry
@@ -202,7 +216,8 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
         prefill_chunk: int = 8, seed: int = 0,
         quant_tier: str = "off", cost_policy: bool = False,
         n_devices: int = 1, ici_gbps=None,
-        prefix_ab: bool = False, kv_block: int = 8) -> dict:
+        prefix_ab: bool = False, kv_block: int = 8,
+        placement_ab: bool = False) -> dict:
     t0 = time.time()
     assert not cost_policy or quant_tier != "off", \
         "--cost-policy compares the four-way miss tree: pick a --quant-tier"
@@ -597,6 +612,136 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
         out_rows.append(("serving.prefix.hit_token_share", hit_share,
                          f"hits={px['hits']}"))
 
+    if placement_ab:
+        # -- live-placement A/B on a DRIFTING workload: identical int8-tier
+        # engines at equal HBM (same displaced-budget split, PARTIAL replica
+        # coverage so WHICH experts hold replicas matters), live
+        # PlacementController vs frozen placement. The drift is a "hot
+        # prompt storm": the first half of the requests repeat prompts the
+        # covered (replica-only) experts never see — the cache settles on
+        # the OTHER experts and the covered ones go cold and non-resident —
+        # then the second half hammers one trending prompt whose routing
+        # mass lands exactly on a covered expert at every layer. Frozen
+        # placement serves that expert degraded FOREVER (a covered miss is
+        # absorbed by the replica, so nothing ever promotes it — the tier's
+        # self-inhibition); the live arm sees its EMA rise, finds the would-
+        # be eviction victim cold (admission margin), and installs a full-
+        # precision replica in the background while the int8 replica keeps
+        # absorbing misses — the drift is healed with ZERO added stalls.
+        # Which prompts those are is CALIBRATED, not hardcoded: a throwaway
+        # probe engine measures per-layer expert shares of repeated-token
+        # prompts (cache.freq deltas) and picks the storm token (max
+        # covered-expert share across all layers) and a phase-A pool
+        # (near-zero covered-expert share). The trio discipline matches the
+        # tiered arm: mode='none' and prefetch-free, so the A/B measures
+        # the PLACEMENT loop itself, not buddy absorption or predictor
+        # quality.
+        l, e = cfg.num_layers, cfg.moe.num_experts
+        pl_cr, pl_cov = 1.0, 0.25
+        covered = TieredExpertStore(
+            l, e, pl_cr, bits=8, d_model=cfg.d_model, d_ff=cfg.moe.d_ff,
+            coverage=pl_cov, seed=seed).covered
+        cal = ServeEngine(
+            cfg, params, tables=tables, policy=BuddyPolicy(mode="none"),
+            cache=ExpertCache(l, e, 1.0, seed=seed),
+            predictor=PrevStepPredictor(l, e), prefetch_k=0, seed=seed)
+        cov_share = {}
+        prev_freq = cal.cache.freq.astype(float).copy()
+        for t in range(7, cfg.vocab_size, max(1, cfg.vocab_size // 16)):
+            cal.generate(np.full((slots, 10), t, np.int64), max_new_tokens=2)
+            f = cal.cache.freq.astype(float) - prev_freq
+            prev_freq = cal.cache.freq.astype(float).copy()
+            share = f / np.maximum(f.sum(axis=1, keepdims=True), 1.0)
+            cov_share[t] = (share * covered).sum(axis=1)
+        hot_tok = max(cov_share, key=lambda t: float(cov_share[t].min()))
+        pl_pool = sorted(cov_share, key=lambda t: float(cov_share[t].max()))
+        pl_pool = [t for t in pl_pool[:4] if t != hot_tok]
+
+        def _pl_eng(live: bool, interval_s: float) -> ServeEngine:
+            tier = TieredExpertStore(l, e, pl_cr, bits=8, d_model=cfg.d_model,
+                                     d_ff=cfg.moe.d_ff, coverage=pl_cov,
+                                     seed=seed)
+            # hot_top_k=2: a repeated prompt splits routing ~50/50 over two
+            # experts per layer, and top-1 would flap between the tied pair
+            # and never build the hysteresis streak
+            ctrl = (PlacementController(refresh_interval_s=interval_s,
+                                        hot_windows=2, hot_top_k=2)
+                    if live else None)
+            return ServeEngine(
+                cfg, params, tables=tables,
+                policy=BuddyPolicy(mode="none", quant_tier="int8"),
+                tier=tier, predictor=PrevStepPredictor(l, e),
+                prefetch_k=0, seed=seed, upgrade_degraded=False,
+                placement=ctrl)
+
+        step_s = _probe_step_s(_pl_eng(False, 1.0), lm, slots)
+        req_tokens = (PROMPT_LO + PROMPT_HI - 1) // 2 + max_new
+        rate = loads[-1] * slots / (req_tokens * step_s)
+        slo = SLOConfig(ttft_s=2 * PROMPT_HI * step_s, tpot_s=2 * step_s,
+                        deadline_s=3 * req_tokens * step_s)
+        # one workload draw shared by both arms: phase A then phase B
+        prng = np.random.default_rng(seed + 5)
+        n_a = num_requests // 2
+        pl_prompts = [np.full(int(prng.integers(PROMPT_LO, PROMPT_HI)),
+                              pl_pool[i % len(pl_pool)], np.int64)
+                      for i in range(n_a)]
+        pl_prompts += [np.full(int(prng.integers(PROMPT_LO, PROMPT_HI)),
+                               hot_tok, np.int64)
+                       for _ in range(num_requests - n_a)]
+        pl_new = prng.integers(2, 2 * max_new + 1, num_requests)
+        # refresh every few fused steps so the controller sees several
+        # windows per phase — a wall-clock-style fixed interval would be
+        # meaningless against the modeled step time
+        pl_interval = 4 * step_s
+
+        def _pl_run(live: bool):
+            cs = ContinuousScheduler(_pl_eng(live, pl_interval), slots=slots,
+                                     prefill_chunk=1)
+            return cs.run(RequestQueue(make_requests(
+                pl_prompts, PoissonArrivals(rate, seed=seed + 6),
+                pl_new, slo)))
+
+        def _deg_share(s) -> float:
+            st, t = s["engine"]["stats"], s["engine"]["tier"]
+            total = (st["n_hit"] + st["n_sub"] + st["n_miss_fetch"]
+                     + t["degraded_tokens"])
+            return t["degraded_tokens"] / max(1, total)
+
+        s_live = _pl_run(True)
+        s_frozen = _pl_run(False)
+        p99_live = s_live["token_latency_s"]["p99"]
+        p99_frozen = s_frozen["token_latency_s"]["p99"]
+        deg_live, deg_frozen = _deg_share(s_live), _deg_share(s_frozen)
+        pl = s_live["engine"]["placement"]
+        tol = 1e-12
+        results["placement"] = {
+            "cache_rate": pl_cr, "coverage": pl_cov, "seed": seed,
+            "arrival_rate_rps": rate, "refresh_interval_s": pl_interval,
+            "storm_token": int(hot_tok),
+            "phase_a_pool": [int(t) for t in pl_pool],
+            "live": s_live, "frozen": s_frozen,
+            "p99_tok_ms": {"live": p99_live * 1e3,
+                           "frozen": p99_frozen * 1e3},
+            "degraded_share": {"live": deg_live, "frozen": deg_frozen},
+            "n_ticks": pl["n_ticks"],
+            "coverage_repicks": pl["coverage_repicks"],
+            "replicas_issued": pl["replicas_issued"],
+            "replicas_reclaimed": pl["replicas_reclaimed"],
+            "live_p99_no_worse": bool(p99_live <= p99_frozen + tol),
+            "live_lower_degraded": bool(deg_live < deg_frozen - tol),
+        }
+        print(f"  [placement cov={pl_cov}] live/frozen p99 tok "
+              f"{p99_live*1e3:.3f}/{p99_frozen*1e3:.3f}ms  degraded share "
+              f"{deg_live*100:.2f}%/{deg_frozen*100:.2f}%  "
+              f"({pl['n_ticks']} ticks, {pl['coverage_repicks']} re-picks, "
+              f"{pl['replicas_issued']} replicas)  live no-worse p99: "
+              f"{results['placement']['live_p99_no_worse']}, lower "
+              f"degraded: {results['placement']['live_lower_degraded']}")
+        out_rows.append(("serving.placement.p99_tok_ms_live",
+                         p99_live * 1e3, f"frozen={p99_frozen*1e3:.3f}"))
+        out_rows.append(("serving.placement.degraded_share_live",
+                         deg_live, f"frozen={deg_frozen:.4f}"))
+
     # -- telemetry overhead A/B: the flight recorder is a pure observer of
     # the SIMULATED timeline, so a telemetry-on engine must agree with a
     # telemetry-off twin on the simulated clock EXACTLY (sim_step_ratio ==
@@ -635,7 +780,7 @@ def run(out_rows, *, smoke: bool = False, loads=(0.5, 0.8),
         "serving.json", results,
         config=f"smoke={smoke} loads={loads} cache_rates={cache_rates} "
                f"quant_tier={quant_tier} cost_policy={cost_policy} "
-               f"n_devices={n_devices}",
+               f"n_devices={n_devices} placement_ab={placement_ab}",
         seed=seed, t0=t0)
     print(f"  (total {time.time()-t0:.1f}s; wrote {path})")
     return results
@@ -679,6 +824,10 @@ if __name__ == "__main__":
                          "multi-turn session workload (follow-up-turn TTFT)")
     ap.add_argument("--kv-block", type=int, default=8,
                     help="paged-KV block size (tokens) for the prefix arm")
+    ap.add_argument("--placement-ab", action="store_true",
+                    help="adds the live-placement arm: int8-tier engines at "
+                         "equal HBM on a drifting workload, live "
+                         "PlacementController vs frozen placement")
     args = ap.parse_args()
     if args.cost_policy and args.quant_tier == "off":
         ap.error("--cost-policy compares the four-way miss tree: "
@@ -692,7 +841,8 @@ if __name__ == "__main__":
             num_requests=16, max_new=6, prefill_chunk=args.prefill_chunk,
             seed=args.seed, quant_tier=args.quant_tier,
             cost_policy=args.cost_policy, n_devices=args.n_devices,
-            ici_gbps=ici, prefix_ab=args.prefix_ab, kv_block=args.kv_block)
+            ici_gbps=ici, prefix_ab=args.prefix_ab, kv_block=args.kv_block,
+            placement_ab=args.placement_ab)
     else:
         run(rows,
             loads=tuple(float(x) for x in args.rates.split(",")),
@@ -701,7 +851,8 @@ if __name__ == "__main__":
             max_new=args.max_new, prefill_chunk=args.prefill_chunk,
             seed=args.seed, quant_tier=args.quant_tier,
             cost_policy=args.cost_policy, n_devices=args.n_devices,
-            ici_gbps=ici, prefix_ab=args.prefix_ab, kv_block=args.kv_block)
+            ici_gbps=ici, prefix_ab=args.prefix_ab, kv_block=args.kv_block,
+            placement_ab=args.placement_ab)
     print("\nname,value,derived")
     for name, v, derived in rows:
         print(f"{name},{v:.2f},{derived}")

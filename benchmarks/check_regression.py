@@ -35,6 +35,23 @@
                                the off arm's (higher is better; a flip to
                                0.0 fails the gate outright)
 
+  placement — compares the ``results["placement"]`` section of a fresh
+    ``results/bench/serving.json`` (from ``bench_serving --smoke
+    --placement-ab``) against ``benchmarks/baselines/placement_smoke.json``:
+
+      placement.p99_token_latency_ms.{live,frozen}
+                               the live-placement A/B arms on the drifting
+                               workload (lower is better)
+      placement.degraded_share.{live,frozen}
+                               degraded-token share of each arm (lower is
+                               better; the live arm's is the headline —
+                               replication must keep absorbing the drift)
+      placement.live_p99_no_worse / placement.live_degraded_win
+                               1.0 when live placement holds p99 no worse
+                               than frozen / serves a strictly lower
+                               degraded share (boolean gates; a flip to
+                               0.0 fails outright)
+
   kernels — compares a fresh ``results/bench/kernels.json`` (from
     ``bench_kernels --smoke``) against
     ``benchmarks/baselines/kernels_smoke.json``. Only the fused-vs-unfused
@@ -89,6 +106,9 @@ KIND_PATHS = {
              os.path.join(HERE, "baselines", "mesh_smoke.json")),
     "prefix": (os.path.join(HERE, "..", "results", "bench", "serving.json"),
                os.path.join(HERE, "baselines", "prefix_smoke.json")),
+    "placement": (os.path.join(HERE, "..", "results", "bench",
+                               "serving.json"),
+                  os.path.join(HERE, "baselines", "placement_smoke.json")),
     "kernels": (os.path.join(HERE, "..", "results", "bench", "kernels.json"),
                 os.path.join(HERE, "baselines", "kernels_smoke.json")),
 }
@@ -111,6 +131,9 @@ FLOORS = {
     "followup_ttft_p99_ms": 0.005,   # modeled ms (deterministic clock)
     "hit_token_share": 0.01,         # fraction of prefill tokens from cache
     "strict_p99_win": 0.1,           # boolean gate — any flip is a fail
+    "degraded_share": 0.01,          # fraction of tokens served degraded
+    "live_p99_no_worse": 0.1,        # boolean gate — any flip is a fail
+    "live_degraded_win": 0.1,        # boolean gate — any flip is a fail
 }
 
 
@@ -124,7 +147,8 @@ def _family(metric: str) -> str:
 def _direction(metric: str) -> str:
     return (HIGHER_IS_BETTER
             if _family(metric) in ("goodput_rps", "peer_share",
-                                   "hit_token_share", "strict_p99_win")
+                                   "hit_token_share", "strict_p99_win",
+                                   "live_p99_no_worse", "live_degraded_win")
             else LOWER_IS_BETTER)
 
 
@@ -213,9 +237,33 @@ def extract_prefix_metrics(results: dict) -> Dict[str, float]:
     return out
 
 
+def extract_placement_metrics(results: dict) -> Dict[str, float]:
+    """Gateable metrics from the live-placement A/B arm of a bench_serving
+    results dict (present when run with --placement-ab): p99 token latency
+    and degraded-token share of both arms on the drifting workload, plus
+    the two acceptance booleans themselves — live placement must hold p99
+    NO WORSE than frozen and serve a STRICTLY lower degraded share at
+    equal HBM, not merely stay within the relative threshold of its own
+    baseline."""
+    out: Dict[str, float] = {}
+    p = results.get("placement")
+    if not isinstance(p, dict):
+        return out
+    out["placement.p99_token_latency_ms.live"] = p["p99_tok_ms"]["live"]
+    out["placement.p99_token_latency_ms.frozen"] = p["p99_tok_ms"]["frozen"]
+    out["placement.degraded_share.live"] = p["degraded_share"]["live"]
+    out["placement.degraded_share.frozen"] = p["degraded_share"]["frozen"]
+    out["placement.live_p99_no_worse"] = \
+        1.0 if p["live_p99_no_worse"] else 0.0
+    out["placement.live_degraded_win"] = \
+        1.0 if p["live_lower_degraded"] else 0.0
+    return out
+
+
 EXTRACTORS = {"serving": extract_metrics, "mesh": extract_mesh_metrics,
               "kernels": extract_kernel_metrics,
-              "prefix": extract_prefix_metrics}
+              "prefix": extract_prefix_metrics,
+              "placement": extract_placement_metrics}
 
 
 def inject_regression(metrics: Dict[str, float],

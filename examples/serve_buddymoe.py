@@ -21,6 +21,7 @@ import numpy as np
 from benchmarks import common
 from repro.core import BuddyPolicy
 from repro.runtime.cache import ExpertCache
+from repro.runtime.placement import PlacementController
 from repro.runtime.prefetch import AdaptiveBudgetController, PrevStepPredictor
 from repro.runtime.telemetry import Telemetry
 from repro.runtime.tiers import TIER_BITS, TieredExpertStore
@@ -61,6 +62,11 @@ def build_engine(args):
         make = Telemetry.with_trace if args.trace_out else Telemetry
         tele = make(predictor_label="prev_step", num_layers=cfg.num_layers,
                     num_experts=cfg.moe.num_experts)
+    placement = None
+    if args.placement == "live":
+        placement = PlacementController(
+            refresh_interval_s=args.placement_interval_ms * 1e-3,
+            hot_windows=args.placement_hot_windows)
     eng = ServeEngine(
         cfg, params, tables=tables, policy=policy, cache=cache, tier=tier,
         predictor=PrevStepPredictor(cfg.num_layers, cfg.moe.num_experts),
@@ -69,7 +75,7 @@ def build_engine(args):
         ici_gbps=args.ici_gbps if args.ici_gbps > 0 else None,
         paged_kv=args.paged_kv, kv_block=args.kv_block,
         kv_blocks=args.kv_blocks if args.kv_blocks > 0 else None,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, placement=placement)
     return cfg, lm, eng
 
 
@@ -133,6 +139,17 @@ def main():
     ap.add_argument("--adaptive-chunk", action="store_true",
                     help="shrink the prefill chunk while co-resident decode "
                          "rows are under TPOT pressure (--continuous)")
+    ap.add_argument("--placement", choices=["off", "live"], default="off",
+                    help="live traffic->placement loop (runtime/placement."
+                         "py): tier coverage re-picks + background "
+                         "replication of persistently-hot experts, driven "
+                         "by per-expert activity EMAs on the simulated "
+                         "clock ('off' is bit-identical pre-placement)")
+    ap.add_argument("--placement-interval-ms", type=float, default=1.0,
+                    help="simulated ms between placement ticks")
+    ap.add_argument("--placement-hot-windows", type=int, default=3,
+                    help="hysteresis: consecutive hot windows before an "
+                         "expert earns a replica")
     ap.add_argument("--telemetry", choices=["off", "on"], default="off",
                     help="attach the flight recorder: calibration + prefetch "
                          "meters printed after the run ('off' is the exact "
@@ -233,6 +250,12 @@ def main():
         m = es["mesh"]
         print(f"mesh: {m['n_devices']} devices, {m['n_peer_borrow']} "
               f"peer borrows ({m['peer_share']*100:.1f}% of served slots)")
+    if "placement" in es:
+        p = es["placement"]
+        print(f"placement: {p['n_ticks']} ticks, {p['coverage_repicks']} "
+              f"coverage re-picks, {p['replicas_issued']} replicas "
+              f"({p['replicas_reclaimed']} reclaimed), "
+              f"{p['peer_pushes']} peer pushes")
 
     if eng.telemetry is not None:
         cal = eng.telemetry.calibration.summary()

@@ -38,6 +38,12 @@
     PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
         --num-requests 16 --slots 4 --paged-kv --kv-block 16 \
         --prefix-cache --prefill-chunk 8
+
+    # live placement: tier coverage + replication track live traffic
+    # instead of the profiling draw (runtime/placement.py)
+    PYTHONPATH=src python -m repro.launch.serve --reduced --mode continuous \
+        --num-requests 16 --slots 4 --quant-tier int8 --tier-coverage 0.5 \
+        --placement live --placement-interval-ms 1
 """
 from __future__ import annotations
 
@@ -51,6 +57,7 @@ from repro.configs.base import get_config, get_reduced
 from repro.core import BuddyPolicy, CoactivationRecorder, build_buddy_lists
 from repro.models import transformer
 from repro.runtime.cache import ExpertCache
+from repro.runtime.placement import PlacementController
 from repro.runtime.prefetch import (AdaptiveBudgetController,
                                     CrossLayerPredictor, PrevStepPredictor,
                                     TopFreqPredictor)
@@ -212,6 +219,24 @@ def main():
     ap.add_argument("--no-peer-borrow", action="store_true",
                     help="mesh ablation: shard experts but resolve misses "
                          "with the four single-device outcomes only")
+    # -- live placement (runtime/placement.py) ---------------------------
+    ap.add_argument("--placement", choices=["off", "live"], default="off",
+                    help="live traffic->placement loop: every refresh "
+                         "window of SIMULATED time, re-pick the quant "
+                         "tier's covered experts from live activity EMAs, "
+                         "background-replicate persistently-hot experts "
+                         "('replicate' cause, prefetch priority), and on a "
+                         "mesh push hot experts to underloaded peers "
+                         "('off' is the exact pre-placement code path — "
+                         "bit-identical)")
+    ap.add_argument("--placement-interval-ms", type=float, default=1.0,
+                    help="simulated ms between placement ticks")
+    ap.add_argument("--placement-hot-windows", type=int, default=3,
+                    help="hysteresis: consecutive hot windows an expert "
+                         "needs before it earns a replica")
+    ap.add_argument("--placement-top-k", type=int, default=0,
+                    help="experts per layer counted as hot each window "
+                         "(0: half the cache capacity)")
     # -- observability (runtime/telemetry.py + runtime/trace.py) ---------
     ap.add_argument("--telemetry", choices=["off", "on"], default="off",
                     help="attach the flight recorder: metrics registry, "
@@ -285,6 +310,12 @@ def main():
         make = Telemetry.with_trace if args.trace_out else Telemetry
         tele = make(predictor_label=args.predictor, num_layers=n_moe,
                     num_experts=cfg.moe.num_experts)
+    placement = None
+    if args.placement == "live":
+        placement = PlacementController(
+            refresh_interval_s=args.placement_interval_ms * 1e-3,
+            hot_windows=args.placement_hot_windows,
+            hot_top_k=args.placement_top_k or None)
     eng = ServeEngine(cfg, params, tables=tables, policy=policy,
                       cache=None if tier is not None else cache, tier=tier,
                       predictor=predictor, prefetch_k=prefetch_k,
@@ -297,7 +328,7 @@ def main():
                       peer_borrow=not args.no_peer_borrow,
                       paged_kv=args.paged_kv, kv_block=args.kv_block,
                       kv_blocks=args.kv_blocks if args.kv_blocks > 0 else None,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache, placement=placement)
 
     if args.mode == "continuous":
         _serve_continuous(args, cfg, eng, lm, prefetch_k)
@@ -318,6 +349,7 @@ def main():
               f"{t['tier_budget_split']['cache_slots_per_layer']} full "
               f"slots/layer left")
     _report_mesh(s)
+    _report_placement(s)
     print("sample output tokens:", out[0, -16:].tolist())
     _report_telemetry(eng.telemetry, args.trace_out)
 
@@ -336,6 +368,20 @@ def _report_mesh(s):
                        for k, v in link["bytes_by_cause"].items())
         print(f"[mesh]   {link['name']}: busy {link['busy_s']*1e3:.2f}ms, "
               f"queue {link['queue_depth']}, {by or 'idle'}")
+
+
+def _report_placement(s):
+    """Live-placement digest (absent on placement=off engines)."""
+    if "placement" not in s:
+        return
+    p = s["placement"]
+    print(f"[placement] {p['n_ticks']} ticks every "
+          f"{p['refresh_interval_s']*1e3:.2f}ms: "
+          f"{p['coverage_repicks']} coverage re-picks, "
+          f"{p['replicas_issued']} replicas issued "
+          f"({p['active_replicas']} live, "
+          f"{p['replicas_reclaimed']} reclaimed), "
+          f"{p['peer_pushes']} peer pushes")
 
 
 def _report_telemetry(tele, trace_out):
@@ -414,6 +460,7 @@ def _serve_continuous(args, cfg, eng, lm, prefetch_k):
           f"SLO-met {s['slo_met_frac']*100:.0f}%")
     _report_mesh(s.get("engine", eng.summary()))
     _report_prefix(s.get("engine", {}))
+    _report_placement(s.get("engine", {}))
     _report_telemetry(eng.telemetry, args.trace_out)
 
 

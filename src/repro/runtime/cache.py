@@ -38,6 +38,12 @@ import numpy as np
 
 
 class ExpertCache:
+    """Device-resident expert set: per-layer boolean residency over
+    ``capacity = cache_rate * E`` slots, with LRU/LFU eviction, pin/lock
+    protection, an in-flight mask driven by the transfer timeline, and
+    (on a mesh) per-peer-device residency views. All masks are [L, E]
+    bool arrays; sizes are slot counts, not bytes."""
+
     def __init__(self, num_layers: int, num_experts: int, cache_rate: float,
                  policy: str = "lru", num_partitions: int = 1, seed: int = 0,
                  buddy_table: Optional[np.ndarray] = None,
@@ -55,6 +61,11 @@ class ExpertCache:
         self.inflight = np.zeros((num_layers, num_experts), bool)
         self.pinned = np.zeros((num_layers, num_experts), bool)
         self.locked = np.zeros((num_layers, num_experts), bool)
+        # reclaim-first slots: replicas the placement controller installed
+        # whose expert has gone cold — evicted BEFORE any normal victim
+        # (all-False unless a PlacementController marks them, so the
+        # pre-placement eviction order is unchanged)
+        self.reclaimable = np.zeros((num_layers, num_experts), bool)
         self.n_devices = 1
         self.owner = None               # [E] home device, set by enable_mesh
         self.peer_resident = None       # [D, L, E] bool, set by enable_mesh
@@ -174,22 +185,41 @@ class ExpertCache:
 
     # -- pinning (mid-use protection) -----------------------------------
     def pin(self, layer: int, experts) -> None:
+        """Protect residents in use by the currently-computing layer from
+        eviction; released by ``unpin`` after the layer's prefetches."""
         experts = np.atleast_1d(np.asarray(experts, np.int64))
         self.pinned[layer, experts] = True
 
     def unpin(self, layer: int, experts=None) -> None:
+        """Release pins (``experts=None``: the whole layer)."""
         if experts is None:
             self.pinned[layer] = False
         else:
             experts = np.atleast_1d(np.asarray(experts, np.int64))
             self.pinned[layer, experts] = False
 
+    # -- reclaim-first replicas (placement controller) -------------------
+    def mark_reclaimable(self, layer: int, experts) -> None:
+        """Flag cold placement replicas as preferred eviction victims:
+        ``_pick_victim`` evicts any flagged candidate before consulting the
+        normal LRU/LFU order (runtime/placement.py's hysteresis down-edge)."""
+        experts = np.atleast_1d(np.asarray(experts, np.int64))
+        self.reclaimable[layer, experts] = True
+
+    def clear_reclaimable(self, layer: int, experts) -> None:
+        """Unflag replicas (the expert heated back up, or was evicted)."""
+        experts = np.atleast_1d(np.asarray(experts, np.int64))
+        self.reclaimable[layer, experts] = False
+
     # -- in-flight lifecycle (scheduler-driven) -------------------------
     def begin_inflight(self, layer: int, expert: int) -> None:
+        """A transfer was submitted: the expert is arriving but NOT usable
+        (and not evictable) until ``commit_inflight``."""
         if not self.resident[layer, expert]:
             self.inflight[layer, expert] = True
 
     def cancel_inflight(self, layer: int, expert: int) -> None:
+        """The transfer was cancelled before landing: clear the mark."""
         self.inflight[layer, expert] = False
 
     def commit_inflight(self, layer: int, expert: int) -> int:
@@ -218,12 +248,18 @@ class ExpertCache:
         expert; among the policy-worst few, prefer one whose buddies are
         resident (its future misses are absorbable). Returns -1 if every
         candidate is pinned (caller tolerates transient over-capacity).
-        Locked slots — an expert-parallel home shard — are never victims."""
+        Locked slots — an expert-parallel home shard — are never victims.
+        Cold placement replicas (``reclaimable``) go first: a replica whose
+        expert stopped being hot is by construction the least valuable
+        slot, so it is reclaimed before any normal victim."""
         cand = np.flatnonzero(self.resident[layer] & ~self.pinned[layer]
                               & ~self.locked[layer])
         cand = cand[cand != exclude]
         if len(cand) == 0:
             return -1
+        recl = cand[self.reclaimable[layer, cand]]
+        if len(recl):
+            return int(self._policy_order(layer, recl)[0])
         ordered = self._policy_order(layer, cand)
         pool = ordered[:max(1, self.buddy_candidates)]
         if self.buddy_table is not None and len(pool) > 1:
@@ -233,6 +269,16 @@ class ExpertCache:
                 if len(buddies) and self.resident[layer, buddies].any():
                     return int(e)
         return int(pool[0])
+
+    def preview_victim(self, layer: int, incoming: int) -> int:
+        """The expert ``insert(layer, incoming)`` would evict right now, or
+        -1 when a free slot (or no evictable candidate) means nothing is
+        displaced. Read-only — the placement controller uses it for
+        replication admission control: copying a hot expert in is only
+        worth it when what it pushes out is colder."""
+        if int(self.resident[layer].sum()) < self.capacity:
+            return -1
+        return self._pick_victim(layer, exclude=incoming)
 
     def insert(self, layer: int, expert: int) -> int:
         """Insert an expert (post-fetch); evicts per policy if full.
@@ -245,7 +291,9 @@ class ExpertCache:
             evicted = self._pick_victim(layer, exclude=expert)
             if evicted >= 0:
                 self.resident[layer, evicted] = False
+                self.reclaimable[layer, evicted] = False
         self.resident[layer, expert] = True
+        self.reclaimable[layer, expert] = False
         if evicted >= 0:
             # reuse the vacated slot so partition topology stays stable
             self.partition[layer, expert] = self.partition[layer, evicted]
@@ -257,6 +305,7 @@ class ExpertCache:
             if extra < 0:
                 break
             self.resident[layer, extra] = False
+            self.reclaimable[layer, extra] = False
         return evicted
 
     def prefetch_to(self, layer: int, experts) -> list:

@@ -89,12 +89,16 @@ class MissCostModel:
         decision that spawned it — and because eta_s is an optimistic lower
         bound (link sharing ignored), waiting on self-generated upgrade
         traffic systematically overpays. The replica serves until the
-        upgrade lands; only genuine prefetches discount the fetch cost."""
+        upgrade lands; only genuine prefetches discount the fetch cost.
+        'replicate'-cause transfers (the placement controller's background
+        hot-expert copies) are self-generated repair traffic of the same
+        kind and keep the COLD estimate too."""
         eta = np.full((self.num_layers, self.num_experts),
                       self.hw.transfer_time(self.expert_bytes))
         if scheduler is not None:
             for t in scheduler.pending():
-                if t.layer < self.num_layers and t.cause != "upgrade":
+                if t.layer < self.num_layers and \
+                        t.cause not in ("upgrade", "replicate"):
                     eta[t.layer, t.expert] = scheduler.eta_s(t)
         return eta
 

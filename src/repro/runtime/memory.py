@@ -86,7 +86,8 @@ class TransferLedger:
 
     # -- scheduler event path -------------------------------------------
     _CAUSE_KEY = {"prefetch": "prefetch", "demand": "sync_fetch",
-                  "upgrade": "upgrade", "peer": "peer_borrow"}
+                  "upgrade": "upgrade", "peer": "peer_borrow",
+                  "replicate": "replicate"}
 
     def attach(self, scheduler) -> None:
         scheduler.add_listener(self.on_transfer_event)

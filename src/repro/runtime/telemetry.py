@@ -40,6 +40,8 @@ from repro.runtime.trace import FlightRecorder
 
 
 class Counter:
+    """Monotonic accumulator; ``merge`` sums across registries."""
+
     __slots__ = ("value",)
 
     def __init__(self) -> None:
@@ -56,6 +58,9 @@ class Counter:
 
 
 class Gauge:
+    """Last-written value (``merge`` keeps the max — high-water
+    semantics, the only aggregation meaningful across registries)."""
+
     __slots__ = ("value",)
 
     def __init__(self) -> None:

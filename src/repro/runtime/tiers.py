@@ -52,6 +52,33 @@ from repro.runtime.memory import expert_nbytes, quant_expert_nbytes
 
 
 class TieredExpertStore:
+    """Two-tier expert storage at one fixed HBM budget.
+
+    The budget ``cache_rate * E * full_bytes`` per layer is split between
+    a FULL tier — an ``ExpertCache`` of ``cache_slots`` full-precision
+    experts, fetched/evicted over the transfer timeline — and a QUANT
+    tier: always-resident int8/int4 per-channel-quantized replicas of the
+    ``n_covered`` covered experts per layer (``slots = ⌊(budget −
+    n_covered·replica_bytes)/full_bytes⌋``, clamped to ≥ 1 slot). A miss
+    on a covered expert can be computed immediately against its replica —
+    zero transfer, zero stall — at a calibrated per-expert fidelity cost
+    (``fidelity``; uncovered experts report ``inf`` so no policy ever
+    degrades them).
+
+    ``covered`` starts as the lowest expert ids; ``set_coverage(activity)``
+    re-points it at the per-layer top-``n_covered`` by any activity
+    ranking — the profiling draw at startup, or live traffic EMAs when a
+    ``PlacementController`` drives it. Note the self-inhibition this
+    store creates: a covered miss is absorbed by the replica, so nothing
+    ever promotes that expert into a full-precision slot — repairing that
+    (replication, degraded-then-upgrade) is the caller's job.
+
+    ``quant_ok(...)`` is the per-step degrade decision (expected stall
+    saved vs ``stall_per_fidelity`` × fidelity lost); ``degraded_tokens``
+    counts slots actually served degraded; ``summary()`` reports the
+    budget split, coverage, and counters for
+    ``ServeEngine.summary()["tier"]``."""
+
     def __init__(self, num_layers: int, num_experts: int, cache_rate: float,
                  *, bits: int = 8, d_model: int, d_ff: int,
                  dtype_bytes: int = 2, stall_per_fidelity: float = 0.05,

@@ -59,7 +59,7 @@ class Transfer:
     layer: int
     expert: int
     nbytes: int
-    cause: str                      # "prefetch"|"demand"|"upgrade"|"peer"
+    cause: str          # "prefetch"|"demand"|"upgrade"|"peer"|"replicate"
     priority: int
     issue_s: float                  # submission time
     remaining_fixed_s: float        # launch cost left (serial, per transfer)
@@ -143,8 +143,13 @@ class TransferScheduler:
         it shares the prefetch class and cap — but exempt from stale-
         prediction cancellation, and its bytes are ledgered separately.
         ``cause`` 'peer' is a peer-HBM borrow over an ICI link: a stalled
-        slot is waiting on it, so it rides at demand priority."""
-        assert cause in ("prefetch", "demand", "upgrade", "peer")
+        slot is waiting on it, so it rides at demand priority. ``cause``
+        'replicate' is the placement controller's background copy of a
+        persistently-hot expert (runtime/placement.py): prefetch priority
+        like 'upgrade', exempt from stale-prediction cancellation, bytes
+        ledgered under its own key."""
+        assert cause in ("prefetch", "demand", "upgrade", "peer",
+                         "replicate")
         existing = self.in_flight(layer, expert)
         if existing is not None:
             if cause in ("demand", "peer") and \
@@ -362,7 +367,8 @@ class TransferScheduler:
 
     def utilization(self) -> dict:
         """Per-link digest: cumulative busy time, queue depth right now, and
-        the bytes submitted per cause (demand / prefetch / upgrade / peer)."""
+        the bytes submitted per cause (demand / prefetch / upgrade / peer /
+        replicate)."""
         return {
             "name": self.name or "pcie",
             "busy_s": self.busy_s,

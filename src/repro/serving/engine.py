@@ -89,7 +89,8 @@ class ServeEngine:
                  paged_kv: bool = False,
                  kv_block: int = 16,
                  kv_blocks: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 placement=None):
         """latency_cfg: full-scale config whose expert sizes / active params
         drive the transfer + compute latency model (the accuracy testbed can
         be a reduced model while latencies reflect the deployment target —
@@ -159,7 +160,16 @@ class ServeEngine:
         (serving/prefix.py): ContinuousScheduler admission matches each
         prompt against previously-served prefixes, adopts the shared block
         chain (refcount bump + copy-on-write at the write frontier), and
-        prefills only the novel suffix. Requires paged_kv."""
+        prefills only the novel suffix. Requires paged_kv.
+
+        placement: an optional runtime.placement.PlacementController — the
+        live traffic→placement loop. When attached, the engine feeds it
+        per-layer activity each step and ticks it on the simulated clock
+        every refresh_interval_s: tier coverage re-picks, background
+        'replicate' fetches of persistently-hot experts, and (D>1) pushes
+        of hot experts to underloaded peers. placement=None (default) is
+        bit-identical to the pre-placement engine (frozen-capture test in
+        tests/test_placement.py)."""
         assert cfg.is_moe, "ServeEngine's expert cache applies to MoE archs"
         assert lookahead >= 1, "lookahead: layers ahead to prefetch (>= 1)"
         self.cfg = cfg
@@ -224,6 +234,9 @@ class ServeEngine:
         self._step_worthwhile: Optional[int] = None
         self.telemetry = telemetry
         self._wire_telemetry()
+        self.placement = placement
+        if placement is not None:
+            placement.attach(self)
 
         self._paged = bool(paged_kv)
         self._kv_block = int(kv_block)
@@ -279,9 +292,18 @@ class ServeEngine:
             return {}
         links = make_ici_links(self.n_devices, self.hw, ici_bw=self._ici_bw)
         for link in links.values():
-            link.add_listener(self.cache.on_transfer_event)
+            link.add_listener(self._on_peer_link_event)
             self.ledger.attach(link)
         return links
+
+    def _on_peer_link_event(self, kind: str, t) -> None:
+        """ICI-link cache listener: a borrow lands in DEVICE 0's cache, but
+        a placement controller's 'replicate' push lands in the TARGET
+        PEER's HBM (peer_insert flips that mask at submit time), so it must
+        not touch device 0's residency or in-flight state."""
+        if t.cause == "replicate":
+            return
+        self.cache.on_transfer_event(kind, t)
 
     def advance_clock(self, to_time: float) -> None:
         """Advance EVERY link of the mesh (host PCIe + all ICI links) to the
@@ -572,6 +594,14 @@ class ServeEngine:
                         sub_slots=sub_sl[li][active],
                         deg_slots=(deg_sl[li][active]
                                    if deg_sl is not None else None))
+                if self.placement is not None:
+                    # the controller owns its own ExpertStats so live
+                    # placement works with or without a telemetry bundle
+                    self.placement.observe_layer(
+                        layer, np.unique(used), res_used,
+                        np.flatnonzero(miss_row > 0),
+                        (np.unique(rows[deg_sl[li][active]])
+                         if n_deg else None))
                 stall_t0 = cursor
                 stall = 0.0
                 if peer_row is not None:
@@ -615,6 +645,11 @@ class ServeEngine:
                            f"step{self.stats.steps - 1}", step_t0, cursor,
                            tokens=n_active, stall_s=step_stall,
                            overlapped_s=overlapped)
+        if self.placement is not None:
+            # placement ticks ride the step loop on the SIMULATED clock
+            # (interval-gated, so the continuous scheduler's feedback hook
+            # ticking it as well never double-fires a window)
+            self.placement.maybe_tick(self)
 
     def _observe_layer(self, layer: int, used: np.ndarray) -> None:
         self.cache.touch(layer, used)
@@ -712,12 +747,13 @@ class ServeEngine:
                     tele.prefetch.note_uncovered_miss(layer, e)
             if t is not None:
                 sched.escalate(t)
-                if t.cause == "upgrade":
-                    # an upgrade is not a prediction: waiting on one is a
-                    # demand-class stall (the cost model priced it at the
-                    # COLD transfer; the in-flight bytes are just reused) —
-                    # booking it as late-prefetch would feed a false
-                    # lateness signal to the adaptive budget controller
+                if t.cause in ("upgrade", "replicate"):
+                    # an upgrade (or a placement replica copy) is not a
+                    # prediction: waiting on one is a demand-class stall
+                    # (the cost model priced it at the COLD transfer; the
+                    # in-flight bytes are just reused) — booking it as
+                    # late-prefetch would feed a false lateness signal to
+                    # the adaptive budget controller
                     kind = "demand"
                 else:
                     kind = "late_prefetch"
@@ -942,6 +978,10 @@ class ServeEngine:
         # (swap it first to start a fresh one); the scheduler was just
         # rebuilt, so its trace hook + meter listener must be re-registered
         self._wire_telemetry()
+        if self.placement is not None:
+            # fresh per-run placement state (streaks, replica sets,
+            # counters) on the controller's UNCHANGED configuration
+            self.placement.attach(self)
 
     def reset_rows(self, caches, rows):
         """Free the decode caches of ``rows`` (batch indices) so a freed slot
@@ -1144,6 +1184,11 @@ class ServeEngine:
             }
             if self.prefix_tree is not None:
                 s["prefix"]["tree"] = self.prefix_tree.stats()
+        if self.placement is not None:
+            # only present with a placement controller attached:
+            # placement=None summaries stay bit-identical to the
+            # pre-placement engine
+            s["placement"] = self.placement.summary()
         if self.telemetry is not None:
             # only present with a telemetry bundle attached: telemetry=off
             # summaries stay bit-identical to the pre-telemetry engine

@@ -600,7 +600,10 @@ class ContinuousScheduler:
     def _feedback(self, queue: RequestQueue) -> None:
         """Resize the prefetch budget from stall attribution + queue depth
         (and, with cost-ranked prefetch, the count of candidates whose
-        expected stall saved was worth the bytes)."""
+        expected stall saved was worth the bytes). The engine's placement
+        controller rides the same step loop: its tick is interval-gated on
+        the simulated clock, so calling it here AND from the engine's
+        step accounting never double-fires a window."""
         if self.controller is not None:
             self.controller.observe_step(
                 self.engine.stall_breakdown(),
@@ -608,6 +611,9 @@ class ContinuousScheduler:
                 worthwhile=getattr(self.engine,
                                    "last_prefetch_worthwhile", None))
             self.controller.apply(self.engine)
+        placement = getattr(self.engine, "placement", None)
+        if placement is not None:
+            placement.maybe_tick(self.engine)
 
     def run(self, queue: RequestQueue,
             max_context: Optional[int] = None) -> dict:

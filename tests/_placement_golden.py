@@ -1,0 +1,68 @@
+"""Frozen placement-off serving scenario for the placement bit-identity gate.
+
+``golden_summary`` runs a small deterministic tiered generate() and returns
+the engine summary. ``tests/data/pre_placement_summary.json`` was written by
+this module BEFORE the live-placement controller landed;
+``tests/test_placement.py`` re-runs the identical scenario with
+``placement=None`` and requires the summary to match byte-for-byte — the
+contract that an engine without a controller is the exact pre-placement
+engine.
+
+Regenerate (only if the scenario itself must change, never to paper over
+a diff):  PYTHONPATH=src python -m tests._placement_golden
+"""
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.runtime.tiers import TieredExpertStore
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+from tests._mesh_golden import jsonify
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "pre_placement_summary.json")
+
+
+def golden_summary(miss_policy: str = "precedence",
+                   placement="__omit__") -> dict:
+    """The frozen scenario: a partial-coverage int8 tier engine — the exact
+    configuration the placement controller would re-rank. The default
+    ``placement="__omit__"`` omits the kwarg entirely (how every
+    pre-placement caller constructed the engine)."""
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    lm = MarkovLM(cfg.vocab_size, seed=0)
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    q = np.random.default_rng(0).random((l, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    policy = BuddyPolicy(tau=0.0, beta=1.1, rho=4, H=3, quant_tier="int8",
+                         miss_policy=miss_policy)
+    tier = TieredExpertStore(l, e, 0.5, bits=8, d_model=cfg.d_model,
+                             d_ff=cfg.moe.d_ff, coverage=0.75, seed=0)
+    kw = {} if placement == "__omit__" else {"placement": placement}
+    eng = ServeEngine(cfg, params, tables=tables, policy=policy,
+                      cache=None, tier=tier,
+                      predictor=PrevStepPredictor(l, e),
+                      prefetch_k=4, seed=0, **kw)
+    eng.generate(lm.sample(2, 6), max_new_tokens=8)
+    return jsonify(eng.summary())
+
+
+def main():
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    golden = {mp: golden_summary(mp) for mp in ("precedence", "cost")}
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

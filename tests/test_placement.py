@@ -1,0 +1,226 @@
+"""Live placement controller (runtime/placement.py).
+
+Covers the control loop's contracts: hysteresis (no replica/coverage
+flapping on a noisy ranking), reclaim-first eviction of cold replicas,
+coverage re-picks following the live EMA ranking, peer pushes gated on a
+multi-device mesh, the placement-off bit-identity against the frozen
+pre-placement capture, and reset_runtime resetting per-run state while
+preserving the controller's configuration."""
+import functools
+import json
+
+import jax
+import numpy as np
+
+from repro.configs.deepseek_v2_lite_buddy import reduced
+from repro.core import BuddyPolicy, build_buddy_lists
+from repro.models import transformer
+from repro.runtime.cache import ExpertCache
+from repro.runtime.placement import PlacementController
+from repro.runtime.prefetch import PrevStepPredictor
+from repro.runtime.tiers import TieredExpertStore
+from repro.serving.engine import ServeEngine
+from repro.training.data import MarkovLM
+
+from tests._placement_golden import GOLDEN_PATH, golden_summary
+
+
+@functools.lru_cache(maxsize=1)
+def _base():
+    cfg = reduced()
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    q = np.random.default_rng(0).random((l, e, e))
+    tables = build_buddy_lists(q, alpha=0.95, k_max=e - 1)
+    return cfg, params, tables
+
+
+def _tier_engine(ctrl, coverage=0.25, cache_rate=1.0):
+    """int8 partial-coverage tier engine — the configuration whose covered
+    set and cache placement the controller re-plans."""
+    cfg, params, tables = _base()
+    l, e = cfg.num_layers, cfg.moe.num_experts
+    tier = TieredExpertStore(l, e, cache_rate, bits=8, d_model=cfg.d_model,
+                             d_ff=cfg.moe.d_ff, coverage=coverage, seed=0)
+    return ServeEngine(cfg, params, tables=tables,
+                       policy=BuddyPolicy(mode="none", quant_tier="int8"),
+                       cache=None, tier=tier,
+                       predictor=PrevStepPredictor(l, e),
+                       prefetch_k=0, seed=0, upgrade_degraded=False,
+                       placement=ctrl)
+
+
+def _set_act(ctrl, act):
+    ctrl.stats.used_ema[:] = act
+
+
+def test_replica_hysteresis_no_flapping():
+    """An expert whose hotness flaps never earns a replica; one that stays
+    hot for hot_windows consecutive ticks earns exactly one transfer."""
+    ctrl = PlacementController(hot_windows=3, hot_top_k=1,
+                               retune_coverage=False, peer_push=False)
+    eng = _tier_engine(ctrl)
+    layer = 0
+    nr = int(np.flatnonzero(~eng.cache.resident[layer])[0])
+    hot = np.full(eng.cache.resident.shape, 1e-3)
+    hot[layer, nr] = 1.0
+    cold = np.zeros(eng.cache.resident.shape)
+    for _ in range(4):                      # hot, cold, hot, cold, ...
+        _set_act(ctrl, hot)
+        ctrl.tick(eng)
+        _set_act(ctrl, cold)
+        ctrl.tick(eng)
+    assert ctrl.n_replicas_issued == 0
+    assert eng.scheduler.in_flight(layer, nr) is None
+    _set_act(ctrl, hot)
+    for _ in range(3):                      # a genuine sustained hot streak
+        ctrl.tick(eng)
+    assert ctrl.n_replicas_issued == 1
+    assert eng.scheduler.in_flight(layer, nr) is not None
+    ctrl.tick(eng)                          # in flight: not re-submitted
+    assert ctrl.n_replicas_issued == 1
+
+
+def test_cold_replica_reclaimed_before_normal_victims():
+    """A replica whose expert went cold is marked reclaim-first, and the
+    next insertion evicts it even when plain LRU would pick another."""
+    ctrl = PlacementController(hot_windows=1, hot_top_k=1,
+                               retune_coverage=False, peer_push=False)
+    eng = _tier_engine(ctrl)
+    layer, cache = 0, eng.cache
+    nr = int(np.flatnonzero(~cache.resident[layer])[0])
+    hot = np.full(cache.resident.shape, 1e-3)
+    hot[layer, nr] = 1.0
+    _set_act(ctrl, hot)
+    ctrl.tick(eng)
+    assert ctrl.n_replicas_issued == 1
+    eng.advance_clock(eng.scheduler.now + 1.0)      # land the replica
+    assert cache.resident[layer, nr]
+    _set_act(ctrl, np.zeros(cache.resident.shape))  # replica goes cold
+    ctrl.tick(eng)
+    assert cache.reclaimable[layer, nr]
+    # make the replica the RECENCY winner, then insert: reclaim-first must
+    # override LRU and evict the cold replica anyway
+    cache.touch(layer, [nr])
+    incoming = int(np.flatnonzero(~cache.resident[layer])[0])
+    cache.insert(layer, incoming)
+    assert not cache.resident[layer, nr]
+    assert cache.resident[layer, incoming]
+    ctrl.tick(eng)                                  # notices the eviction
+    assert ctrl.n_replicas_reclaimed == 1
+    assert ctrl.active_replicas() == 0
+
+
+def test_coverage_repick_matches_ema_ranking():
+    """After hot_windows steady ticks the tier's covered set follows the
+    live per-layer activity ranking (and only then — one re-pick)."""
+    ctrl = PlacementController(hot_windows=2, replicate=False,
+                               peer_push=False)
+    eng = _tier_engine(ctrl)
+    tier, cache = eng.tier, eng.cache
+    assert tier.n_covered == 1
+    act = np.full(cache.resident.shape, 1e-3)
+    targets = []
+    for layer in range(cache.resident.shape[0]):
+        if not cache.resident[layer, 0]:
+            cache.insert(layer, 0)    # old covered expert resident: the
+        # make-before-break pre-stage has nothing to copy and the re-pick
+        # applies the moment the hysteresis streak completes
+        t = int(np.flatnonzero(cache.resident[layer] &
+                               (np.arange(cache.num_experts) != 0))[0])
+        act[layer, t] = 1.0
+        targets.append(t)
+    _set_act(ctrl, act)
+    ctrl.tick(eng)
+    assert ctrl.n_coverage_repicks == 0             # streak 1 of 2
+    ctrl.tick(eng)
+    assert ctrl.n_coverage_repicks == 1
+    want = np.argsort(-act, axis=1, kind="stable")[:, :1]
+    for layer, t in enumerate(targets):
+        assert int(want[layer, 0]) == t
+        assert tier.covered[layer, t]
+        assert not tier.covered[layer, 0]
+    ctrl.tick(eng)                                  # stable: no churn
+    assert ctrl.n_coverage_repicks == 1
+
+
+def test_peer_push_only_on_multi_device_mesh():
+    """peer_push=True is inert at n_devices=1; on a mesh, a sustained-hot
+    device-0 expert is pushed into the least-loaded peer's HBM."""
+    cfg, params, tables = _base()
+    l, e = cfg.num_layers, cfg.moe.num_experts
+
+    def _mesh_engine(n_devices):
+        ctrl = PlacementController(hot_windows=1, hot_top_k=1,
+                                   retune_coverage=False)
+        eng = ServeEngine(cfg, params, tables=tables,
+                          policy=BuddyPolicy(mode="none"),
+                          cache=ExpertCache(l, e, 0.5, seed=0),
+                          predictor=PrevStepPredictor(l, e),
+                          prefetch_k=0, seed=0, n_devices=n_devices,
+                          placement=ctrl)
+        # expert 0 is device 0's home shard: hot everywhere, resident on
+        # device 0 (so replication is a no-op) and absent from every peer
+        hot = np.zeros((l, e))
+        hot[:, 0] = 1.0
+        _set_act(ctrl, hot)
+        return eng, ctrl
+
+    eng1, ctrl1 = _mesh_engine(1)
+    ctrl1.tick(eng1)
+    assert ctrl1.n_peer_pushes == 0
+
+    eng4, ctrl4 = _mesh_engine(4)
+    ctrl4.tick(eng4)
+    assert ctrl4.n_peer_pushes == l
+    assert eng4.cache.peer_resident[1, :, 0].all()  # device 1: least loaded
+    ctrl4.tick(eng4)                                # already placed: no churn
+    assert ctrl4.n_peer_pushes == l
+
+
+def test_placement_off_bit_identity():
+    """placement=None (and the omitted kwarg) reproduce the frozen
+    pre-placement engine summary byte-for-byte, for both miss policies."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    for mp in ("precedence", "cost"):
+        fresh = json.loads(json.dumps(golden_summary(mp)))
+        assert fresh == golden[mp], f"placement-omitted drift ({mp})"
+        explicit = json.loads(json.dumps(golden_summary(mp, placement=None)))
+        assert explicit == golden[mp], f"placement=None drift ({mp})"
+
+
+def test_reset_runtime_preserves_controller_config():
+    """reset_runtime re-attaches the controller: per-run state (streaks,
+    replicas, counters, pending coverage, EMAs) is fresh, configuration
+    knobs are untouched."""
+    ctrl = PlacementController(refresh_interval_s=5e-4, hot_windows=4,
+                               hot_top_k=3, max_replicas_per_layer=1,
+                               replicate_margin=1.5, peer_push=False)
+    eng = _tier_engine(ctrl)
+    cfg, _, _ = _base()
+    lm = MarkovLM(cfg.vocab_size, seed=3)
+    eng.generate(lm.sample(2, 6), max_new_tokens=6)
+    act = np.ones(eng.cache.resident.shape)
+    _set_act(ctrl, act)
+    for _ in range(5):
+        ctrl.tick(eng)
+    assert ctrl.n_ticks >= 5
+    eng.reset_runtime()
+    assert eng.placement is ctrl
+    assert ctrl.n_ticks == 0
+    assert ctrl.n_replicas_issued == 0
+    assert ctrl.n_coverage_repicks == 0
+    assert ctrl.active_replicas() == 0
+    assert ctrl.trace == []
+    assert ctrl._cov_want is None and ctrl._cov_streak == 0
+    assert not ctrl._streak.any()
+    assert not ctrl.stats.used_ema.any()
+    s = ctrl.summary()
+    assert s["refresh_interval_s"] == 5e-4
+    assert s["hot_windows"] == 4
+    assert s["hot_top_k"] == 3
+    assert s["max_replicas_per_layer"] == 1
+    assert s["replicate_margin"] == 1.5
+    assert s["peer_push"] is False
+    assert eng.summary()["placement"]["hot_windows"] == 4

@@ -1,0 +1,125 @@
+"""Doc link checker (CI): every RELATIVE markdown link must resolve.
+
+Scans README.md and docs/**/*.md for inline links/images
+(``[text](target)``) and verifies that each relative target exists on
+disk, resolved against the file containing the link. What counts:
+
+  * relative file links (``docs/architecture.md``, ``../README.md``) —
+    must exist, including an optional ``#anchor`` suffix (the anchor
+    itself is checked against the target's headings);
+  * intra-file anchors (``#section-name``) — checked against the
+    current file's headings, GitHub-slugged (lowercase, punctuation
+    stripped, spaces to dashes);
+  * absolute URLs (``http://``, ``https://``, ``mailto:``) — skipped,
+    CI must not depend on the network;
+  * code spans and fenced code blocks — stripped before scanning, so
+    ``[i](j)``-looking indexing in examples never false-positives.
+
+Stdlib only. Exit 0 when every link resolves, 1 with a per-link report
+otherwise.
+
+  python tools/check_doc_links.py            # repo root inferred
+  python tools/check_doc_links.py --root .   # explicit root
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+# [text](target) — non-greedy text, target up to the first unescaped ')';
+# a leading '!' (image) is consumed so alt text is treated the same
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_FENCE = re.compile(r"^(```|~~~)", re.M)
+_CODE_SPAN = re.compile(r"`[^`\n]*`")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug: lowercase, drop everything but word
+    characters / spaces / dashes, spaces to dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\s-]", "", h)
+    return re.sub(r"\s+", "-", h)
+
+
+def _strip_code(text: str) -> str:
+    """Remove fenced blocks and inline code spans (link-shaped source code
+    inside them is not a link)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(_CODE_SPAN.sub("", line))
+    return "\n".join(out)
+
+
+def _anchors(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        return {_slug(m.group(1)) for m in _HEADING.finditer(f.read())}
+
+
+def check_file(path: str) -> list:
+    """[(target, reason)] for every broken link in one markdown file."""
+    with open(path, encoding="utf-8") as f:
+        text = _strip_code(f.read())
+    bad = []
+    base = os.path.dirname(path)
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP_SCHEMES):
+            continue
+        if target.startswith("#"):
+            if _slug(target[1:]) not in _anchors(path):
+                bad.append((target, "missing heading in this file"))
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = os.path.normpath(os.path.join(base, file_part))
+        if not os.path.exists(dest):
+            bad.append((target, f"no such file: {dest}"))
+            continue
+        if anchor and dest.endswith(".md") and \
+                _slug(anchor) not in _anchors(dest):
+            bad.append((target, f"missing heading in {dest}"))
+    return bad
+
+
+def iter_docs(root: str):
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        yield readme
+    docs = os.path.join(root, "docs")
+    for dirpath, _, names in sorted(os.walk(docs)):
+        for name in sorted(names):
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."),
+        help="repo root (default: parent of tools/)")
+    args = ap.parse_args(argv)
+    root = os.path.normpath(args.root)
+    n_files, n_bad = 0, 0
+    for path in iter_docs(root):
+        n_files += 1
+        for target, reason in check_file(path):
+            rel = os.path.relpath(path, root)
+            print(f"BROKEN {rel}: ({target}) — {reason}")
+            n_bad += 1
+    if n_bad:
+        print(f"\nFAIL: {n_bad} broken link(s) across {n_files} file(s)")
+        return 1
+    print(f"OK: all relative links resolve across {n_files} markdown "
+          f"file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
